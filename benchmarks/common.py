@@ -1,0 +1,68 @@
+"""Shared benchmark scaffolding: trial runners + CSV emit."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import accel, baselines, doi, metrics, simulator, topology, weights
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def ensure_out() -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return OUT_DIR
+
+
+def emit(name: str, rows: list[dict]) -> None:
+    """Print CSV to stdout and save under experiments/bench/<name>.csv."""
+    if not rows:
+        return
+    cols = list(rows[0])
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(_fmt(r[c]) for c in cols))
+    text = "\n".join(lines)
+    print(f"### {name}")
+    print(text)
+    with open(os.path.join(ensure_out(), f"{name}.csv"), "w") as f:
+        f.write(text + "\n")
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def paper_setup(kind: str, n: int, rng: np.random.Generator):
+    """(graph, W_MH) for the paper's two scenarios."""
+    g = topology.random_geometric(n, rng) if kind == "rgg" else topology.chain(n)
+    w = weights.metropolis_hastings(g)
+    return g, w
+
+
+def inits(g, kind: str, trials: int, rng: np.random.Generator) -> np.ndarray:
+    """(N, trials) initial columns: Slope (deterministic) + Spike per trial."""
+    n = g.n
+    cols = []
+    for t in range(trials):
+        if kind == "slope":
+            x = metrics.slope_init(g.coords, n)
+        else:
+            x = metrics.spike_init(n, node=int(rng.integers(0, n)))
+        cols.append(x)
+    return np.stack(cols, axis=1)
+
+
+def accel_params(w, theta=None):
+    theta = theta or accel.theta_asymptotic(0.5)
+    lam2 = accel.lambda2(w)
+    return theta, lam2, accel.alpha_star(lam2, theta)
+
+
+def timer():
+    t0 = time.perf_counter()
+    return lambda: (time.perf_counter() - t0) * 1e6  # us

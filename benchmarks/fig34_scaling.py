@@ -1,0 +1,102 @@
+"""Figs. 3 & 4: averaging time (eps = 1e-5) and accelerated/memoryless ratio
+vs network size, for RGG and chain topologies.
+
+Paper claims reproduced: the measured T_ave(W)/T_ave(Phi3[alpha*]) ratio
+grows with N (chain: ~linearly, Theorem 3 Omega(N); RGG: as 1/sqrt(Psi)),
+while polynomial filtering and optimal weights give ~constant-factor gains.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import accel, baselines, metrics
+
+from .common import accel_params, emit, paper_setup
+
+
+def _avg_time_linear(w, x0, eps):
+    xbar = np.full_like(x0, x0.mean())
+    return metrics.averaging_time(lambda s: w @ s, x0, xbar, eps=eps)
+
+
+def _avg_time_accel(w, x0, a, th, eps, cap=2_000_000):
+    xbar = np.full_like(x0, x0.mean())
+    err0 = np.linalg.norm(x0 - xbar)
+    x, xp = x0.copy(), x0.copy()
+    for t in range(1, cap):
+        x, xp = accel.accelerated_step(w, x, xp, a, th)
+        if np.linalg.norm(x - xbar) <= eps * err0:
+            return t
+    raise RuntimeError("accel averaging did not converge")
+
+
+def _avg_time_poly(w, pf, x0, eps, cap=2_000_000):
+    xbar = np.full_like(x0, x0.mean())
+    err0 = np.linalg.norm(x0 - xbar)
+    x = x0.copy()
+    for t in range(1, cap):
+        x = baselines.poly_filter_step(w, pf, x)
+        if np.linalg.norm(x - xbar) <= eps * err0:
+            return t * pf.ticks_per_apply  # ticks, not super-iterations
+    raise RuntimeError("poly averaging did not converge")
+
+
+def run(kind="both", seed=0, eps=1e-5, rgg_sizes=(50, 100, 150, 200),
+        chain_sizes=(20, 40, 60, 80), trials=5):
+    rng = np.random.default_rng(seed)
+    rows = []
+    combos = []
+    if kind in ("rgg", "both"):
+        combos += [("rgg", n, trials) for n in rgg_sizes]
+    if kind in ("chain", "both"):
+        combos += [("chain", n, 1) for n in chain_sizes]
+    for topo, n, tr in combos:
+        acc = {"MH": [], "MH-Proposed": [], "MH-PolyFilt3": [], "gain": []}
+        for _ in range(tr):
+            g, w = paper_setup(topo, n, rng)
+            th, lam2, a_star = accel_params(w)
+            x0 = metrics.slope_init(g.coords, n)
+            t_mh = _avg_time_linear(w, x0, eps)
+            t_acc = _avg_time_accel(w, x0, a_star, th, eps)
+            pf3 = baselines.design_poly_filter(w, 3, ridge=1e-12)
+            t_p3 = _avg_time_poly(w, pf3, x0, eps)
+            acc["MH"].append(t_mh)
+            acc["MH-Proposed"].append(t_acc)
+            acc["MH-PolyFilt3"].append(t_p3)
+            acc["gain"].append(t_mh / t_acc)
+        rows.append({
+            "topology": topo, "n": n,
+            "T_MH": float(np.mean(acc["MH"])),
+            "T_proposed": float(np.mean(acc["MH-Proposed"])),
+            "T_polyfilt3": float(np.mean(acc["MH-PolyFilt3"])),
+            "gain_measured": float(np.mean(acc["gain"])),
+            "gain_asym_theory": metrics.processing_gain(
+                accel.lambda2(w), accel.rho_accel(accel.lambda2(w), th)
+            ),
+        })
+        print(f"fig34[{topo} n={n}]: T_MH={rows[-1]['T_MH']:.0f} "
+              f"T_prop={rows[-1]['T_proposed']:.0f} gain={rows[-1]['gain_measured']:.1f} "
+              f"(theory {rows[-1]['gain_asym_theory']:.1f})")
+    emit("fig34_scaling", rows)
+    # chain gain should scale ~linearly with N (Theorem 3)
+    chain = [r for r in rows if r["topology"] == "chain"]
+    if len(chain) >= 2:
+        g0, g1 = chain[0]["gain_measured"], chain[-1]["gain_measured"]
+        n0, n1 = chain[0]["n"], chain[-1]["n"]
+        print(f"fig4 scaling: gain({n1})/gain({n0}) = {g1/g0:.2f} "
+              f"vs N ratio {n1/n0:.2f} (Theorem 3: Omega(N))")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kind", default="both", choices=["rgg", "chain", "both"])
+    ap.add_argument("--trials", type=int, default=5)
+    a = ap.parse_args()
+    run(kind=a.kind, trials=a.trials)
+
+
+if __name__ == "__main__":
+    main()

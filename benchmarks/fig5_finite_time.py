@@ -1,0 +1,63 @@
+"""Fig. 5: MSE of the asymptotic methods at the moment finite-time consensus
+(Sundaram-Hadjicostis linear observer) has enough information for EXACT
+recovery — i.e. after deg(minpoly(W)) - 1 iterations.
+
+Paper claims reproduced: on RGGs the proposed method is at machine precision
+by that horizon; on the chain the observer's horizon is much more favourable
+(N-1 iterations vs the chain's slow mixing).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import baselines, simulator
+
+from .common import accel_params, emit, inits, paper_setup
+
+
+def run(sizes=(50, 100, 150), trials=5, seed=0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for topo in ("rgg", "chain"):
+        for n in sizes:
+            mse = {"MH": [], "MH-Proposed": [], "MH-PolyFilt3": []}
+            horizons = []
+            for _ in range(trials if topo == "rgg" else 1):
+                g, w = paper_setup(topo, n, rng)
+                th, lam2, a_star = accel_params(w)
+                horizon = baselines.finite_time_iterations(w)
+                horizons.append(horizon)
+                x0 = inits(g, "slope", 1, rng)
+                mse["MH"].append(float(simulator.simulate(w, x0, horizon).mse[-1, 0]))
+                mse["MH-Proposed"].append(float(
+                    simulator.simulate(w, x0, horizon, alpha=a_star, theta=th).mse[-1, 0]
+                ))
+                pf3 = baselines.design_poly_filter(w, 3, ridge=1e-12)
+                _, traj = baselines.run_poly_filter(w, pf3, x0[:, 0], horizon, record=True)
+                d = traj[-1] - x0[:, 0].mean()
+                mse["MH-PolyFilt3"].append(float((d * d).mean()))
+            rows.append({
+                "topology": topo, "n": n,
+                "observer_horizon": float(np.mean(horizons)),
+                "mse_MH": float(np.mean(mse["MH"])),
+                "mse_proposed": float(np.mean(mse["MH-Proposed"])),
+                "mse_polyfilt3": float(np.mean(mse["MH-PolyFilt3"])),
+                "mse_finite_time": 0.0,  # exact by construction (oracle)
+            })
+            print(f"fig5[{topo} n={n}]: horizon={rows[-1]['observer_horizon']:.0f} "
+                  f"proposed={rows[-1]['mse_proposed']:.3g} MH={rows[-1]['mse_MH']:.3g}")
+    emit("fig5_finite_time", rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=5)
+    a = ap.parse_args()
+    run(trials=a.trials)
+
+
+if __name__ == "__main__":
+    main()

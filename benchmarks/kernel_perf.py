@@ -1,0 +1,73 @@
+"""Kernel micro-bench: wall time of the Pallas ops (interpret mode on CPU —
+a correctness-path timing, NOT a TPU perf claim; TPU numbers come from the
+roofline analysis) plus the simulator backend comparison at paper scale.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accel, simulator, topology, weights
+from repro.kernels import ops, ref
+
+from .common import emit
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # simulator backends at paper scale (N=200, 300 trials, 100 iters)
+    g = topology.random_geometric(200, rng)
+    w = weights.metropolis_hastings(g)
+    th = accel.theta_asymptotic(0.5)
+    a = accel.alpha_star_from_w(w, th)
+    x0 = rng.standard_normal((200, 300))
+    for backend in ("numpy", "jax", "pallas"):
+        t0 = time.perf_counter()
+        simulator.simulate(w, x0, 100, alpha=a, theta=th, backend=backend)
+        rows.append({
+            "bench": f"simulator_{backend}_N200xF300x100it",
+            "us_per_call": (time.perf_counter() - t0) * 1e6,
+            "derived": "paper-scale trial batch",
+        })
+
+    # ssd_scan kernel vs naive recurrence oracle (CPU interpret)
+    B, T, H, G, dh, ds = 1, 1024, 8, 1, 64, 64
+    x = jnp.asarray(rng.standard_normal((B, T, H, dh)), jnp.float32)
+    aa = -jnp.abs(jnp.asarray(rng.standard_normal((B, T, H)), jnp.float32)) * 0.1
+    bb = jnp.asarray(rng.standard_normal((B, T, G, ds)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((B, T, G, ds)), jnp.float32)
+    f_k = jax.jit(lambda *t: ops.ssd_scan(*t, chunk=128))
+    f_r = jax.jit(lambda x, a, b, c: ref.ssd_scan_ref(
+        x, a, jnp.repeat(b, H // G, 2), jnp.repeat(c, H // G, 2)))
+    rows.append({"bench": "ssd_chunked_B1T1024", "us_per_call": _time(f_k, x, aa, bb, cc),
+                 "derived": "chunked dual form"})
+    rows.append({"bench": "ssd_naive_scan_B1T1024", "us_per_call": _time(f_r, x, aa, bb, cc),
+                 "derived": "sequential recurrence"})
+
+    emit("kernel_perf", rows)
+    return rows
+
+
+def main():
+    argparse.ArgumentParser().parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

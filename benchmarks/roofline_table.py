@@ -1,0 +1,61 @@
+"""Aggregate the dry-run JSONs into the EXPERIMENTS.md SRoofline table."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .common import emit
+
+
+def run(dryrun_dir="experiments/dryrun", mesh="single"):
+    rows = []
+    if not os.path.isdir(dryrun_dir):
+        print(f"(no dry-run results at {dryrun_dir} yet)")
+        return rows
+    for fname in sorted(os.listdir(dryrun_dir)):
+        if not fname.endswith(".json") or f"__{mesh}__" not in fname:
+            continue
+        with open(os.path.join(dryrun_dir, fname)) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skipped":
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"], "status": "skipped",
+                "bound": "-", "compute_s": "-", "memory_s": "-",
+                "collective_s": "-", "roofline_frac": "-", "hbm_GiB": "-",
+                "useful_flop_ratio": "-",
+            })
+            continue
+        if rec.get("status") != "ok":
+            rows.append({
+                "arch": rec.get("arch"), "shape": rec.get("shape"),
+                "status": rec.get("status"), "bound": "-", "compute_s": "-",
+                "memory_s": "-", "collective_s": "-", "roofline_frac": "-",
+                "hbm_GiB": "-", "useful_flop_ratio": "-",
+            })
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "bound": r["bound"],
+            "compute_s": f"{r['compute_s']:.3e}",
+            "memory_s": f"{r['memory_s']:.3e}",
+            "collective_s": f"{r['collective_s']:.3e}",
+            "roofline_frac": f"{r.get('roofline_fraction', 0):.4f}",
+            "hbm_GiB": f"{rec['memory']['total_hbm_bytes']/2**30:.1f}",
+            "useful_flop_ratio": f"{r.get('useful_flop_ratio', 0):.2f}",
+        })
+    emit(f"roofline_{mesh}", rows)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    a = ap.parse_args()
+    run(a.dir, a.mesh)
+
+
+if __name__ == "__main__":
+    main()

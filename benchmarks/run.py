@@ -1,0 +1,41 @@
+"""Benchmark entry point: one suite per paper figure/table + the systems
+extensions. Prints CSV blocks; saves under experiments/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default sizes keep a single-core CPU run in minutes; --full uses paper-scale
+trial counts.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale trials (300) instead of CI-scale")
+    args = ap.parse_args()
+    full = args.full
+
+    from . import (fig1_mse, fig2_polyfilt, fig34_scaling, fig5_finite_time,
+                   init_cost, kernel_perf, roofline_table, sync_cost)
+
+    t0 = time.time()
+    fig1_mse.run(trials=300 if full else 8, iters=400)
+    fig2_polyfilt.run(trials=100 if full else 5, iters=600)
+    fig34_scaling.run(trials=20 if full else 3,
+                      rgg_sizes=(50, 100, 150, 200) if full else (50, 100, 150),
+                      chain_sizes=(20, 40, 60, 80, 100) if full else (20, 40, 60, 80))
+    fig5_finite_time.run(sizes=(50, 100, 150) if full else (40, 80), trials=10 if full else 3)
+    init_cost.run()
+    sync_cost.run()
+    kernel_perf.run()
+    roofline_table.run(mesh="single")
+    roofline_table.run(mesh="multi")
+    print(f"benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

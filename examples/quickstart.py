@@ -1,0 +1,41 @@
+"""Quickstart: the paper in 40 lines.
+
+Builds a poorly-connected network (chain of 100 nodes), runs standard
+distributed averaging vs the paper's two-tap accelerated consensus with the
+Theorem-1 optimal mixing parameter (initialized by the decentralized
+Algorithm 1), and prints the measured speedup.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import accel, doi, metrics, simulator, topology, weights
+
+N = 100
+g = topology.chain(N)
+w = weights.metropolis_hastings(g)
+
+# --- decentralized initialization (Algorithm 1): estimate lambda_2(W) ---
+est = doi.estimate_lambda2(w, g, num_iters=N * N, normalize_every=10)
+theta = accel.theta_asymptotic(0.5)            # (-1/2, 0, 3/2): gamma = sqrt(2)
+alpha = accel.alpha_star(est.lambda2_hat, theta)  # Theorem 1, Eq. (14)
+print(f"lambda2 = {accel.lambda2(w):.6f}  (Algorithm-1 estimate {est.lambda2_hat:.6f}, "
+      f"{est.total_ticks} communication ticks)")
+print(f"alpha*  = {alpha:.4f}; rho drops {accel.lambda2(w):.6f} -> "
+      f"{accel.rho_accel(est.lambda2_hat, theta):.6f}")
+
+# --- run both algorithms from the paper's Slope initialization ---
+x0 = metrics.slope_init(g.coords, N)
+xbar = np.full(N, x0.mean())
+t_mem = metrics.averaging_time(lambda s: w @ s, x0, xbar, eps=1e-5)
+
+x, xp = x0.copy(), x0.copy()
+err0 = np.linalg.norm(x0 - xbar)
+for t_acc in range(1, 10**6):
+    x, xp = accel.accelerated_step(w, x, xp, alpha, theta)
+    if np.linalg.norm(x - xbar) <= 1e-5 * err0:
+        break
+
+print(f"averaging time to 1e-5: memoryless = {t_mem} iters, "
+      f"accelerated = {t_acc} iters  ->  {t_mem/t_acc:.1f}x fewer "
+      f"(Theorem 3: Theta(N) on a chain)")

@@ -1,0 +1,9 @@
+"""Serving example: continuous-batching decode over mixed-length requests.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "minicpm-2b", "--requests", "6", "--max-batch", "3",
+          "--new-tokens", "12"])

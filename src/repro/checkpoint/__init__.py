@@ -1,0 +1,3 @@
+from .store import AsyncCheckpointer, latest_valid, restore, save
+
+__all__ = ["AsyncCheckpointer", "latest_valid", "restore", "save"]

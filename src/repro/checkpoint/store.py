@@ -1,0 +1,202 @@
+"""Fault-tolerant checkpointing: atomic, CRC-verified, async, retained.
+
+Layout (one directory per step):
+
+    <root>/step_00001000/
+        manifest.json     # step, flat key list, shapes, dtypes, crc32s, extra
+        <flat_key>.npy    # one file per leaf (params + optimizer state)
+
+Durability protocol:
+  * write into ``step_X.tmp``, fsync files, atomically rename to ``step_X``
+    (a crashed writer can never produce a dir that *looks* complete);
+  * every leaf carries a CRC32 checked on restore; a corrupt/partial step is
+    skipped and the previous one used (``latest_valid``);
+  * ``AsyncCheckpointer`` runs saves on a worker thread off the train loop's
+    critical path, coalescing to the newest pending request;
+  * retention keeps the last ``keep`` checkpoints (never deleting the newest
+    valid one).
+
+Multi-host note: in a real deployment each host writes only its addressable
+shards and the manifest carries the global sharding; this single-process repo
+gathers leaves to host memory (np.asarray) — the protocol is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save", "restore", "latest_valid", "AsyncCheckpointer"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def walk(t, path):
+        if isinstance(t, dict):
+            for k in sorted(t):
+                walk(t[k], path + (str(k),))
+        else:
+            flat["/".join(path)] = np.asarray(t)
+
+    walk(tree, ())
+    return flat
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> PyTree:
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).view(np.uint8).tobytes())
+
+
+def save(root: str, step: int, state: PyTree, extra: dict | None = None) -> str:
+    """Atomic checkpoint write. Returns the final directory path."""
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(state)
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for key, arr in flat.items():
+        fname = key.replace("/", "__") + ".npy"
+        fpath = os.path.join(tmp, fname)
+        with open(fpath, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc32": _crc(arr),
+        }
+    mpath = os.path.join(tmp, _MANIFEST)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _validate(path: str) -> dict | None:
+    mpath = os.path.join(path, _MANIFEST)
+    if not os.path.exists(mpath):
+        return None
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+        for key, meta in manifest["leaves"].items():
+            arr = np.load(os.path.join(path, meta["file"]))
+            if _crc(arr) != meta["crc32"]:
+                return None
+        return manifest
+    except Exception:
+        return None
+
+
+def latest_valid(root: str) -> tuple[int, str] | None:
+    """Newest step whose manifest + CRCs verify; skips corrupt/partial dirs."""
+    if not os.path.isdir(root):
+        return None
+    dirs = sorted(
+        (d for d in os.listdir(root) if d.startswith("step_") and not d.endswith(".tmp")),
+        reverse=True,
+    )
+    for d in dirs:
+        path = os.path.join(root, d)
+        if _validate(path) is not None:
+            return int(d.split("_")[1]), path
+    return None
+
+
+def restore(path: str) -> tuple[int, PyTree, dict]:
+    """Load a verified checkpoint. Returns (step, state, extra)."""
+    manifest = _validate(path)
+    if manifest is None:
+        raise IOError(f"checkpoint at {path} failed validation")
+    flat = {
+        key: np.load(os.path.join(path, meta["file"]))
+        for key, meta in manifest["leaves"].items()
+    }
+    return manifest["step"], _unflatten(flat), manifest.get("extra", {})
+
+
+def _retain(root: str, keep: int) -> None:
+    entries = sorted(d for d in os.listdir(root) if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in entries[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+
+
+@dataclasses.dataclass
+class AsyncCheckpointer:
+    """Off-critical-path checkpoint writer with retention."""
+
+    root: str
+    keep: int = 3
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+        self._pending: tuple | None = None
+        self._event = threading.Event()
+        self._stop = False
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def submit(self, step: int, state: PyTree, extra: dict | None = None) -> None:
+        """Snapshot to host memory now; write in the background. Coalesces to
+        the newest pending request (bounded memory under bursty submits)."""
+        host_state = jax.tree.map(lambda t: np.asarray(t), state)
+        with self._lock:
+            self._pending = (step, host_state, extra)
+        self._event.set()
+
+    def _worker(self):
+        while True:
+            self._event.wait()
+            self._event.clear()
+            if self._stop:
+                return
+            with self._lock:
+                req, self._pending = self._pending, None
+            if req is None:
+                continue
+            step, state, extra = req
+            save(self.root, step, state, extra)
+            _retain(self.root, self.keep)
+
+    def close(self, flush: bool = True):
+        if flush:
+            while True:
+                with self._lock:
+                    if self._pending is None:
+                        break
+                self._event.set()
+                threading.Event().wait(0.01)
+        self._stop = True
+        self._event.set()
+        self._thread.join(timeout=10)

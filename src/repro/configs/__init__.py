@@ -1,0 +1,43 @@
+"""Architecture registry: the 10 assigned configs + shapes + the paper's own
+consensus-fabric configuration knobs (see repro.dist.grad_sync)."""
+from __future__ import annotations
+
+import importlib
+
+from .base import ArchConfig, MoEConfig, SSMConfig
+from .shapes import SHAPES, ShapeSpec, applicable, cells
+
+_MODULES = {
+    "whisper-base": "whisper_base",
+    "zamba2-7b": "zamba2_7b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "yi-34b": "yi_34b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "minicpm-2b": "minicpm_2b",
+    "yi-9b": "yi_9b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "mamba2-780m": "mamba2_780m",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f".{_MODULES[arch_id]}", __package__)
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+__all__ = [
+    "ArchConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "SHAPES",
+    "ShapeSpec",
+    "applicable",
+    "cells",
+    "ARCH_IDS",
+    "get_config",
+]

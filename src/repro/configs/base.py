@@ -1,0 +1,199 @@
+"""Architecture configuration schema.
+
+One ``ArchConfig`` per assigned architecture (exact published hyper-parameters)
+plus a ``smoke`` reduction of the same family for CPU tests. The model layer
+(`repro.models`) consumes these; the launcher builds input specs and sharding
+from them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+Activation = Literal["swiglu", "gelu", "squared_relu"]
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    load_balance_coef: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int          # N (ssm_state)
+    head_dim: int = 64      # P
+    expand: int = 2         # d_inner = expand * d_model
+    conv_kernel: int = 4
+    chunk: int = 128        # SSD chunk length
+    num_groups: int = 1     # B/C groups (broadcast to heads)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    activation: Activation = "swiglu"
+    head_dim: int | None = None          # default d_model // num_heads
+    rope_theta: float = 10_000.0
+    sliding_window: int | None = None    # mixtral SWA
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    pos: Literal["rope", "learned"] = "rope"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- family extensions ---
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    # hybrid: repeating pattern, 'm' = mamba2 layer, 'a' = shared attention
+    # block (single weight set reused at every 'a' site), e.g. 'mmmmma'.
+    hybrid_pattern: str | None = None
+    hybrid_tail: int = 0                 # trailing mamba layers after the blocks
+    # encoder-decoder (whisper): encoder depth/length; num_layers = decoder depth
+    encoder_layers: int = 0
+    encoder_len: int = 1500              # stub audio frontend frames (30 s)
+    # vlm: one cross-attention layer after every `cross_attn_every` self layers
+    cross_attn_every: int = 0
+    num_image_tokens: int = 1601         # stub vision frontend patches
+    # --- training details ---
+    optimizer: Literal["adamw", "adafactor"] = "adamw"
+    lr_schedule: Literal["cosine", "wsd"] = "cosine"
+    # microbatching: number of gradient-accumulation steps for train_4k
+    grad_accum: int = 1
+    # perf knob (§Perf): pad head counts up to a multiple of the TP degree so
+    # attention shards over 'model' (e.g. minicpm 36->48, yi-34b 56->64).
+    # Padded heads are extra zero-capacity heads: +FLOPs proportional to the
+    # padding, but the attention block stops being replicated 16-way.
+    tp_pad_heads: int = 0   # 0 = off; else the TP degree to pad to
+    # notes for DESIGN/EXPERIMENTS provenance
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def physical_q_heads(self) -> int:
+        if self.tp_pad_heads and self.num_heads % self.tp_pad_heads:
+            return round_up(self.num_heads, self.tp_pad_heads)
+        return self.num_heads
+
+    @property
+    def physical_kv_heads(self) -> int:
+        # kv heads padded only when q/kv grouping requires it (MHA) or when
+        # padding q changes the group size unevenly
+        if not self.tp_pad_heads:
+            return self.num_kv_heads
+        if self.num_kv_heads == self.num_heads:        # MHA: pad together
+            return self.physical_q_heads
+        g = self.physical_q_heads // self.num_kv_heads
+        if g * self.num_kv_heads != self.physical_q_heads:
+            return self.physical_q_heads  # fall back to MHA-style padding
+        return self.num_kv_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Physical vocab padded to 256 (16-way TP x MXU lane alignment)."""
+        return round_up(self.vocab_size, 256)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm.expand * self.d_model if self.ssm else 0
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm.head_dim if self.ssm else 0
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for long_500k: SSM/hybrid state or bounded (sliding) KV."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window is not None
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all 10 assigned archs are decoders or enc-dec
+
+    def num_params(self) -> int:
+        """Approximate parameter count (embeddings included, physical vocab)."""
+        d = self.d_model
+        nq, nkv = self.num_heads, self.num_kv_heads
+        hd = self.resolved_head_dim if nq else 0
+        attn = d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+        if self.activation == "swiglu":
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        if self.family == "moe":
+            m = self.moe
+            e_mlp = 3 * d * m.d_ff_expert if self.activation == "swiglu" else 2 * d * m.d_ff_expert
+            mlp = m.num_experts * e_mlp + m.num_shared_experts * e_mlp + d * m.num_experts
+        embed = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        if self.pos == "learned":
+            embed += 32_768 * d  # learned position table (whisper decoder)
+        if self.family == "ssm":
+            c = self.ssm
+            di = self.d_inner
+            layer = (
+                d * (2 * di + 2 * c.num_groups * c.state_dim + self.ssm_heads)
+                + di * d + 3 * self.ssm_heads + di
+            )
+            return self.num_layers * layer + embed
+        if self.family == "hybrid":
+            nm, na = self._hybrid_counts()
+            c = self.ssm
+            di = self.d_inner
+            mamba_layer = (
+                d * (2 * di + 2 * c.num_groups * c.state_dim + self.ssm_heads)
+                + di * d + 3 * self.ssm_heads + di
+            )
+            return nm * mamba_layer + (attn + mlp) + embed
+        if self.family == "encdec":
+            enc = self.encoder_layers * (attn + mlp)
+            dec = self.num_layers * (2 * attn + mlp)  # self + cross
+            return enc + dec + embed
+        if self.family == "vlm":
+            n_cross = self.num_layers // (self.cross_attn_every + 1)
+            n_self = self.num_layers - n_cross
+            return n_self * (attn + mlp) + n_cross * (attn + mlp) + embed
+        return self.num_layers * (attn + mlp) + embed
+
+    def active_params(self) -> int:
+        """Parameters touched per token (MoE: routed top-k + shared only)."""
+        if self.family != "moe":
+            return self.num_params()
+        m = self.moe
+        d = self.d_model
+        e_mlp = 3 * d * m.d_ff_expert if self.activation == "swiglu" else 2 * d * m.d_ff_expert
+        dense_total = self.num_params() - self.num_layers * (m.num_experts - 1) * e_mlp
+        active = dense_total - self.num_layers * e_mlp * m.num_shared_experts
+        # keep top_k + shared active
+        hd = self.resolved_head_dim
+        attn = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd + self.num_heads * hd * d
+        per_layer_active = attn + (m.top_k + m.num_shared_experts) * e_mlp + d * m.num_experts
+        embed = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        return self.num_layers * per_layer_active + embed
+
+    def _hybrid_counts(self) -> tuple[int, int]:
+        """(num mamba layers, num shared-attn sites) from the pattern."""
+        if not self.hybrid_pattern:
+            return 0, 0
+        per = self.hybrid_pattern
+        n_blocks = (self.num_layers - self.hybrid_tail) // len(per)
+        nm = n_blocks * per.count("m") + self.hybrid_tail
+        na = n_blocks * per.count("a")
+        return nm, na

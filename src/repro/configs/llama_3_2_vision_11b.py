@@ -1,0 +1,39 @@
+"""llama-3.2-vision-11b [vlm]: text decoder with cross-attention image layers.
+
+40L, d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab=128256; one gated
+cross-attention layer after every 4 self-attention layers (8 cross + 32 self).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]. The vision frontend
+(ViT tower + projector) is a STUB: ``input_specs`` provides precomputed patch
+embeddings (B, 1601, d_model).
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=128_256,
+    activation="swiglu",
+    rope_theta=5e5,
+    cross_attn_every=4,
+    num_image_tokens=1601,
+    grad_accum=2,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    num_layers=5,          # 1 superblock: 4 self + 1 cross
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    num_image_tokens=16,
+)

@@ -1,0 +1,34 @@
+"""mamba2-780m [ssm]: attention-free SSD (state-space duality).
+
+48L, d_model=1536, vocab=50280, ssm_state=128, head_dim=64, expand=2
+(d_inner=3072, 48 ssm heads). [arXiv:2405.21060; unverified]. The SSD
+intra-chunk block runs through the Pallas kernel (repro.kernels.ssd_chunk);
+the inter-chunk recurrence is a log-depth associative scan.
+"""
+import dataclasses
+
+from .base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    arch_id="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,           # attention-free
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50_280,
+    activation="swiglu",   # unused (no MLP); mamba block is gated internally
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk=128),
+    tie_embeddings=True,
+    grad_accum=1,
+    source="arXiv:2405.21060",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    num_layers=2,
+    d_model=64,
+    vocab_size=512,
+    ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, chunk=16),
+)

@@ -1,0 +1,35 @@
+"""minicpm-2b [dense]: llama-like with WSD schedule and tied embeddings.
+
+40L, d_model=2304, 36H (kv=36, MHA), d_ff=5760, vocab=122753.
+[arXiv:2404.06395; hf]. The paper's contribution is the WSD
+(warmup-stable-decay) LR schedule — wired to ``lr_schedule="wsd"`` here.
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="minicpm-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122_753,
+    activation="swiglu",
+    tie_embeddings=True,
+    lr_schedule="wsd",
+    grad_accum=1,
+    source="arXiv:2404.06395",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    num_layers=2,
+    d_model=72,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+)

@@ -1,0 +1,37 @@
+"""mixtral-8x7b [moe]: 8 experts top-2, sliding-window attention.
+
+32L, d_model=4096, 32H (GQA kv=8), d_ff=14336 per expert, vocab=32000,
+SWA window 4096, rope_theta=1e6. [arXiv:2401.04088; hf].
+"""
+import dataclasses
+
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    arch_id="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=32_000,
+    activation="swiglu",
+    rope_theta=1e6,
+    sliding_window=4096,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=14_336),
+    grad_accum=4,
+    source="arXiv:2401.04088",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    sliding_window=32,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=128),
+)

@@ -1,0 +1,35 @@
+"""moonshot-v1-16b-a3b (Moonlight-16B-A3B) [moe]: 64 experts, top-6.
+
+48L, d_model=2048, 16H (kv=16), d_ff_expert=1408, vocab=163840, 64e top-6
++ 2 shared experts (DeepSeek-V3-style fine-grained MoE).
+[hf:moonshotai/Moonlight-16B-A3B; hf]. ~16B total / ~3B active.
+"""
+import dataclasses
+
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    arch_id="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,  # per-expert FFN width
+    vocab_size=163_840,
+    activation="swiglu",
+    moe=MoEConfig(num_experts=64, top_k=6, d_ff_expert=1408, num_shared_experts=2),
+    grad_accum=2,
+    source="hf:moonshotai/Moonlight-16B-A3B",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=96,
+    vocab_size=512,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=96, num_shared_experts=1),
+)

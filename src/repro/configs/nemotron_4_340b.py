@@ -1,0 +1,37 @@
+"""nemotron-4-340b [dense]: GQA + squared-ReLU MLP.
+
+96L, d_model=18432, 96H (GQA kv=8), d_ff=73728, vocab=256000.
+[arXiv:2402.16819; unverified]. Squared-ReLU (Primer) MLP: two matrices,
+no gate. Adafactor optimizer (AdamW moments for 340B fp32 would not fit the
+per-chip HBM budget alongside params + activations); grad_accum=16 keeps the
+train_4k activation footprint inside VMEM/HBM limits at global_batch=256.
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="nemotron-4-340b",
+    family="dense",
+    num_layers=96,
+    d_model=18_432,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=73_728,
+    vocab_size=256_000,
+    activation="squared_relu",
+    optimizer="adafactor",
+    grad_accum=16,
+    source="arXiv:2402.16819",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    num_layers=2,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    grad_accum=2,
+)

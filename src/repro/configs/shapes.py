@@ -1,0 +1,37 @@
+"""Assigned input shapes (the 4 columns of the 10 x 4 = 40-cell matrix)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+from .base import ArchConfig
+
+Kind = Literal["train", "prefill", "decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Kind
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runs?, reason). long_500k needs sub-quadratic attention (SSM/hybrid/SWA);
+    skipped for pure full-attention archs per the assignment and DESIGN.md."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, "full quadratic attention: 512k KV cache not architecturally bounded"
+    return True, ""
+
+
+def cells(cfg: ArchConfig) -> list[tuple[ShapeSpec, bool, str]]:
+    return [(s, *applicable(cfg, s)) for s in SHAPES.values()]

@@ -1,0 +1,42 @@
+"""whisper-base [audio]: enc-dec transformer backbone, conv frontend stubbed.
+
+6L (encoder) + 6L (decoder), d_model=512, 8H (kv=8), d_ff=2048, vocab=51865.
+[arXiv:2212.04356; unverified]. The audio frontend (2x conv1d stem over
+mel-spectrogram) is a STUB: ``input_specs`` provides precomputed frame
+embeddings (B, encoder_len, d_model). Whisper uses LayerNorm, GELU MLPs,
+learned decoder positions (we extend the 448-position table to the assigned
+sequence lengths — recorded as a hardware-shape adaptation in DESIGN.md).
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="whisper-base",
+    family="encdec",
+    num_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51_865,
+    activation="gelu",
+    norm="layernorm",
+    pos="learned",
+    encoder_layers=6,
+    encoder_len=1500,
+    grad_accum=1,
+    source="arXiv:2212.04356",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    encoder_layers=2,
+    encoder_len=16,
+)

@@ -1,0 +1,33 @@
+"""yi-34b [dense]: llama-architecture GQA.
+
+60L, d_model=7168, 56H (GQA kv=8), d_ff=20480, vocab=64000.
+[arXiv:2403.04652; hf]. rope_theta=5e6 per the released model.
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="yi-34b",
+    family="dense",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=20_480,
+    vocab_size=64_000,
+    activation="swiglu",
+    rope_theta=5e6,
+    grad_accum=4,
+    source="arXiv:2403.04652",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    num_layers=2,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+)

@@ -1,0 +1,33 @@
+"""yi-9b [dense]: llama-architecture GQA (depth-extended Yi-6B).
+
+48L, d_model=4096, 32H (GQA kv=4), d_ff=11008, vocab=64000.
+[arXiv:2403.04652; hf].
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="yi-9b",
+    family="dense",
+    num_layers=48,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11_008,
+    vocab_size=64_000,
+    activation="swiglu",
+    rope_theta=5e6,
+    grad_accum=2,
+    source="arXiv:2403.04652",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    num_layers=2,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+)

@@ -1,0 +1,43 @@
+"""zamba2-7b [hybrid]: Mamba2 backbone + shared attention block.
+
+81L, d_model=3584, 32H (kv=32), d_ff=14336, vocab=32000, ssm_state=64.
+[arXiv:2411.15242; unverified]. Pattern: 13 superblocks of (5 x Mamba2 +
+1 shared-attention site) + 3 trailing Mamba2 layers = 81. The shared
+attention+MLP block has ONE weight set reused at every site (the Zamba
+design point: attention quality at marginal parameter cost); each site keeps
+its own KV cache at inference. Simplification vs the released model (single
+shared block rather than two alternating, no per-site LoRA) recorded in
+DESIGN.md SArch-applicability.
+"""
+import dataclasses
+
+from .base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    arch_id="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14_336,
+    vocab_size=32_000,
+    activation="swiglu",
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, chunk=128),
+    hybrid_pattern="mmmmma",
+    hybrid_tail=3,
+    grad_accum=4,
+    source="arXiv:2411.15242",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    num_layers=7,          # 1 superblock (5m + 1a) + 1 tail mamba
+    hybrid_tail=1,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, chunk=16),
+)

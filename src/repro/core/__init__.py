@@ -1,0 +1,47 @@
+"""Paper core: two-tap memory-accelerated distributed averaging.
+
+Faithful implementation of Oreshkin, Coates & Rabbat, "Optimization and
+Analysis of Distributed Averaging with Short Node Memory" (2009): topologies,
+weight matrices, the accelerated operator and its optimal mixing parameter
+(Theorem 1), Algorithm-1 decentralized lambda_2 estimation, the comparison
+baselines, convergence metrics, and a vectorized simulation engine.
+"""
+from . import accel, baselines, doi, metrics, simulator, topology, weights
+from .accel import (
+    Theta,
+    alpha_star,
+    alpha_star_from_w,
+    phi3_matrix,
+    rho_accel,
+    spectral_radius_minus_j,
+    theta_asymptotic,
+    theta_ls,
+)
+from .doi import estimate_lambda2
+from .metrics import EPS_PAPER, averaging_time, processing_gain, tau_asym
+from .weights import lazy, metropolis_hastings
+
+__all__ = [
+    "accel",
+    "baselines",
+    "doi",
+    "metrics",
+    "simulator",
+    "topology",
+    "weights",
+    "Theta",
+    "alpha_star",
+    "alpha_star_from_w",
+    "phi3_matrix",
+    "rho_accel",
+    "spectral_radius_minus_j",
+    "theta_asymptotic",
+    "theta_ls",
+    "estimate_lambda2",
+    "EPS_PAPER",
+    "averaging_time",
+    "processing_gain",
+    "tau_asym",
+    "lazy",
+    "metropolis_hastings",
+]

@@ -1,0 +1,285 @@
+"""Two-tap memory-accelerated consensus — the paper's core contribution.
+
+Implements:
+
+* predictor designs: the least-squares design of Aysal et al. (Eq. 8),
+  theta = (-2/3, 1/3, 4/3), and the asymptotically-optimal design
+  theta = (-eps, 0, 1+eps) from Section III-B;
+* ``alpha_star`` — Theorem 1 / Eq. (14): the closed-form optimal mixing
+  parameter, a function of theta and lambda_2(W) only;
+* ``rho_accel`` — the resulting spectral radius sqrt(-alpha* theta_1)
+  (Section V-C), plus the Theorem-2 bound 1 - sqrt(Psi(N));
+* ``phi3_matrix`` — the 2N x 2N companion operator Phi_3[alpha] (Eq. 7);
+* ``phi3_eigenvalues`` — the analytic eigenvalues of Phi_3[alpha] via the
+  quadratic eigenvalue problem (Eq. 35/36), used to cross-check the dense
+  eigendecomposition in tests;
+* ``accelerated_step`` / ``run_accelerated`` — the node-local recursion
+  (Eq. 4a-4c), vectorized over feature columns.
+
+Everything here is plain numpy float64: this is the *theory* layer. The
+high-throughput simulation engine lives in ``repro.core.simulator`` and the
+SPMD/pjit mapping in ``repro.dist``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+from .weights import averaging_matrix
+
+__all__ = [
+    "Theta",
+    "theta_ls",
+    "theta_asymptotic",
+    "alpha_star",
+    "alpha_star_from_w",
+    "rho_accel",
+    "rho_accel_bound",
+    "gain_bound",
+    "w3_matrix",
+    "phi3_matrix",
+    "phi3_eigenvalues",
+    "spectral_radius_minus_j",
+    "lambda2",
+    "accelerated_step",
+    "run_accelerated",
+    "run_memoryless",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Theta:
+    """Two-tap predictor coefficients theta = (theta1, theta2, theta3).
+
+    Theorem 1's technical conditions: theta1 + theta2 + theta3 = 1,
+    theta3 >= 1, theta2 >= 0 (which force theta1 <= 0).
+    """
+
+    t1: float
+    t2: float
+    t3: float
+
+    def __post_init__(self) -> None:
+        if abs(self.t1 + self.t2 + self.t3 - 1.0) > 1e-9:
+            raise ValueError(f"theta must sum to 1, got {self.t1+self.t2+self.t3}")
+        if self.t3 < 1.0 - 1e-12:
+            raise ValueError(f"theta3 must be >= 1, got {self.t3}")
+        if self.t2 < -1e-12:
+            raise ValueError(f"theta2 must be >= 0, got {self.t2}")
+
+    @property
+    def as_tuple(self) -> tuple[float, float, float]:
+        return (self.t1, self.t2, self.t3)
+
+    @property
+    def alpha_max(self) -> float:
+        """Stability boundary: Phi_3[alpha] is convergent iff alpha in [0, -1/theta1)."""
+        if self.t1 >= 0.0:
+            return np.inf
+        return -1.0 / self.t1
+
+    @property
+    def gamma(self) -> float:
+        """Rate coefficient gamma(theta2, theta3) = sqrt((2(t3-1)+t2)/(t3-1+t2)).
+
+        Eq. (15): rho(Phi3[alpha*]-J) = 1 - gamma sqrt(Psi(N)) + O(Psi(N)).
+        Maximized (= sqrt(2)) by theta2 = 0, any theta3 > 1.
+        """
+        num = 2.0 * (self.t3 - 1.0) + self.t2
+        den = (self.t3 - 1.0) + self.t2
+        if den <= 0:
+            return 0.0
+        return float(np.sqrt(num / den))
+
+
+def theta_ls() -> Theta:
+    """Least-squares predictor design of Aysal et al. (Eq. 8).
+
+    A = [[-2, 1], [-1, 1], [0, 1]] (times -2,-1,0 regress to a line), B = [1, 1]
+    extrapolates to time +1: theta^T = B^T A^dagger = (-2/3, 1/3, 4/3).
+    Computed here from the pseudo-inverse rather than hard-coded so the test
+    suite can cross-check the closed form against the construction.
+    """
+    a = np.array([[-2.0, 1.0], [-1.0, 1.0], [0.0, 1.0]])
+    b = np.array([1.0, 1.0])
+    theta = np.linalg.pinv(a).T @ b
+    return Theta(*theta)
+
+
+def theta_asymptotic(eps: float = 0.5) -> Theta:
+    """Asymptotically optimal design theta = (-eps, 0, 1+eps) (Section III-B).
+
+    gamma = sqrt(2) independent of eps; the paper's experiments use eps = 1/2.
+    """
+    if eps <= 0:
+        raise ValueError("eps must be > 0")
+    return Theta(-eps, 0.0, 1.0 + eps)
+
+
+def lambda2(w: np.ndarray) -> float:
+    """Second-largest eigenvalue of a symmetric consensus matrix W."""
+    vals = np.linalg.eigvalsh(w)
+    return float(np.sort(vals)[-2])
+
+
+def alpha_star(lam2: float, theta: Theta) -> float:
+    """Theorem 1 / Eq. (14): optimal mixing parameter alpha*.
+
+    alpha* = [-((t3-1) l^2 + t2 l + 2 t1) - 2 sqrt(t1^2 + t1 l (t2 + (t3-1) l))]
+             / (t2 + (t3-1) l)^2,   l = lambda_2(W).
+
+    Requires |lambda_N(W)| <= lambda_2(W) (ensured e.g. by the lazy (I+W)/2 map).
+    """
+    t1, t2, t3 = theta.as_tuple
+    lam = float(lam2)
+    den = (t2 + (t3 - 1.0) * lam) ** 2
+    if den < 1e-300:
+        # lam -> 0 with theta2 = 0: alpha* -> lam^2 / (4 eps) -> 0 (Taylor).
+        return 0.0
+    rad = t1 * t1 + t1 * lam * (t2 + (t3 - 1.0) * lam)
+    if rad < 0:
+        if rad < -1e-12:
+            raise ValueError(
+                f"negative discriminant {rad}: conditions of Theorem 1 violated "
+                f"(lambda2={lam}, theta={theta.as_tuple})"
+            )
+        rad = 0.0
+    num = -((t3 - 1.0) * lam * lam + t2 * lam + 2.0 * t1) - 2.0 * np.sqrt(rad)
+    return float(num / den)
+
+
+def alpha_star_from_w(w: np.ndarray, theta: Theta) -> float:
+    """alpha* computed from the matrix itself (convenience wrapper)."""
+    return alpha_star(lambda2(w), theta)
+
+
+def rho_accel(lam2: float, theta: Theta) -> float:
+    """Exact optimized spectral radius rho(Phi3[alpha*] - J) = sqrt(-alpha* theta1).
+
+    (Section V-C.)  For theta = (-eps, 0, 1+eps) this reduces to the
+    Chebyshev-type rate (1 - sqrt(1 - lam2^2)) / lam2, independent of eps.
+    """
+    a = alpha_star(lam2, theta)
+    return float(np.sqrt(max(-a * theta.t1, 0.0)))
+
+
+def rho_accel_bound(psi: float) -> float:
+    """Theorem 2 upper bound: rho(W-J) <= 1 - Psi  =>  rho(Phi3[alpha*]-J) <= 1 - sqrt(Psi)."""
+    return 1.0 - np.sqrt(psi)
+
+
+def gain_bound(psi: float) -> float:
+    """Theorem 3: G(W) = E{tau(W)/tau(Phi3[alpha*])} >= 1/sqrt(Psi(N))."""
+    return 1.0 / np.sqrt(psi)
+
+
+def w3_matrix(w: np.ndarray, alpha: float, theta: Theta) -> np.ndarray:
+    """W_3[alpha] = (1 - alpha + alpha theta3) W + alpha theta2 I   (Eq. 5)."""
+    n = w.shape[0]
+    return (1.0 - alpha + alpha * theta.t3) * w + alpha * theta.t2 * np.eye(n)
+
+
+def phi3_matrix(w: np.ndarray, alpha: float, theta: Theta) -> np.ndarray:
+    """The 2N x 2N companion operator Phi_3[alpha] (Eq. 7).
+
+    Phi_3[alpha] = [[W_3[alpha], alpha theta1 I], [I, 0]].
+    """
+    n = w.shape[0]
+    top = np.concatenate([w3_matrix(w, alpha, theta), alpha * theta.t1 * np.eye(n)], axis=1)
+    bot = np.concatenate([np.eye(n), np.zeros((n, n))], axis=1)
+    return np.concatenate([top, bot], axis=0)
+
+
+def phi3_eigenvalues(w_eigs: np.ndarray, alpha: float, theta: Theta) -> np.ndarray:
+    """Analytic eigenvalues of Phi_3[alpha] from the eigenvalues of W.
+
+    Each eigenvalue lambda_i(W) spawns the two roots of the quadratic (Eq. 34)
+        mu^2 - lambda_i(W_3[alpha]) mu - alpha theta1 = 0,
+    with lambda_i(W_3[alpha]) = (1 - alpha + alpha theta3) lambda_i(W) + alpha theta2.
+    Returns a complex array of length 2N.
+    """
+    lam_w3 = (1.0 - alpha + alpha * theta.t3) * np.asarray(w_eigs) + alpha * theta.t2
+    disc = lam_w3.astype(np.complex128) ** 2 + 4.0 * alpha * theta.t1
+    root = np.sqrt(disc)
+    return np.concatenate([0.5 * (lam_w3 + root), 0.5 * (lam_w3 - root)])
+
+
+def spectral_radius_minus_j(w: np.ndarray, alpha: float, theta: Theta) -> float:
+    """rho(Phi3[alpha] - J) computed analytically from the spectrum of W.
+
+    Equals max |mu| over the 2N quadratic-eigenvalue roots with the single
+    mu = 1 root (from lambda_1(W) = 1) excluded; the companion root -alpha
+    theta1 of that branch *is* included (Section V-B, Eq. 38).
+    """
+    vals = np.linalg.eigvalsh(w)
+    lam_rest = np.sort(vals)[:-1]  # drop the top eigenvalue 1
+    mus = phi3_eigenvalues(lam_rest, alpha, theta)
+    cand = np.abs(mus)
+    # the lambda_1 = 1 branch contributes mu = 1 (dropped with J) and mu = -alpha theta1
+    cand = np.append(cand, abs(alpha * theta.t1))
+    return float(cand.max())
+
+
+# ---------------------------------------------------------------------------
+# Node-local recursion (Eq. 4a-4c), vectorized over an (N, F) state block.
+# ---------------------------------------------------------------------------
+
+def accelerated_step(
+    w: np.ndarray,
+    x: np.ndarray,
+    x_prev: np.ndarray,
+    alpha: float,
+    theta: Theta,
+) -> tuple[np.ndarray, np.ndarray]:
+    """One accelerated round: returns (x_next, x).
+
+    x^W  = W x
+    x^P  = theta3 x^W + theta2 x + theta1 x_prev
+    x'   = alpha x^P + (1 - alpha) x^W
+         = (1 - alpha + alpha theta3) x^W + alpha theta2 x + alpha theta1 x_prev
+    """
+    xw = w @ x
+    a = 1.0 - alpha + alpha * theta.t3
+    b = alpha * theta.t2
+    c = alpha * theta.t1
+    return a * xw + b * x + c * x_prev, x
+
+
+def run_accelerated(
+    w: np.ndarray,
+    x0: np.ndarray,
+    alpha: float,
+    theta: Theta,
+    num_iters: int,
+    record: bool = False,
+) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
+    """Run the two-tap recursion for ``num_iters`` rounds from x(-1) = x(0) = x0.
+
+    x0 may be (N,) or (N, F). If ``record``, also returns the (T+1, ...) state
+    trajectory (used by the MSE-vs-iteration benchmarks).
+    """
+    x = np.asarray(x0, dtype=np.float64)
+    x_prev = x.copy()
+    traj = [x.copy()] if record else None
+    for _ in range(num_iters):
+        x, x_prev = accelerated_step(w, x, x_prev, alpha, theta)
+        if record:
+            traj.append(x.copy())
+    if record:
+        return x, np.stack(traj)
+    return x
+
+
+def run_memoryless(
+    w: np.ndarray, x0: np.ndarray, num_iters: int, record: bool = False
+) -> np.ndarray | tuple[np.ndarray, np.ndarray]:
+    """Standard distributed averaging x(t+1) = W x(t) (the paper's baseline)."""
+    x = np.asarray(x0, dtype=np.float64)
+    traj = [x.copy()] if record else None
+    for _ in range(num_iters):
+        x = w @ x
+        if record:
+            traj.append(x.copy())
+    if record:
+        return x, np.stack(traj)
+    return x

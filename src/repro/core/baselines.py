@@ -1,0 +1,178 @@
+"""The acceleration baselines the paper compares against (Section IV).
+
+* Polynomial filtering  [Kokiopoulou & Frossard, ref 14]: each super-iteration
+  applies a degree-k polynomial p(W) (k consensus ticks + local history
+  combination). The optimal coefficients minimize the filtered spectrum and
+  are found numerically by (pseudo-)inverting a Vandermonde matrix in the
+  eigenvalues of W — which the paper's footnote 2 observes becomes
+  ill-conditioned for k > 7; we expose the ridge knob and reproduce the
+  instability in a test.
+
+* Finite-time consensus [Sundaram & Hadjicostis, ref 16]: with the full value
+  history, after deg(minpoly(W)) - 1 iterations every node can recover the
+  exact average by a topology-dependent linear combination of its history.
+  We implement the oracle: q(W) = prod_{j>=2} (W - mu_j I)/(1 - mu_j) = J for
+  the distinct eigenvalues mu_j != 1 of W. The benchmark only needs the
+  iteration horizon (d - 1) plus exactness.
+
+* The optimal-weight-matrix baseline [Xiao-Boyd, ref 10] lives in
+  ``repro.core.weights.optimal_weights``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+from .weights import averaging_matrix
+
+__all__ = [
+    "PolyFilter",
+    "design_poly_filter",
+    "poly_filter_step",
+    "run_poly_filter",
+    "distinct_eigenvalues",
+    "finite_time_iterations",
+    "finite_time_matrix",
+]
+
+
+# ---------------------------------------------------------------------------
+# Polynomial filtering (ref [14]).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolyFilter:
+    """Coefficients a_0..a_k of p(z) = sum_j a_j z^j with p(1) = 1."""
+
+    coeffs: np.ndarray          # (k+1,)
+    rho_filtered: float         # rho(p(W) - J) at design time
+    cond: float                 # condition number of the Vandermonde gram
+
+    @property
+    def degree(self) -> int:
+        return len(self.coeffs) - 1
+
+    @property
+    def ticks_per_apply(self) -> int:
+        """One application of p(W) costs k consensus ticks (W-multiplies)."""
+        return self.degree
+
+    def rho_per_tick(self) -> float:
+        """Effective per-consensus-tick contraction: rho^(1/k)."""
+        if self.rho_filtered <= 0:
+            return 0.0
+        return float(self.rho_filtered ** (1.0 / max(self.degree, 1)))
+
+
+def design_poly_filter(
+    w: np.ndarray, degree: int, ridge: float = 0.0
+) -> PolyFilter:
+    """LS design from ref [14]: minimize sum_i p(lambda_i)^2 s.t. p(1) = 1.
+
+    Closed form via the Vandermonde gram G = V^T V (+ ridge I):
+    a = G^-1 c / (c^T G^-1 c), c = ones (the powers of z = 1).
+    The paper's footnote-2 ill-conditioning is exactly cond(G) blowing up with
+    degree; ridge > 0 regularizes (we default to exact LS like the reference).
+    """
+    vals = np.linalg.eigvalsh(w)
+    lam = np.sort(vals)[:-1]  # exclude the eigenvalue 1
+    v = np.vander(lam, degree + 1, increasing=True)  # (N-1, k+1)
+    g = v.T @ v + ridge * np.eye(degree + 1)
+    c = np.ones(degree + 1)
+    cond = float(np.linalg.cond(g))
+    try:
+        gi_c = np.linalg.solve(g, c)
+    except np.linalg.LinAlgError:
+        gi_c = np.linalg.lstsq(g, c, rcond=None)[0]
+    a = gi_c / (c @ gi_c)
+    # evaluate the achieved filtered spectral radius
+    pw = np.polynomial.polynomial.polyval(lam, a)
+    rho = float(np.max(np.abs(pw)))
+    return PolyFilter(coeffs=np.asarray(a, dtype=np.float64), rho_filtered=rho, cond=cond)
+
+
+def poly_filter_matrix(w: np.ndarray, filt: PolyFilter) -> np.ndarray:
+    """Dense p(W) (for analysis; the distributed algorithm never forms it)."""
+    n = w.shape[0]
+    acc = np.zeros_like(w)
+    pk = np.eye(n)
+    for a_j in filt.coeffs:
+        acc = acc + a_j * pk
+        pk = pk @ w
+    return acc
+
+
+def poly_filter_step(w: np.ndarray, filt: PolyFilter, x: np.ndarray) -> np.ndarray:
+    """One super-iteration via Horner (k W-multiplies, no dense p(W))."""
+    a = filt.coeffs
+    acc = a[-1] * x
+    for j in range(len(a) - 2, -1, -1):
+        acc = w @ acc + a[j] * x
+    return acc
+
+
+def run_poly_filter(
+    w: np.ndarray,
+    filt: PolyFilter,
+    x0: np.ndarray,
+    num_ticks: int,
+    record: bool = False,
+):
+    """Run for a budget of ``num_ticks`` consensus ticks (k per super-iteration).
+
+    The recorded trajectory is per-tick with the state held constant inside a
+    super-iteration (fair tick-for-tick comparison against one-W-multiply
+    methods, as in the paper's figures).
+    """
+    x = np.asarray(x0, dtype=np.float64)
+    k = filt.ticks_per_apply
+    traj = [x.copy()] if record else None
+    done = 0
+    while done + k <= num_ticks:
+        x = poly_filter_step(w, filt, x)
+        done += k
+        if record:
+            traj.extend([x.copy()] * k)
+    if record:
+        while len(traj) < num_ticks + 1:
+            traj.append(x.copy())
+        return x, np.stack(traj)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Finite-time consensus (ref [16]) — minimal-polynomial oracle.
+# ---------------------------------------------------------------------------
+
+def distinct_eigenvalues(w: np.ndarray, tol: float = 1e-8) -> np.ndarray:
+    """Distinct eigenvalues of symmetric W, clustered with absolute tolerance."""
+    vals = np.sort(np.linalg.eigvalsh(w))
+    out = [vals[0]]
+    for v in vals[1:]:
+        if v - out[-1] > tol:
+            out.append(v)
+    return np.asarray(out)
+
+
+def finite_time_iterations(w: np.ndarray, tol: float = 1e-8) -> int:
+    """Iterations after which the linear-observer method can recover the average.
+
+    = deg(minpoly(W)) - 1 = (#distinct eigenvalues) - 1 for diagonalizable W.
+    """
+    return len(distinct_eigenvalues(w, tol)) - 1
+
+
+def finite_time_matrix(w: np.ndarray, tol: float = 1e-8) -> np.ndarray:
+    """q(W) = prod_{mu != 1} (W - mu I) / (1 - mu) — equals J exactly.
+
+    Evaluated in product form (numerically stable for the small-N test graphs;
+    the distributed algorithm works on local histories and never forms this).
+    """
+    n = w.shape[0]
+    mus = distinct_eigenvalues(w, tol)
+    acc = np.eye(n)
+    for mu in mus:
+        if abs(mu - 1.0) <= tol:
+            continue
+        acc = acc @ (w - mu * np.eye(n)) / (1.0 - mu)
+    return acc

@@ -1,0 +1,228 @@
+"""Network topologies for distributed averaging.
+
+The paper evaluates on chain graphs and random geometric graphs (RGG) with the
+connectivity radius sqrt(2 log N / N) (Gupta-Kumar scaling, connected w.h.p.).
+We additionally provide ring / 2-D grid / 2-D torus (the topologies used for the
+pod-level consensus fabric in ``repro.dist``) plus a few classics used in tests.
+
+All functions return a dense symmetric 0/1 adjacency matrix (numpy, float64) with
+zero diagonal. Dense is the right representation here: the paper's experiments are
+N <= a few thousand, and spectral analysis (eigenvalues of W) is dense anyway.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "chain",
+    "ring",
+    "grid2d",
+    "torus2d",
+    "random_geometric",
+    "complete",
+    "star",
+    "hypercube",
+    "erdos_renyi",
+    "is_connected",
+    "diameter",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """A symmetric communication graph.
+
+    Attributes:
+      adjacency: (N, N) 0/1 symmetric matrix, zero diagonal.
+      name: topology family name.
+      coords: optional (N, d) node coordinates (RGG / grid), for plotting & inits.
+    """
+
+    adjacency: np.ndarray
+    name: str
+    coords: np.ndarray | None = None
+
+    @property
+    def n(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.adjacency.sum(axis=1)
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.nonzero(self.adjacency[i])[0]
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.adjacency.sum()) // 2
+
+    def laplacian(self, normalized: bool = False) -> np.ndarray:
+        a = self.adjacency
+        d = self.degrees
+        lap = np.diag(d) - a
+        if normalized:
+            with np.errstate(divide="ignore"):
+                dinv = np.where(d > 0, 1.0 / np.sqrt(d), 0.0)
+            lap = dinv[:, None] * lap * dinv[None, :]
+        return lap
+
+    def edge_list(self) -> np.ndarray:
+        iu = np.triu_indices(self.n, k=1)
+        mask = self.adjacency[iu] > 0
+        return np.stack([iu[0][mask], iu[1][mask]], axis=1)
+
+
+def _finalize(a: np.ndarray, name: str, coords: np.ndarray | None = None) -> Graph:
+    a = np.asarray(a, dtype=np.float64)
+    np.fill_diagonal(a, 0.0)
+    a = np.maximum(a, a.T)
+    return Graph(adjacency=a, name=name, coords=coords)
+
+
+def chain(n: int) -> Graph:
+    """Path graph on n vertices — the paper's hardest topology (diameter n-1)."""
+    if n < 2:
+        raise ValueError("chain needs n >= 2")
+    a = np.zeros((n, n))
+    idx = np.arange(n - 1)
+    a[idx, idx + 1] = 1.0
+    coords = np.stack([np.arange(n) / max(n - 1, 1), np.zeros(n)], axis=1)
+    return _finalize(a, "chain", coords)
+
+
+def ring(n: int) -> Graph:
+    """Cycle on n vertices — the natural cross-pod gossip topology."""
+    if n < 3:
+        raise ValueError("ring needs n >= 3")
+    a = np.zeros((n, n))
+    idx = np.arange(n)
+    a[idx, (idx + 1) % n] = 1.0
+    ang = 2 * np.pi * np.arange(n) / n
+    coords = 0.5 + 0.5 * np.stack([np.cos(ang), np.sin(ang)], axis=1)
+    return _finalize(a, "ring", coords)
+
+
+def grid2d(rows: int, cols: int | None = None) -> Graph:
+    """2-D grid (no wraparound): rho(W-J) = 1 - Theta(1/N) => gain Omega(sqrt(N))."""
+    cols = cols if cols is not None else rows
+    n = rows * cols
+    a = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            if c + 1 < cols:
+                a[i, i + 1] = 1.0
+            if r + 1 < rows:
+                a[i, i + cols] = 1.0
+    rr, cc = np.divmod(np.arange(n), cols)
+    coords = np.stack([cc / max(cols - 1, 1), rr / max(rows - 1, 1)], axis=1)
+    return _finalize(a, "grid2d", coords)
+
+
+def torus2d(rows: int, cols: int | None = None) -> Graph:
+    """2-D torus (wraparound grid) — matches TPU ICI/pod fabric geometry."""
+    cols = cols if cols is not None else rows
+    n = rows * cols
+    a = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            a[i, r * cols + (c + 1) % cols] = 1.0
+            a[i, ((r + 1) % rows) * cols + c] = 1.0
+    rr, cc = np.divmod(np.arange(n), cols)
+    coords = np.stack([cc / cols, rr / rows], axis=1)
+    return _finalize(a, "torus2d", coords)
+
+
+def complete(n: int) -> Graph:
+    a = np.ones((n, n)) - np.eye(n)
+    return _finalize(a, "complete")
+
+
+def star(n: int) -> Graph:
+    a = np.zeros((n, n))
+    a[0, 1:] = 1.0
+    return _finalize(a, "star")
+
+
+def hypercube(d: int) -> Graph:
+    """d-dimensional hypercube on 2^d vertices."""
+    n = 1 << d
+    a = np.zeros((n, n))
+    for i in range(n):
+        for b in range(d):
+            a[i, i ^ (1 << b)] = 1.0
+    return _finalize(a, "hypercube")
+
+
+def erdos_renyi(n: int, p: float, rng: np.random.Generator) -> Graph:
+    u = rng.random((n, n))
+    a = (np.triu(u, 1) < p).astype(np.float64)
+    return _finalize(a + a.T, "erdos_renyi")
+
+
+def random_geometric(
+    n: int,
+    rng: np.random.Generator,
+    radius: float | None = None,
+    max_tries: int = 200,
+) -> Graph:
+    """Random geometric graph on the unit square with the paper's radius.
+
+    Nodes are uniform in [0,1]^2; edge iff distance <= sqrt(2 log N / N)
+    (Section IV). That radius gives connectivity w.h.p.; we resample until the
+    draw is actually connected (the paper implicitly conditions on connectivity:
+    averaging is ill-posed otherwise).
+    """
+    r = radius if radius is not None else float(np.sqrt(2.0 * np.log(n) / n))
+    for _ in range(max_tries):
+        pts = rng.random((n, 2))
+        d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+        a = (d2 <= r * r).astype(np.float64)
+        np.fill_diagonal(a, 0.0)
+        g = _finalize(a, "rgg", pts)
+        if is_connected(g.adjacency):
+            return g
+    raise RuntimeError(f"could not draw a connected RGG(n={n}, r={r:.4f}) "
+                       f"in {max_tries} tries")
+
+
+def is_connected(adjacency: np.ndarray) -> bool:
+    """BFS connectivity check (vectorized frontier expansion)."""
+    n = adjacency.shape[0]
+    visited = np.zeros(n, dtype=bool)
+    frontier = np.zeros(n, dtype=bool)
+    visited[0] = frontier[0] = True
+    while frontier.any():
+        nxt = (adjacency[frontier].sum(axis=0) > 0) & ~visited
+        visited |= nxt
+        frontier = nxt
+    return bool(visited.all())
+
+
+def diameter(adjacency: np.ndarray, max_iter: int | None = None) -> int:
+    """Graph diameter via repeated boolean matrix powering (N <= few thousand).
+
+    This is also the number of max-consensus iterations Algorithm 1 needs for
+    exact sup-norm agreement (paper, Section III-D).
+    """
+    n = adjacency.shape[0]
+    reach = (adjacency > 0) | np.eye(n, dtype=bool)
+    dist = np.where(adjacency > 0, 1, np.where(np.eye(n, dtype=bool), 0, -1))
+    cur = reach
+    d = 1
+    limit = max_iter if max_iter is not None else n
+    while (dist < 0).any() and d < limit:
+        nxt = cur @ reach
+        newly = nxt & ~cur
+        d += 1
+        dist[newly] = d
+        cur = nxt
+        if not newly.any():
+            break
+    if (dist < 0).any():
+        raise ValueError("graph is disconnected; diameter undefined")
+    return int(dist.max())

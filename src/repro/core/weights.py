@@ -1,0 +1,147 @@
+"""Consensus weight-matrix constructions.
+
+The paper assumes a "foundational weight matrix" W that is doubly stochastic,
+symmetric, satisfies W1 = 1, and rho(W - J) < 1 (Xiao-Boyd conditions, Eq. 2).
+It uses Metropolis-Hastings weights in all experiments and compares against the
+numerically optimized weights of Xiao & Boyd [10].
+
+All constructions here are *locally computable* (each node needs only its own
+and its neighbours' degrees) except `optimal_weights`, which reproduces the
+centralized spectral-norm-minimizing baseline from the paper's comparison set.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .topology import Graph
+
+__all__ = [
+    "metropolis_hastings",
+    "max_degree",
+    "lazy",
+    "best_constant",
+    "optimal_weights",
+    "check_consensus_matrix",
+    "averaging_matrix",
+]
+
+
+def averaging_matrix(n: int) -> np.ndarray:
+    """J = (1/n) 1 1^T."""
+    return np.full((n, n), 1.0 / n)
+
+
+def metropolis_hastings(graph: Graph) -> np.ndarray:
+    """W_ij = 1 / (1 + max(d_i, d_j)) on edges; diagonal absorbs the rest.
+
+    Satisfies the Xiao-Boyd conditions on any connected graph and is the weight
+    matrix used throughout the paper's experiments. On a chain its spectrum is
+    lambda_i = 1/3 + (2/3) cos(pi (i-1)/N) (paper, Section III-C).
+    """
+    a = graph.adjacency
+    d = graph.degrees
+    pair_max = np.maximum(d[:, None], d[None, :])
+    w = np.where(a > 0, 1.0 / (1.0 + pair_max), 0.0)
+    np.fill_diagonal(w, 0.0)
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def max_degree(graph: Graph) -> np.ndarray:
+    """W = I - L / (d_max + 1): uniform edge weight, always doubly stochastic."""
+    d_max = float(graph.degrees.max())
+    return np.eye(graph.n) - graph.laplacian() / (d_max + 1.0)
+
+
+def lazy(w: np.ndarray) -> np.ndarray:
+    """The local mapping W -> (I + W)/2.
+
+    Transforms any stochastic W into one with all-positive eigenvalues
+    (paper, end of Section III-A), guaranteeing |lambda_N| <= |lambda_2| as
+    required by Theorem 1, at the cost of a constant-factor slowdown that does
+    not change order-wise asymptotics.
+    """
+    return 0.5 * (np.eye(w.shape[0]) + w)
+
+
+def best_constant(graph: Graph) -> np.ndarray:
+    """Best-constant edge weight: W = I - sigma L, sigma = 2/(l_1 + l_{n-1}).
+
+    The optimal single-parameter weight matrix (Xiao-Boyd); a cheap, closed-form
+    stand-in for the full optimal weights.
+    """
+    lap = graph.laplacian()
+    eig = np.linalg.eigvalsh(lap)
+    sigma = 2.0 / (eig[-1] + eig[1])
+    return np.eye(graph.n) - sigma * lap
+
+
+def optimal_weights(
+    graph: Graph,
+    iters: int = 500,
+    step0: float = 1.0,
+    tol: float = 1e-10,
+    verbose: bool = False,
+) -> np.ndarray:
+    """Symmetric weights minimizing rho(W - J) (Xiao-Boyd [10] baseline).
+
+    We solve  min_w rho(I - B diag(w) B^T - J)  over edge weights w by projected
+    subgradient descent on the spectral radius (the problem is convex in w; a
+    subgradient of lambda_max at eigenvector u is -(u_i - u_j)^2 per edge, and of
+    -lambda_min is +(v_i - v_j)^2). Polyak-style diminishing steps. For the
+    N <= ~500 graphs in the paper's experiments this converges comfortably; it
+    reproduces the qualitative Fig. 1/3 behaviour (constant-factor gain over MH,
+    no change in scaling order — the paper's point).
+    """
+    edges = graph.edge_list()
+    n, m = graph.n, len(edges)
+    j = averaging_matrix(n)
+
+    def build(w_e: np.ndarray) -> np.ndarray:
+        w = np.eye(n)
+        for k, (a, b) in enumerate(edges):
+            w[a, b] = w[b, a] = w_e[k]
+        w[np.diag_indices(n)] = 1.0 - (w.sum(axis=1) - np.diag(w))
+        return w
+
+    # Init from Metropolis-Hastings edge weights.
+    mh = metropolis_hastings(graph)
+    w_e = np.array([mh[a, b] for a, b in edges])
+    best_w_e, best_rho = w_e.copy(), np.inf
+    for t in range(iters):
+        w = build(w_e)
+        vals, vecs = np.linalg.eigh(w - j)
+        lo, hi = vals[0], vals[-1]
+        rho = max(abs(lo), abs(hi))
+        if rho < best_rho - tol:
+            best_rho, best_w_e = rho, w_e.copy()
+        # subgradient of rho wrt edge weights
+        if hi >= abs(lo):
+            u = vecs[:, -1]
+            g = -((u[edges[:, 0]] - u[edges[:, 1]]) ** 2)
+        else:
+            v = vecs[:, 0]
+            g = (v[edges[:, 0]] - v[edges[:, 1]]) ** 2
+        gn = np.linalg.norm(g)
+        if gn < 1e-15:
+            break
+        w_e = w_e - (step0 / np.sqrt(t + 1.0)) * g / gn
+        if verbose and t % 100 == 0:
+            print(f"  opt_weights iter {t}: rho={rho:.6f} best={best_rho:.6f}")
+    return build(best_w_e)
+
+
+def check_consensus_matrix(
+    w: np.ndarray, atol: float = 1e-8, require_contraction: bool = True
+) -> None:
+    """Assert the Xiao-Boyd convergence conditions (Eq. 2). Raises on violation."""
+    n = w.shape[0]
+    one = np.ones(n)
+    if not np.allclose(w @ one, one, atol=atol):
+        raise ValueError("W 1 != 1 (row sums)")
+    if not np.allclose(one @ w, one, atol=atol):
+        raise ValueError("1^T W != 1^T (column sums)")
+    if require_contraction:
+        rho = np.max(np.abs(np.linalg.eigvals(w - averaging_matrix(n))))
+        if not rho < 1.0:
+            raise ValueError(f"rho(W - J) = {rho} >= 1")

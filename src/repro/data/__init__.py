@@ -1,0 +1,3 @@
+from .synthetic import SyntheticStream, prefetch
+
+__all__ = ["SyntheticStream", "prefetch"]

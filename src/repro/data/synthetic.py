@@ -1,0 +1,103 @@
+"""Deterministic synthetic LM data stream.
+
+Design goals of a production input pipeline, scaled to this repo:
+
+  * **Stateless indexing** — ``batch_at(step)`` is a pure function of
+    (seed, step, shard), so resume-from-checkpoint replays the exact stream
+    with no iterator state to save.
+  * **Host sharding** — each host materializes only its ``(shard, num_shards)``
+    slice of the global batch; shards use disjoint counter streams.
+  * **Double-buffered prefetch** — a one-deep background thread hides
+    generation latency behind the train step (``prefetch`` wrapper).
+
+Token model: a noisy affine-recurrence language,
+``t_{i+1} = (a * t_i + b) mod V`` with probability (1 - noise) else uniform —
+learnable structure (a 100M model visibly drops loss within hundreds of
+steps) while needing no external data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+from ..configs.base import ArchConfig
+
+__all__ = ["SyntheticStream", "prefetch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticStream:
+    cfg: ArchConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    noise: float = 0.2
+    shard: int = 0
+    num_shards: int = 1
+
+    @property
+    def local_batch(self) -> int:
+        if self.global_batch % self.num_shards:
+            raise ValueError("global_batch must divide among shards")
+        return self.global_batch // self.num_shards
+
+    def _rng(self, step: int) -> np.random.Generator:
+        # counter-based: (seed, step, shard) -> independent Philox streams
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard])
+        )
+
+    def batch_at(self, step: int) -> dict:
+        rng = self._rng(step)
+        b, t, v = self.local_batch, self.seq_len, self.cfg.vocab_size
+        a_coef = 7 + 2 * (self.seed % 5)  # odd multiplier, co-prime-ish with V
+        toks = np.empty((b, t + 1), dtype=np.int32)
+        toks[:, 0] = rng.integers(0, v, size=b)
+        noise_mask = rng.random((b, t)) < self.noise
+        noise_vals = rng.integers(0, v, size=(b, t))
+        for i in range(t):
+            nxt = (toks[:, i].astype(np.int64) * a_coef + 3) % v
+            toks[:, i + 1] = np.where(noise_mask[:, i], noise_vals[:, i], nxt)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.cfg.family == "encdec":
+            batch["frames"] = rng.standard_normal(
+                (b, self.cfg.encoder_len, self.cfg.d_model)
+            ).astype(np.float32)
+        if self.cfg.family == "vlm":
+            batch["image_embeds"] = rng.standard_normal(
+                (b, self.cfg.num_image_tokens, self.cfg.d_model)
+            ).astype(np.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def prefetch(stream: SyntheticStream, start_step: int = 0, depth: int = 2):
+    """Background-thread prefetch (double buffering by default)."""
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+
+    def worker():
+        step = start_step
+        while not stop.is_set():
+            try:
+                q.put(stream.batch_at(step), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    th = threading.Thread(target=worker, daemon=True)
+    th.start()
+    try:
+        while True:
+            yield q.get()
+    finally:
+        stop.set()

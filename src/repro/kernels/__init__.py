@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+* ``consensus_update`` — fused two-tap accelerated-gossip update (Eq. 4a-4c),
+  the bandwidth-bound elementwise half of a gossip round over gradient buckets.
+* ``gossip_matvec``    — blocked W @ X, the paper-scale simulator inner loop.
+* ``ssd_chunk``        — Mamba-2 SSD intra-chunk block (MXU-matmul dual form),
+  the dominant compute of the ssm/hybrid assigned architectures.
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd public
+wrapper in ``ops.py`` (interpret mode on CPU, compiled VMEM-tiled on TPU).
+"""
+from . import ops, ref
+from .ops import consensus_update, gossip_matvec, ssd_scan
+
+__all__ = ["ops", "ref", "consensus_update", "gossip_matvec", "ssd_scan"]

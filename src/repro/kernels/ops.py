@@ -1,0 +1,310 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle shape normalization (flattening, tile padding), backend
+detection (interpret mode on CPU, compiled on TPU), autodiff (Pallas calls
+have no reverse-mode rule: ``ssd_scan`` is a ``jax.custom_vjp`` — kernel
+forward, differentiable chunked-jnp backward, the standard "kernel fwd /
+XLA bwd" production pattern), and the inter-chunk associative scan for SSD.
+Models and the simulator call these — never the raw ``*_pallas`` entries.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental.custom_partitioning import custom_partitioning
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .consensus_update import LANES, consensus_update_pallas
+from .gossip_matvec import gossip_matvec_pallas
+from .ref import ssd_chunk_ref
+from .ssd_chunk import ssd_chunk_pallas
+
+__all__ = ["consensus_update", "gossip_matvec", "ssd_scan", "use_interpret"]
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode everywhere except on a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# consensus_update: fused y = a*xw + b*x + c*xp over arbitrary-shape operands.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def consensus_update(xw, x, xp, a, b, c, *, block_rows: int = 256):
+    """Fused two-tap update. Operands: any (matching) shape; a/b/c scalars."""
+    shape = xw.shape
+    dtype = xw.dtype
+    flat = xw.size
+    rows = _round_up(max(_round_up(flat, LANES) // LANES, 1), block_rows)
+    pad = rows * LANES - flat
+
+    def prep(t):
+        t = t.reshape(-1)
+        if pad:
+            t = jnp.pad(t, (0, pad))
+        return t.reshape(rows, LANES)
+
+    coef = jnp.stack(
+        [jnp.asarray(a, dtype), jnp.asarray(b, dtype), jnp.asarray(c, dtype)]
+    ).reshape(1, 3)
+    y = consensus_update_pallas(
+        prep(xw), prep(x), prep(xp), coef,
+        block_rows=block_rows, interpret=use_interpret(),
+    )
+    return y.reshape(-1)[:flat].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# gossip_matvec: Y = W @ X with tile padding.
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def gossip_matvec(w, x):
+    """Y = W(N,N) @ X(N,F), fp32 accumulation, auto-padded to MXU tiles."""
+    n, f = w.shape[0], x.shape[1]
+    bm = bk = 128
+    bf = 512 if f > 256 else 128
+    np_, fp_ = _round_up(n, 128), _round_up(f, bf)
+    wp = jnp.pad(w, ((0, np_ - n), (0, np_ - n)))
+    xp_ = jnp.pad(x, ((0, np_ - n), (0, fp_ - f)))
+    y = gossip_matvec_pallas(
+        wp, xp_, bm=bm, bk=bk, bf=bf, interpret=use_interpret()
+    )
+    return y[:n, :f]
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan: full-sequence Mamba-2 SSD = intra-chunk kernel + inter-chunk scan.
+# ---------------------------------------------------------------------------
+#
+# pallas_call is an opaque custom call: without a partitioning rule GSPMD
+# replicates it (every device would run the FULL global grid — observed as a
+# 393216-trip sequential loop per device in the first dry-run). The
+# custom_partitioning wrapper below tells GSPMD the op is embarrassingly
+# parallel over (batch*chunks, heads): each device runs its LOCAL grid, with
+# B/C group projections replicated over the head ('model') axis.
+
+_FORCE_REF = contextvars.ContextVar("ssd_force_ref", default=False)
+
+
+def in_manual_pod_region() -> bool:
+    """True while tracing inside the pod-manual shard_map (consensus mode).
+
+    Model code consults this to avoid constructs XLA cannot partition under
+    manual subgroups on this jaxlib: Pallas custom_partitioning, lax.top_k,
+    and batched scatter/gather (MoE dispatch)."""
+    return _FORCE_REF.get()
+
+
+@contextlib.contextmanager
+def force_ssd_ref():
+    """Trace-time escape hatch: jax's custom_partitioning cannot parse the
+    manual-subgroup shardings produced inside a partial-auto shard_map
+    (NotImplementedError: 'Unhandled OpSharding type ... manual'), so the
+    consensus-mode train step traces the SSD intra-chunk block through the
+    pure-jnp oracle (GSPMD shards its einsums natively). Everything outside
+    the pod-manual region keeps the Pallas kernel."""
+    tok = _FORCE_REF.set(True)
+    try:
+        yield
+    finally:
+        _FORCE_REF.reset(tok)
+
+
+def _ssd_chunk_dispatch(xg, ag, bg, cg):
+    if _FORCE_REF.get():
+        return ssd_chunk_ref(xg, ag, bg, cg)
+    if jax.device_count() == 1:
+        return ssd_chunk_pallas(xg, ag, bg, cg, interpret=use_interpret())
+    return _ssd_chunk_cp(xg, ag, bg, cg)
+
+
+@custom_partitioning
+def _ssd_chunk_cp(xg, ag, bg, cg):
+    return ssd_chunk_pallas(xg, ag, bg, cg, interpret=use_interpret())
+
+
+def _first_dims_spec(shardings, ndim_map):
+    """(n_axis, h_axis) from the x operand's sharding; None when replicated."""
+    xs = shardings[0]
+    spec = xs.spec if isinstance(xs, NamedSharding) else P()
+    parts = list(spec) + [None] * 4
+    return parts[0], parts[1]
+
+
+def _ssd_out_shardings(mesh, n_ax, h_ax):
+    mk = lambda *s: NamedSharding(mesh, P(*s))
+    return (
+        mk(n_ax, h_ax, None, None),  # y
+        mk(n_ax, h_ax, None, None),  # state
+        mk(n_ax, h_ax, None, None),  # din
+        mk(n_ax, h_ax, None, None),  # dout
+    )
+
+
+def _ssd_infer(mesh, arg_shapes, result_shape):
+    shardings = [a.sharding for a in arg_shapes]
+    n_ax, h_ax = _first_dims_spec(shardings, None)
+    return _ssd_out_shardings(mesh, n_ax, h_ax)
+
+
+def _ssd_partition(mesh, arg_shapes, result_shape):
+    shardings = [a.sharding for a in arg_shapes]
+    n_ax, h_ax = _first_dims_spec(shardings, None)
+    mk = lambda *s: NamedSharding(mesh, P(*s))
+    arg_shardings = (
+        mk(n_ax, h_ax, None, None),   # x
+        mk(n_ax, h_ax, None, None),   # a
+        mk(n_ax, None, None, None),   # b: groups replicated over 'model'
+        mk(n_ax, None, None, None),   # c
+    )
+    out_shardings = _ssd_out_shardings(mesh, n_ax, h_ax)
+
+    def lower_fn(xg, ag, bg, cg):
+        return ssd_chunk_pallas(xg, ag, bg, cg, interpret=use_interpret())
+
+    return mesh, lower_fn, out_shardings, arg_shardings
+
+
+_ssd_chunk_cp.def_partition(
+    partition=_ssd_partition,
+    infer_sharding_from_operands=_ssd_infer,
+    decode_shardings=True,
+    # Shardy rule: n (batch*chunks) and h (heads) are parallel factors; the
+    # chunk/state/head_dim factors stay whole per program; g (groups) is
+    # replicated (its head mapping happens inside the kernel grid).
+    sharding_rule="n h l p, n h o l, n g l s, n g l s -> n h l p, n h s p, n h o l, n h o q",
+)
+
+
+def _ssd_core(x, a, b, c, h0, chunk: int, use_kernel: bool):
+    """Chunked SSD on pre-padded (T % chunk == 0) fp32 operands.
+
+    The intra-chunk block runs through the Pallas kernel (fwd) or the pure
+    jnp oracle (differentiable bwd recompute); the inter-chunk recurrence is
+    a log-depth associative scan either way.
+
+    Layout: all intermediate tensors keep the (data-sharded) batch dim major
+    and the (model-sharded) head dim separate — merging them would force
+    GSPMD to replicate the SSD einsums (verified in the dry-run; this exact
+    bug cost 19x flops before the layout was fixed).
+    """
+    bsz, t, h, dh = x.shape
+    g = b.shape[2]
+    ds = b.shape[-1]
+    nc = t // chunk
+    hg = h // g
+
+    def to_blocks(v, nh, feat):
+        # (B, T, nh, f) -> (B*nc, nh, L, f); B stays the major factor of dim0
+        v = v.reshape(bsz, nc, chunk, nh, feat)
+        v = jnp.moveaxis(v, 3, 2)
+        return v.reshape(bsz * nc, nh, chunk, feat)
+
+    xg = to_blocks(x.astype(jnp.float32), h, dh)
+    bg = to_blocks(b.astype(jnp.float32), g, ds)
+    cg = to_blocks(c.astype(jnp.float32), g, ds)
+    ag = a.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    ag = jnp.moveaxis(ag, 3, 2).reshape(bsz * nc, h, 1, chunk)
+
+    if use_kernel:
+        y_intra, s_chunk, din, dout = _ssd_chunk_dispatch(xg, ag, bg, cg)
+    else:
+        y_intra, s_chunk, din, dout = ssd_chunk_ref(xg, ag, bg, cg)
+
+    s_chunk = s_chunk.reshape(bsz, nc, h, ds, dh)
+    dout = dout.reshape(bsz, nc, h)
+    din = din.reshape(bsz, nc, h, chunk)
+
+    def combine(left, right):
+        dl, sl = left
+        dr, sr = right
+        return dl * dr, dr[..., None, None] * sl + sr
+
+    d_inc, h_inc = jax.lax.associative_scan(combine, (dout, s_chunk), axis=1)
+
+    h_shift = jnp.concatenate([jnp.zeros_like(h_inc[:, :1]), h_inc[:, :-1]], axis=1)
+    d_shift = jnp.concatenate([jnp.ones_like(d_inc[:, :1]), d_inc[:, :-1]], axis=1)
+    h_prev = h_shift + d_shift[..., None, None] * h0[:, None]
+
+    # carry-in: y_inter = din * (C @ h_prev), grouped einsum (no broadcast)
+    c_blk = cg.reshape(bsz, nc, g, chunk, ds)
+    hp_g = h_prev.reshape(bsz, nc, g, hg, ds, dh)
+    y_inter = jnp.einsum("bngls,bnghsd->bnghld", c_blk, hp_g)
+    y_inter = y_inter.reshape(bsz, nc, h, chunk, dh)
+    y = y_intra.reshape(bsz, nc, h, chunk, dh) + din[..., None] * y_inter
+
+    h_final = h_inc[:, -1] + d_inc[:, -1][..., None, None] * h0
+    y = jnp.moveaxis(y, 2, 3).reshape(bsz, t, h, dh)
+    return y, h_final
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd_cv(x, a, b, c, h0, chunk):
+    return _ssd_core(x, a, b, c, h0, chunk, use_kernel=True)
+
+
+def _ssd_cv_fwd(x, a, b, c, h0, chunk):
+    out = _ssd_core(x, a, b, c, h0, chunk, use_kernel=True)
+    return out, (x, a, b, c, h0)
+
+
+def _ssd_cv_bwd(chunk, res, cotangents):
+    x, a, b, c, h0 = res
+    _, vjp = jax.vjp(
+        lambda x_, a_, b_, c_, h0_: _ssd_core(x_, a_, b_, c_, h0_, chunk, use_kernel=False),
+        x, a, b, c, h0,
+    )
+    return vjp(cotangents)
+
+
+_ssd_cv.defvjp(_ssd_cv_fwd, _ssd_cv_bwd)
+
+
+def ssd_scan(x, a, b, c, h0=None, *, chunk: int = 128):
+    """Chunked SSD selective scan. (Not jitted here: callers jit the whole
+    step, and the force_ssd_ref trace-time flag must not be frozen into a
+    jit cache entry.)
+
+    Args:
+      x: (B, T, H, dh) inputs (post in-proj, post conv, gated branch).
+      a: (B, T, H) per-step log decay (must be <= 0 for stability).
+      b: (B, T, G, ds) input->state projection, G groups (mamba2: G=1);
+         heads are group-mapped inside the kernel grid, never broadcast.
+      c: (B, T, G, ds) state->output projection.
+      h0: optional (B, H, ds, dh) initial state (decode/prefill carry).
+      chunk: intra-chunk length (multiple of 128 on real TPU).
+
+    Returns: (y (B, T, H, dh) fp32, h_final (B, H, ds, dh) fp32).
+    """
+    bsz, t, h, dh = x.shape
+    ds = b.shape[-1]
+    t_orig = t
+    if t % chunk:
+        # pad to a chunk multiple with identity dynamics: a=0 (decay exp(0)=1)
+        # and x=b=0 leave the state untouched; padded y rows are sliced off.
+        pad = chunk - t % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, ds, dh), dtype=jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+    y, h_final = _ssd_cv(
+        x.astype(jnp.float32), a.astype(jnp.float32),
+        b.astype(jnp.float32), c.astype(jnp.float32), h0, chunk
+    )
+    return y[:, :t_orig], h_final

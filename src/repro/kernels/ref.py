@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` implements the exact same math as its kernel with plain jnp
+ops — no tiling, no pallas. Tests sweep shapes/dtypes and assert_allclose
+kernel-vs-oracle; the simulator/model layers can also run directly on these
+for debugging (``backend="jax"``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["consensus_update_ref", "gossip_matvec_ref", "ssd_chunk_ref", "ssd_scan_ref"]
+
+
+def consensus_update_ref(xw, x, xp, a, b, c):
+    """y = a*xw + b*x + c*xp (elementwise, any shape)."""
+    return a * xw + b * x + c * xp
+
+
+def gossip_matvec_ref(w, x):
+    """Y = W @ X in fp32 accumulation."""
+    return jnp.dot(
+        w.astype(jnp.float32), x.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ssd_chunk_ref(x, a, b, c):
+    """Intra-chunk SSD oracle (grouped B/C, no head broadcast).
+
+    x (N, H, L, dh), a (N, H, 1, L), b (N, G, L, ds), c (N, G, L, ds) ->
+    (y (N,H,L,dh), state (N,H,ds,dh), din (N,H,1,L), dout (N,H,1,1)).
+    Heads are processed in G groups of H/G; all einsums keep the group dim
+    factored so no (N,H,L,ds) broadcast is ever materialized.
+    """
+    n, h, l, dh = x.shape
+    g = b.shape[1]
+    ds = b.shape[-1]
+    hg = h // g
+    a2 = a[:, :, 0, :].astype(jnp.float32)            # (N, H, L)
+    cums = jnp.cumsum(a2, axis=-1)
+    diff = cums[..., :, None] - cums[..., None, :]    # (N, H, L, L)
+    causal = jnp.tril(jnp.ones((l, l), dtype=bool))
+    decay = jnp.where(causal, jnp.exp(jnp.where(causal, diff, 0.0)), 0.0)
+
+    xg = x.astype(jnp.float32).reshape(n, g, hg, l, dh)
+    decg = decay.reshape(n, g, hg, l, l)
+    base = jnp.einsum("ngls,ngms->nglm", c.astype(jnp.float32), b.astype(jnp.float32))
+    scores = base[:, :, None] * decg                  # (N, G, Hg, L, L)
+    y = jnp.einsum("nghlm,nghmd->nghld", scores, xg).reshape(n, h, l, dh)
+
+    dlast = cums[..., -1]                             # (N, H)
+    w_state = jnp.exp(dlast[..., None] - cums)        # (N, H, L)
+    wg = w_state.reshape(n, g, hg, l)
+    state = jnp.einsum(
+        "ngls,nghl,nghld->nghsd", b.astype(jnp.float32), wg, xg
+    ).reshape(n, h, ds, dh)
+    din = jnp.exp(cums)[:, :, None, :]                # (N, H, 1, L)
+    dout = jnp.exp(dlast)[:, :, None, None]           # (N, H, 1, 1)
+    return y, state, din, dout
+
+
+def ssd_scan_ref(x, a, b, c, h0=None):
+    """Full-sequence SSD oracle via the naive per-step recurrence.
+
+    x (B, T, H, dh), a (B, T, H), b (B, T, H, ds), c (B, T, H, ds).
+    h_t = exp(a_t) h_{t-1} + b_t (x) x_t ;   y_t = c_t . h_t
+    Returns (y (B,T,H,dh), h_final (B,H,ds,dh)).
+    """
+    bsz, t, h, dh = x.shape
+    ds = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, ds, dh), dtype=jnp.float32)
+
+    def step(hprev, inp):
+        xt, at, bt, ct = inp       # (B,H,dh), (B,H), (B,H,ds), (B,H,ds)
+        hnew = jnp.exp(at)[..., None, None] * hprev + jnp.einsum(
+            "bhs,bhd->bhsd", bt, xt
+        )
+        yt = jnp.einsum("bhs,bhsd->bhd", ct, hnew)
+        return hnew, yt
+
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(c, 1, 0).astype(jnp.float32),
+    )
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_fin

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: Mamba-2 SSD intra-chunk block (state-space duality).
+
+The dominant compute of the ssm/hybrid assigned architectures (mamba2-780m,
+zamba2-7b). The SSD decomposition (Dao & Gu, arXiv:2405.21060) splits the
+selective-scan into:
+
+  * intra-chunk (this kernel, MXU-friendly dense matmuls):
+        cums_i   = sum_{k<=i} a_k                       (per-head log decay)
+        L_ij     = exp(cums_i - cums_j)  for i >= j     (causal decay mask)
+        Y_intra  = ((C B^T) .* L) X                     (L x L attention-like)
+        S_chunk  = (B .* exp(cums_last - cums))^T X     (ds x dh state update)
+        d_in_i   = exp(cums_i)                          (carry-in decay)
+        d_out    = exp(cums_last)                       (chunk decay)
+  * inter-chunk (log-depth associative scan in the ops wrapper):
+        H_c      = d_out_c * H_{c-1} + S_chunk_c
+        Y_i     += d_in_i * (C_i H_{prev(c)})
+
+Hardware adaptation (DESIGN.md): the original recurrent scan is
+sequential/VPU-bound; the chunked dual form turns >90% of the FLOPs into
+(L x ds)(ds x dh) and (L x L)(L x dh) matmuls that run on the MXU.
+
+Grid & sharding: 2-D grid (batch*chunks, heads). The batch*chunks axis keeps
+the (data-sharded) batch dim MAJOR so GSPMD shards the grid over 'data'; the
+head axis shards over 'model'. B/C projections arrive per GROUP
+(B (G, L, ds), mamba2 G=1) and are index-mapped to heads inside the grid —
+no H-times broadcast is ever materialized in HBM.
+
+VMEM per program (L=256, ds=128, dh=64, fp32): x 64KB + b,c 2x128KB +
+scores 256KB + y 64KB + state 32KB < 1 MB. L and ds should be multiples of
+128 (lane tile); dh=64 wastes half a lane on X/Y loads — acceptable, the
+matmul M/K dims stay 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_chunk_kernel", "ssd_chunk_pallas"]
+
+
+def ssd_chunk_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_ref, din_ref, dout_ref):
+    """One (batch-chunk, head) SSD block. Block shapes (grid dims squeezed):
+
+    x (1, 1, L, dh), a (1, 1, 1, L), b (1, 1, L, ds), c (1, 1, L, ds) ->
+    y (1, 1, L, dh), state (1, 1, ds, dh), din (1, 1, 1, L), dout (1, 1, 1, 1).
+    """
+    x = x_ref[0, 0]
+    a = a_ref[0, 0, 0]        # (L,)
+    b = b_ref[0, 0]
+    c = c_ref[0, 0]
+    l = x.shape[0]
+
+    cums = jnp.cumsum(a)                      # (L,)
+    diff = cums[:, None] - cums[None, :]      # (L, L)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    causal = ii >= jj
+    decay = jnp.where(causal, jnp.exp(jnp.where(causal, diff, 0.0)), 0.0)
+
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32) * decay
+    y_ref[0, 0] = jnp.dot(scores, x, preferred_element_type=jnp.float32)
+
+    dlast = cums[l - 1]
+    w_state = jnp.exp(dlast - cums)           # (L,)
+    state_ref[0, 0] = jnp.dot(
+        (b * w_state[:, None]).T, x, preferred_element_type=jnp.float32
+    )
+    din_ref[0, 0, 0] = jnp.exp(cums)
+    dout_ref[0, 0, 0, 0] = jnp.exp(dlast)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(
+    x: jax.Array,   # (N, H, L, dh)   N = batch * nchunks
+    a: jax.Array,   # (N, H, 1, L)
+    b: jax.Array,   # (N, G, L, ds)   G groups broadcast to H heads in-grid
+    c: jax.Array,   # (N, G, L, ds)
+    *,
+    interpret: bool = False,
+):
+    """Returns (y (N,H,L,dh), state (N,H,ds,dh), din (N,H,1,L), dout (N,H,1,1))."""
+    n, h, l, dh = x.shape
+    g = b.shape[1]
+    ds = b.shape[-1]
+    heads_per_group = h // g
+    grid = (n, h)
+
+    def bc_map(i, j):
+        return (i, j // heads_per_group, 0, 0)
+
+    return pl.pallas_call(
+        ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, l, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, l), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, l, ds), bc_map),
+            pl.BlockSpec((1, 1, l, ds), bc_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, ds, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, l), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, h, l, dh), jnp.float32),
+            jax.ShapeDtypeStruct((n, h, ds, dh), jnp.float32),
+            jax.ShapeDtypeStruct((n, h, 1, l), jnp.float32),
+            jax.ShapeDtypeStruct((n, h, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, a, b, c)

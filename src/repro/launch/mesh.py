@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is the
+consensus fabric (DCN), 'data'/'model' stay on ICI.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before first jax init, everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_cpu_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh(pods: int = 1):
+    """Degenerate mesh for CPU examples/tests on however many host devices
+    are available (1 by default; tests force more via XLA_FLAGS)."""
+    n = jax.device_count()
+    if pods > 1:
+        if n % pods:
+            raise ValueError(f"{n} devices not divisible into {pods} pods")
+        return jax.make_mesh((pods, n // pods, 1), ("pod", "data", "model"))
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,7 @@
+"""Model zoo: scan-over-layers JAX implementations of the assigned families
+(dense / moe / ssm / hybrid decoder LMs, enc-dec, vlm) behind one API."""
+from . import api, attention, common, encdec, lm, mlp, ssm, vlm
+from .api import Model, build
+
+__all__ = ["api", "attention", "common", "encdec", "lm", "mlp", "ssm", "vlm",
+           "Model", "build"]

@@ -1,0 +1,95 @@
+"""Unified model API: one entry point per (family-dispatched) operation.
+
+The trainer, serving engine, and dry-run launcher all work against this
+interface; they never touch family modules directly.
+
+Batch layouts (all int32 tokens; stub-frontend embeddings bf16):
+  dense/moe/ssm/hybrid : {tokens (B,T), labels (B,T)}
+  encdec               : {frames (B,S_enc,D), tokens (B,T), labels (B,T)}
+  vlm                  : {tokens (B,T), image_embeds (B,N_img,D), labels (B,T)}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import encdec, lm, vlm
+from .common import Activations, init_params
+
+PyTree = Any
+
+__all__ = ["Model", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    param_specs: PyTree
+    loss: Callable            # (params, batch, act=None) -> scalar loss
+    prefill: Callable         # (params, batch, max_seq, act=None) -> (logits, cache)
+    decode: Callable          # (params, token, pos, cache, act=None) -> (logits, cache')
+    cache_specs: Callable     # (batch, max_seq) -> tree of (shape, axes, dtype)
+
+    def init(self, key: jax.Array) -> PyTree:
+        return init_params(self.param_specs, key)
+
+    def batch_spec(self, batch: int, seq: int) -> dict:
+        """(shape, logical axes, dtype) tree for one training batch."""
+        tok = ((batch, seq), ("batch", None), jnp.int32)
+        spec = {"tokens": tok, "labels": tok}
+        if self.cfg.family == "encdec":
+            spec["frames"] = (
+                (batch, self.cfg.encoder_len, self.cfg.d_model),
+                ("batch", None, "embed_act"), jnp.bfloat16,
+            )
+        if self.cfg.family == "vlm":
+            spec["image_embeds"] = (
+                (batch, self.cfg.num_image_tokens, self.cfg.d_model),
+                ("batch", None, "embed_act"), jnp.bfloat16,
+            )
+        return spec
+
+
+def build(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "ssm", "hybrid"):
+        return Model(
+            cfg=cfg,
+            param_specs=lm.param_specs(cfg),
+            loss=lambda p, b, act=None: lm.loss_fn(p, b["tokens"], b["labels"], cfg, act),
+            prefill=lambda p, b, max_seq, act=None: lm.prefill(
+                p, b["tokens"], cfg, max_seq, act
+            ),
+            decode=lambda p, tok, pos, cache, act=None: lm.decode_step(p, tok, pos, cache, cfg, act=act),
+            cache_specs=lambda batch, max_seq: lm.cache_specs(cfg, batch, max_seq),
+        )
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            param_specs=encdec.param_specs(cfg),
+            loss=lambda p, b, act=None: encdec.loss_fn(
+                p, b["frames"], b["tokens"], b["labels"], cfg, act
+            ),
+            prefill=lambda p, b, max_seq, act=None: encdec.prefill(
+                p, b["frames"], b["tokens"], cfg, max_seq, act
+            ),
+            decode=lambda p, tok, pos, cache, act=None: encdec.decode_step(p, tok, pos, cache, cfg, act=act),
+            cache_specs=lambda batch, max_seq: encdec.cache_specs(cfg, batch, max_seq),
+        )
+    if cfg.family == "vlm":
+        return Model(
+            cfg=cfg,
+            param_specs=vlm.param_specs(cfg),
+            loss=lambda p, b, act=None: vlm.loss_fn(
+                p, b["tokens"], b["image_embeds"], b["labels"], cfg, act
+            ),
+            prefill=lambda p, b, max_seq, act=None: vlm.prefill(
+                p, b["tokens"], b["image_embeds"], cfg, max_seq, act
+            ),
+            decode=lambda p, tok, pos, cache, act=None: vlm.decode_step(p, tok, pos, cache, cfg, act=act),
+            cache_specs=lambda batch, max_seq: vlm.cache_specs(cfg, batch, max_seq),
+        )
+    raise ValueError(cfg.family)

@@ -1,0 +1,178 @@
+"""Grouped-query attention: training (full causal / sliding-window), prefill
+(causal + cache write), decode (single query vs cache), and cross-attention.
+
+Sharding-aware design decisions (verified in the multi-pod dry-run):
+
+  * GQA is computed by *repeating* KV heads up to the query-head count
+    (a gather, cheap and shardable) rather than reshaping Q to
+    (Hkv, group) — that reshape splits the model-sharded head dim and forces
+    GSPMD to replicate the score computation.
+  * Long sequences (q_len >= CHUNK_THRESHOLD) use a query-chunked softmax:
+    a lax.scan over Q blocks materializes (B, H, Cq, S) scores instead of
+    (B, H, T, S) — prefill_32k would otherwise need a 4 TB score tensor.
+    Numerically identical to full softmax (each row is complete).
+
+Scores and softmax run in fp32; masks are built from iota comparisons.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, apply_rope, rotary
+
+__all__ = [
+    "attn_param_specs",
+    "qkv_project",
+    "out_project",
+    "mha",
+    "decode_mha",
+]
+
+NEG_INF = -1e30
+CHUNK_THRESHOLD = 8192   # q_len above this uses the chunked path
+Q_CHUNK = 1024
+
+
+def attn_param_specs(
+    d_model: int, n_heads: int, n_kv: int, head_dim: int, cross: bool = False
+) -> dict:
+    """Q/K/V/O projection specs. ``cross`` adds a tanh gate (VLM-style)."""
+    specs = {
+        "wq": ParamSpec((d_model, n_heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((n_heads, head_dim, d_model), ("heads", "head_dim", "embed")),
+    }
+    if cross:
+        specs["gate"] = ParamSpec((1,), (None,), init="zeros")
+    return specs
+
+
+def qkv_project(p: dict, x: jax.Array, kv_x: jax.Array | None = None):
+    """x (B,T,D) -> q (B,T,Hq,hd), k/v (B,S,Hkv,hd). kv_x: cross-attn source."""
+    src = x if kv_x is None else kv_x
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(dt))
+    return q, k, v
+
+
+def out_project(p: dict, o: jax.Array) -> jax.Array:
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(o.dtype))
+    if "gate" in p:
+        out = jnp.tanh(p["gate"].astype(o.dtype)) * out
+    return out
+
+
+def _expand_kv(k: jax.Array, h_q: int) -> jax.Array:
+    """(B,S,Hkv,hd) -> (B,S,Hq,hd) by repeating each kv head G times."""
+    hkv = k.shape[2]
+    if hkv == h_q:
+        return k
+    return jnp.repeat(k, h_q // hkv, axis=2)
+
+
+def _mask(qi, ki, causal: bool, window: int | None):
+    m = jnp.ones(jnp.broadcast_shapes(qi.shape, ki.shape), dtype=bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m
+
+
+def _attend_block(q_blk, k, v, qi, ki, causal, window):
+    """q_blk (B,C,H,hd) vs full k/v (B,S,H,hd) -> (B,C,H,hd); fp32 softmax."""
+    scores = jnp.einsum(
+        "bchd,bshd->bhcs", q_blk, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(q_blk.shape[-1]))
+    mask = _mask(qi[:, None], ki[None, :], causal, window)  # (C, S)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_blk.dtype)
+    return jnp.einsum("bhcs,bshd->bchd", probs, v)
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Attention for training/prefill. q (B,T,Hq,hd), k/v (B,S,Hkv,hd).
+
+    ``q_offset``: absolute position of q[0] relative to k[0].
+    ``window``: sliding-window width (mixtral); None = unbounded.
+    """
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    ki = jnp.arange(s)
+
+    if t <= CHUNK_THRESHOLD:
+        qi = jnp.arange(t) + q_offset
+        return _attend_block(q, k, v, qi, ki, causal, window)
+
+    nq = t // Q_CHUNK
+    if t % Q_CHUNK:
+        raise ValueError(f"long q_len {t} must be a multiple of {Q_CHUNK}")
+    q_blocks = q.reshape(b, nq, Q_CHUNK, h, hd)
+
+    def body(_, blk):
+        qb, idx = blk
+        qi = idx * Q_CHUNK + jnp.arange(Q_CHUNK) + q_offset
+        return None, _attend_block(qb, k, v, qi, ki, causal, window)
+
+    _, out = jax.lax.scan(
+        body, None, (jnp.moveaxis(q_blocks, 1, 0), jnp.arange(nq))
+    )
+    return jnp.moveaxis(out, 0, 1).reshape(b, t, h, hd)
+
+
+def decode_mha(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    key_positions: jax.Array,
+    *,
+    window: int | None = None,
+    act=None,
+) -> jax.Array:
+    """Single-token decode: q (B,1,Hq,hd) vs cache (B,S,Hkv,hd).
+
+    ``key_positions`` (B, S) int32 holds the *absolute* position stored in
+    each cache slot (-1 = never written): uniformly supports linear caches
+    and ring buffers (windowed archs: slot = position % window). ``pos`` is
+    scalar or per-row (B,) — continuous batching decodes mixed-progress
+    slots in one call. Masking: written, <= pos, inside the window.
+    """
+    h = q.shape[2]
+    k = _expand_kv(k_cache, h)
+    v = _expand_kv(v_cache, h)
+    if act is not None:
+        k = act(k, "kv_expanded")
+        v = act(v, "kv_expanded")
+    scores = jnp.einsum(
+        "bchd,bshd->bhcs", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(q.shape[-1]))
+    kp = key_positions
+    pos = jnp.asarray(pos)
+    posb = pos[:, None] if pos.ndim == 1 else pos
+    valid = (kp >= 0) & (kp <= posb)
+    if window is not None:
+        valid &= kp > posb - window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhcs,bshd->bchd", probs, v)
+
+
+def rope_qk(q, k, positions_q, positions_k, head_dim, theta):
+    sin_q, cos_q = rotary(positions_q, head_dim, theta)
+    sin_k, cos_k = rotary(positions_k, head_dim, theta)
+    return apply_rope(q, sin_q, cos_q), apply_rope(k, sin_k, cos_k)

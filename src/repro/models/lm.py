@@ -1,0 +1,490 @@
+"""Unified causal LM covering the dense / moe / ssm / hybrid families.
+
+All stacks are scan-over-layers with per-block rematerialization: parameters
+are stored stacked with a leading 'layers' axis and consumed by ``lax.scan``,
+keeping the HLO size O(1) in depth (essential for the 96-layer dry-runs).
+
+Three entry points per family, shared by the trainer and the serving engine:
+
+  * ``forward_train``  — full-sequence logits + MoE aux losses;
+  * ``prefill``        — full-sequence forward that also materializes the
+    decode cache (KV ring/linear buffers, SSM/conv states);
+  * ``decode_step``    — one token against the cache.
+
+The hybrid (zamba2) family scans superblocks: a (n_blocks, per_block, ...)
+stack of Mamba2 layers with a *single shared* attention+MLP block applied at
+the end of every superblock (own KV cache per site), plus trailing Mamba2
+layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import attn_param_specs, decode_mha, mha, out_project, qkv_project
+from .common import (
+    Activations,
+    ParamSpec,
+    apply_rope,
+    cross_entropy_loss,
+    layer_norm,
+    rms_norm,
+    rotary,
+)
+from .mlp import mlp_forward, mlp_param_specs, moe_forward, moe_param_specs
+from .ssm import ssm_cache_shapes, ssm_decode_step, ssm_forward, ssm_param_specs
+
+PyTree = Any
+
+__all__ = [
+    "param_specs",
+    "forward_train",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "cache_specs",
+    "stack_specs",
+]
+
+
+# ---------------------------------------------------------------------------
+# Param specs.
+# ---------------------------------------------------------------------------
+
+def stack_specs(specs: PyTree, n: int, axis: str = "layers") -> PyTree:
+    def s(t):
+        if isinstance(t, ParamSpec):
+            return dataclasses.replace(
+                t, shape=(n, *t.shape), axes=(axis, *t.axes)
+            )
+        return {k: s(v) for k, v in t.items()}
+
+    return s(specs)
+
+
+def norm_specs(cfg: ArchConfig, dim: int | None = None) -> dict:
+    d = dim or cfg.d_model
+    out = {"gamma": ParamSpec((d,), (None,), init="ones")}
+    if cfg.norm == "layernorm":
+        out["beta"] = ParamSpec((d,), (None,), init="zeros")
+    return out
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["gamma"], p["beta"], cfg.norm_eps)
+    return rms_norm(x, p["gamma"], cfg.norm_eps)
+
+
+def dense_block_specs(cfg: ArchConfig) -> dict:
+    hd = cfg.resolved_head_dim
+    specs = {
+        "ln1": norm_specs(cfg),
+        "attn": attn_param_specs(
+            cfg.d_model, cfg.physical_q_heads, cfg.physical_kv_heads, hd
+        ),
+        "ln2": norm_specs(cfg),
+    }
+    if cfg.family == "moe":
+        specs["moe"] = moe_param_specs(cfg.d_model, cfg.moe, cfg.activation)
+    else:
+        specs["mlp"] = mlp_param_specs(cfg.d_model, cfg.d_ff, cfg.activation)
+    return specs
+
+
+def mamba_block_specs(cfg: ArchConfig) -> dict:
+    return {"ln": norm_specs(cfg), "ssm": ssm_param_specs(cfg.d_model, cfg.ssm)}
+
+
+def param_specs(cfg: ArchConfig) -> PyTree:
+    d, v = cfg.d_model, cfg.padded_vocab
+    specs: dict = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, v), ("embed", "vocab"))
+    if cfg.pos == "learned":
+        specs["pos_embed"] = ParamSpec((32_768, d), (None, "embed"), scale=0.02)
+
+    if cfg.family in ("dense", "moe"):
+        specs["blocks"] = stack_specs(dense_block_specs(cfg), cfg.num_layers)
+    elif cfg.family == "ssm":
+        specs["blocks"] = stack_specs(mamba_block_specs(cfg), cfg.num_layers)
+    elif cfg.family == "hybrid":
+        nb, per = _hybrid_geometry(cfg)
+        inner = stack_specs(mamba_block_specs(cfg), per, axis="inner")
+        specs["mamba"] = stack_specs(inner, nb)
+        if cfg.hybrid_tail:
+            specs["tail"] = stack_specs(mamba_block_specs(cfg), cfg.hybrid_tail)
+        specs["shared"] = dense_block_specs(
+            dataclasses.replace(cfg, family="dense")
+        )
+    else:
+        raise ValueError(f"family {cfg.family} handled elsewhere (encdec/vlm)")
+    return specs
+
+
+def _hybrid_geometry(cfg: ArchConfig) -> tuple[int, int]:
+    per = cfg.hybrid_pattern.count("m")
+    if cfg.hybrid_pattern.count("a") != 1:
+        raise ValueError("hybrid_pattern must contain exactly one 'a'")
+    nb = (cfg.num_layers - cfg.hybrid_tail) // (per + 1)
+    return nb, per
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head.
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ArchConfig, pos_offset: int = 0, dtype=jnp.bfloat16):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if cfg.pos == "learned":
+        t = tokens.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos_offset, t, axis=0)
+        x = x + pe[None].astype(dtype)
+    return x
+
+
+def unembed(params, x, cfg: ArchConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("btd,dv->btv", x, w.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Dense/MoE block application (train + prefill + decode variants).
+# ---------------------------------------------------------------------------
+
+def _attn_train(bp, x, cfg: ArchConfig, q_offset: int = 0):
+    """Returns (attn_out, (k, v)) — roped k/v handed to prefill cache fill."""
+    hd = cfg.resolved_head_dim
+    t = x.shape[1]
+    q, k, v = qkv_project(bp["attn"], x)
+    pos = jnp.arange(t) + q_offset
+    sin, cos = rotary(pos, hd, cfg.rope_theta)
+    if cfg.pos == "rope":
+        q = apply_rope(q, sin[None], cos[None])
+        k = apply_rope(k, sin[None], cos[None])
+    o = mha(q, k, v, causal=True, window=cfg.sliding_window, q_offset=0)
+    return out_project(bp["attn"], o), (k, v)
+
+
+def _mlp_apply(bp, x, cfg: ArchConfig, act=None):
+    if cfg.family == "moe" and "moe" in bp:
+        return moe_forward(bp["moe"], x, cfg.moe, cfg.activation, act)
+    return mlp_forward(bp["mlp"], x, cfg.activation), {}
+
+
+def _dense_block(bp, x, cfg: ArchConfig, act: Activations):
+    a, kv = _attn_train(bp, apply_norm(bp["ln1"], x, cfg), cfg)
+    x = act(x + a, "residual")
+    m, aux = _mlp_apply(bp, apply_norm(bp["ln2"], x, cfg), cfg, act)
+    x = act(x + m, "residual")
+    return x, aux, kv
+
+
+def _dense_block_decode(bp, x, cache, pos, cfg: ArchConfig, act=None):
+    """One decode block. pos: per-row (B,) absolute positions (continuous
+    batching decodes mixed-progress slots in one call)."""
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    h = apply_norm(bp["ln1"], x, cfg)
+    q, k, v = qkv_project(bp["attn"], h)
+    sin, cos = rotary(pos[:, None], hd, cfg.rope_theta)  # (B,1,half)
+    if cfg.pos == "rope":
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    s_len = cache["k"].shape[1]
+    slot = pos % s_len if cfg.sliding_window else pos    # (B,)
+    rows = jnp.arange(b)
+    kc = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    o = decode_mha(q, kc, vc, pos, cache["key_pos"], window=cfg.sliding_window, act=act)
+    x = x + out_project(bp["attn"], o)
+    m, _ = _mlp_apply(bp, apply_norm(bp["ln2"], x, cfg), cfg, act)
+    return x + m, {"k": kc, "v": vc, "key_pos": cache["key_pos"]}
+
+
+# ---------------------------------------------------------------------------
+# Forward (train): scan over blocks with remat.
+# ---------------------------------------------------------------------------
+
+def forward_train(params, tokens, cfg: ArchConfig, act: Activations | None = None,
+                  dtype=jnp.bfloat16):
+    act = act or Activations(lambda x, kind: x)
+    x = act(embed_tokens(params, tokens, cfg, dtype=dtype), "embed")
+
+    if cfg.family in ("dense", "moe"):
+        @jax.checkpoint
+        def body(carry, bp):
+            h, lb, rz = carry
+            h, aux, _ = _dense_block(bp, h, cfg, act)
+            return (h, lb + aux.get("load_balance", 0.0), rz + aux.get("router_z", 0.0)), None
+
+        (x, lb, rz), _ = jax.lax.scan(body, (x, 0.0, 0.0), params["blocks"])
+        aux = {"load_balance": lb, "router_z": rz}
+
+    elif cfg.family == "ssm":
+        @jax.checkpoint
+        def body(h, bp):
+            o, _ = ssm_forward(bp["ssm"], apply_norm(bp["ln"], h, cfg), cfg.ssm)
+            return act(h + o, "residual"), None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        aux = {}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        @jax.checkpoint
+        def mamba_body(h, bp):
+            o, _ = ssm_forward(bp["ssm"], apply_norm(bp["ln"], h, cfg), cfg.ssm)
+            return act(h + o, "residual"), None
+
+        @jax.checkpoint
+        def super_body(h, blk):
+            h, _ = jax.lax.scan(mamba_body, h, blk)
+            h, _, _ = _dense_block(shared, h, cfg, act)
+            return h, None
+
+        x, _ = jax.lax.scan(super_body, x, params["mamba"])
+        if cfg.hybrid_tail:
+            x, _ = jax.lax.scan(mamba_body, x, params["tail"])
+        aux = {}
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = act(unembed(params, x, cfg), "logits")
+    return logits, aux
+
+
+def loss_fn(params, tokens, labels, cfg: ArchConfig, act: Activations | None = None):
+    logits, aux = forward_train(params, tokens, cfg, act)
+    loss = cross_entropy_loss(logits, labels, cfg.vocab_size)
+    if cfg.family == "moe":
+        loss = (
+            loss
+            + cfg.moe.load_balance_coef * aux.get("load_balance", 0.0) / cfg.num_layers
+            + cfg.moe.router_z_coef * aux.get("router_z", 0.0) / cfg.num_layers
+        )
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Cache: specs + prefill + decode.
+# ---------------------------------------------------------------------------
+
+def _attn_cache_len(cfg: ArchConfig, max_seq: int) -> int:
+    return min(cfg.sliding_window, max_seq) if cfg.sliding_window else max_seq
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Tree of (shape, logical axes, dtype) describing the decode cache."""
+    hd = cfg.resolved_head_dim if cfg.num_heads else 0
+    s = _attn_cache_len(cfg, max_seq)
+    kv = lambda: ((batch, s, cfg.physical_kv_heads, hd), ("batch", "cache_seq", "kv_heads", "head_dim"), dtype)
+    kp = ((batch, s), ("batch", "cache_seq"), jnp.int32)
+
+    if cfg.family in ("dense", "moe"):
+        l = cfg.num_layers
+        return {
+            "k": _stk(kv(), l), "v": _stk(kv(), l), "key_pos": kp,
+        }
+    if cfg.family == "ssm":
+        conv, state = ssm_cache_shapes(cfg, batch)
+        l = cfg.num_layers
+        return {
+            "conv": _stk((*conv, dtype), l),
+            "state": _stk((*state, jnp.float32), l),
+        }
+    if cfg.family == "hybrid":
+        nb, per = _hybrid_geometry(cfg)
+        conv, state = ssm_cache_shapes(cfg, batch)
+        tree = {
+            "mamba_conv": _stk(_stk((*conv, dtype), per, "inner"), nb),
+            "mamba_state": _stk(_stk((*state, jnp.float32), per, "inner"), nb),
+            "attn_k": _stk(kv(), nb), "attn_v": _stk(kv(), nb), "key_pos": kp,
+        }
+        if cfg.hybrid_tail:
+            tree["tail_conv"] = _stk((*conv, dtype), cfg.hybrid_tail)
+            tree["tail_state"] = _stk((*state, jnp.float32), cfg.hybrid_tail)
+        return tree
+    raise ValueError(cfg.family)
+
+
+def _stk(spec3, n, axis="layers"):
+    shape, axes, dt = spec3
+    return ((n, *shape), (axis, *axes), dt)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    def mk(leaf):
+        shape, _axes, dt = leaf
+        if dt == jnp.int32:
+            return jnp.full(shape, -1, dt)  # key_pos: -1 = unwritten
+        return jnp.zeros(shape, dt)
+
+    return jax.tree.map(
+        mk, cache_specs(cfg, batch, max_seq, dtype),
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple),
+    )
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_seq: int,
+            act: Activations | None = None, dtype=jnp.bfloat16):
+    """Full forward + cache build. Returns (last-position logits, cache)."""
+    act = act or Activations(lambda x, kind: x)
+    b, t = tokens.shape
+    s = _attn_cache_len(cfg, max_seq)
+    x = act(embed_tokens(params, tokens, cfg, dtype=dtype), "embed")
+
+    def kv_to_cache(k, v):
+        """Keep the last ``s`` roped keys; slot = position % s (ring/linear)."""
+        kk, vv = k[:, -s:], v[:, -s:]
+        if t < s:  # pad to cache length at the tail
+            pad = [(0, 0), (0, s - t), (0, 0), (0, 0)]
+            kk, vv = jnp.pad(kk, pad), jnp.pad(vv, pad)
+            key_pos = jnp.concatenate(
+                [jnp.arange(t), jnp.full((s - t,), -1, jnp.int32)]
+            )
+        else:
+            first = t - s
+            pos = jnp.arange(first, t)
+            slots = pos % s
+            kk = jnp.zeros_like(kk).at[:, slots].set(k[:, -s:])
+            vv = jnp.zeros_like(vv).at[:, slots].set(v[:, -s:])
+            key_pos = jnp.zeros((s,), jnp.int32).at[slots].set(pos)
+        return kk.astype(dtype), vv.astype(dtype), jnp.broadcast_to(key_pos, (b, s))
+
+    if cfg.family in ("dense", "moe"):
+        def body(h, bp):
+            h2, _aux, (k, v) = _dense_block(bp, h, cfg, act)
+            kk, vv, key_pos = kv_to_cache(k, v)
+            return h2, (kk, vv, key_pos)
+
+        x, (ks, vs, kps) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"k": ks, "v": vs, "key_pos": kps[0]}
+
+    elif cfg.family == "ssm":
+        def body(h, bp):
+            o, (cs, st) = ssm_forward(bp["ssm"], apply_norm(bp["ln"], h, cfg), cfg.ssm)
+            return h + o, (cs.astype(dtype), st)
+
+        x, (convs, states) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"conv": convs, "state": states}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def mamba_body(h, bp):
+            o, (cs, st) = ssm_forward(bp["ssm"], apply_norm(bp["ln"], h, cfg), cfg.ssm)
+            return h + o, (cs.astype(dtype), st)
+
+        def super_body(h, blk):
+            h, (cs, st) = jax.lax.scan(mamba_body, h, blk)
+            h, _aux, (k, v) = _dense_block(shared, h, cfg, act)
+            kk, vv, key_pos = kv_to_cache(k, v)
+            return h, (cs, st, kk, vv, key_pos)
+
+        x, (mc, ms, ks, vs, kps) = jax.lax.scan(super_body, x, params["mamba"])
+        cache = {
+            "mamba_conv": mc, "mamba_state": ms,
+            "attn_k": ks, "attn_v": vs, "key_pos": kps[0],
+        }
+        if cfg.hybrid_tail:
+            x, (tc, ts) = jax.lax.scan(mamba_body, x, params["tail"])
+            cache["tail_conv"], cache["tail_state"] = tc, ts
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params, x[:, -1:], cfg)
+    return logits, cache
+
+
+def decode_step(params, token, pos, cache, cfg: ArchConfig, dtype=jnp.bfloat16, act=None):
+    """One decode step. token (B, 1) int32; pos scalar or per-row (B,) int32.
+
+    Returns (logits (B, 1, V), updated cache).
+    """
+    b = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    rows = jnp.arange(b)
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+    if cfg.pos == "learned":
+        pe = jnp.take(params["pos_embed"], pos, axis=0)  # (B, D)
+        x = x + pe[:, None].astype(dtype)
+
+    if cfg.family in ("dense", "moe"):
+        slot = pos % cache["k"].shape[2] if cfg.sliding_window else pos
+        key_pos = cache["key_pos"].at[rows, slot].set(pos)
+
+        def body(h, layer):
+            bp, kc, vc = layer
+            h2, new = _dense_block_decode(
+                bp, h, {"k": kc, "v": vc, "key_pos": key_pos}, pos, cfg, act
+            )
+            return h2, (new["k"], new["v"])
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs, "key_pos": key_pos}
+
+    elif cfg.family == "ssm":
+        def body(h, layer):
+            bp, cs, st = layer
+            o, ncs, nst = ssm_decode_step(
+                bp["ssm"], apply_norm(bp["ln"], h, cfg), cs.astype(dtype), st, cfg.ssm
+            )
+            return h + o, (ncs.astype(cs.dtype), nst)
+
+        x, (convs, states) = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv"], cache["state"])
+        )
+        new_cache = {"conv": convs, "state": states}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        slot = pos  # hybrid attn: linear cache
+        key_pos = cache["key_pos"].at[rows, slot].set(pos)
+
+        def mamba_body(h, layer):
+            bp, cs, st = layer
+            o, ncs, nst = ssm_decode_step(
+                bp["ssm"], apply_norm(bp["ln"], h, cfg), cs.astype(dtype), st, cfg.ssm
+            )
+            return h + o, (ncs.astype(cs.dtype), nst)
+
+        def super_body(h, blk):
+            bp, cs, st, kc, vc = blk
+            h, (ncs, nst) = jax.lax.scan(mamba_body, h, (bp, cs, st))
+            h, new = _dense_block_decode(
+                shared, h, {"k": kc, "v": vc, "key_pos": key_pos}, pos, cfg, act
+            )
+            return h, (ncs, nst, new["k"], new["v"])
+
+        x, (mc, ms, ks, vs) = jax.lax.scan(
+            super_body, x,
+            (params["mamba"], cache["mamba_conv"], cache["mamba_state"],
+             cache["attn_k"], cache["attn_v"]),
+        )
+        new_cache = {
+            "mamba_conv": mc, "mamba_state": ms,
+            "attn_k": ks, "attn_v": vs, "key_pos": key_pos,
+        }
+        if cfg.hybrid_tail:
+            x, (tc, ts) = jax.lax.scan(
+                mamba_body, x,
+                (params["tail"], cache["tail_conv"], cache["tail_state"]),
+            )
+            new_cache["tail_conv"], new_cache["tail_state"] = tc, ts
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    return unembed(params, x, cfg), new_cache

@@ -1,0 +1,173 @@
+"""Mamba-2 block (SSD) — train/prefill via the Pallas chunked kernel,
+single-token decode via the explicit recurrence.
+
+Per block (d = d_model, di = expand*d, H = di/P heads, P head_dim, N state):
+
+    z  = x Wz                      (gate branch, di)
+    xs = silu(causal_conv1d(x Wx)) (conv branch, di)
+    B  = x Wb   (G groups x N, broadcast to heads)
+    C  = x Wc
+    dt = softplus(x Wdt + dt_bias) (H,)
+    a  = -exp(a_log) * dt          (per-head log decay, <= 0)
+    y  = SSD(xs*dt, a, B, C) + d_skip * xs
+    out = (rmsnorm(y * silu(z))) Wout
+
+Decode keeps (conv_state (K-1, di), ssm_state (H, N, P)) per layer and applies
+the O(1) per-token recurrence h' = exp(a) h + dt * B (x) x ;  y = C . h'.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .common import ParamSpec, rms_norm
+
+__all__ = [
+    "ssm_param_specs",
+    "ssm_forward",
+    "ssm_decode_step",
+    "ssm_cache_shapes",
+]
+
+
+def ssm_param_specs(d_model: int, ssm, num_heads_override: int | None = None) -> dict:
+    di = ssm.expand * d_model
+    h = di // ssm.head_dim
+    g, n = ssm.num_groups, ssm.state_dim
+    return {
+        "wz": ParamSpec((d_model, di), ("embed", "ssm_inner")),
+        "wx": ParamSpec((d_model, di), ("embed", "ssm_inner")),
+        "wb": ParamSpec((d_model, g * n), ("embed", None)),
+        "wc": ParamSpec((d_model, g * n), ("embed", None)),
+        "wdt": ParamSpec((d_model, h), ("embed", "ssm_heads"), scale=0.02),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "a_log": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "d_skip": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "conv_w": ParamSpec((ssm.conv_kernel, di), ("conv", "ssm_inner"), scale=0.5),
+        "gnorm": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "wout": ParamSpec((di, d_model), ("ssm_inner", "embed")),
+    }
+
+
+def _proj(x, w, dt):
+    return jnp.einsum("btd,df->btf", x, w.astype(dt))
+
+
+def _causal_conv(xs: jax.Array, conv_w: jax.Array, carry: jax.Array | None = None):
+    """Depthwise causal conv along T. xs (B,T,di), conv_w (K,di).
+
+    carry: optional (B, K-1, di) previous context (prefill continuation);
+    returns (out (B,T,di), new_carry (B,K-1,di)).
+    """
+    k = conv_w.shape[0]
+    b, t, di = xs.shape
+    if carry is None:
+        carry = jnp.zeros((b, k - 1, di), dtype=xs.dtype)
+    ext = jnp.concatenate([carry, xs], axis=1)           # (B, T+K-1, di)
+    out = jnp.zeros_like(xs)
+    for i in range(k):  # K is tiny (4): unrolled taps, fuses to FMAs
+        out = out + ext[:, i : i + t, :] * conv_w[i][None, None, :].astype(xs.dtype)
+    new_carry = ext[:, t:, :]
+    return out, new_carry
+
+
+def _branches(p: dict, x: jax.Array, ssm):
+    """Common projections: returns (z, xs_preconv, bmat, cmat, dt, a_coef)."""
+    dt_ = x.dtype
+    b, t, _ = x.shape
+    di = p["wz"].shape[1]
+    h = p["wdt"].shape[1]
+    g, n = ssm.num_groups, ssm.state_dim
+    z = _proj(x, p["wz"], dt_)
+    xs = _proj(x, p["wx"], dt_)
+    bm = _proj(x, p["wb"], dt_).reshape(b, t, g, n)
+    cm = _proj(x, p["wc"], dt_).reshape(b, t, g, n)
+    dt_raw = _proj(x, p["wdt"], dt_).astype(jnp.float32) + p["dt_bias"]
+    dt_v = jax.nn.softplus(dt_raw)                       # (B,T,H) fp32
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt_v  # <= 0
+    return z, xs, bm, cm, dt_v, a
+
+
+def _broadcast_groups(m: jax.Array, heads: int) -> jax.Array:
+    """(B,T,G,N) -> (B,T,H,N) by repeating each group over its heads."""
+    b, t, g, n = m.shape
+    rep = heads // g
+    return jnp.repeat(m, rep, axis=2) if rep > 1 else m
+
+
+def ssm_forward(
+    p: dict,
+    x: jax.Array,
+    ssm,
+    state: tuple[jax.Array, jax.Array] | None = None,
+):
+    """Full-sequence forward. x (B,T,D).
+
+    Returns (out (B,T,D), (conv_state, ssm_state)) — states returned for
+    prefill-to-decode handoff.
+    """
+    b, t, d = x.shape
+    di = p["wz"].shape[1]
+    hp = ssm.head_dim
+    h = di // hp
+    z, xs, bm, cm, dt_v, a = _branches(p, x, ssm)
+    conv_carry = state[0] if state is not None else None
+    h0 = state[1] if state is not None else None
+    xs, conv_state = _causal_conv(xs, p["conv_w"], conv_carry)
+    xs = jax.nn.silu(xs)
+    xh = xs.reshape(b, t, h, hp)
+    x_in = xh * dt_v[..., None].astype(xh.dtype)
+    # B/C stay grouped (B, T, G, ds): the SSD kernel group-maps heads in-grid
+    y, h_fin = kops.ssd_scan(x_in, a, bm, cm, h0=h0, chunk=ssm.chunk)
+    y = y.astype(x.dtype) + p["d_skip"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, t, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"])
+    out = jnp.einsum("btf,fd->btd", y, p["wout"].astype(x.dtype))
+    return out, (conv_state, h_fin)
+
+
+def ssm_decode_step(
+    p: dict,
+    x: jax.Array,                       # (B, 1, D)
+    conv_state: jax.Array,              # (B, K-1, di)
+    ssm_state: jax.Array,               # (B, H, N, P) fp32
+    ssm,
+):
+    """O(1) per-token recurrence. Returns (out (B,1,D), conv_state', ssm_state')."""
+    b, _, d = x.shape
+    di = p["wz"].shape[1]
+    hp = ssm.head_dim
+    h = di // hp
+    z, xs, bm, cm, dt_v, a = _branches(p, x, ssm)
+    # conv over the rolling window
+    window = jnp.concatenate([conv_state, xs], axis=1)   # (B, K, di)
+    conv_out = jnp.einsum("bkf,kf->bf", window, p["conv_w"].astype(xs.dtype))
+    new_conv = window[:, 1:, :]
+    xs1 = jax.nn.silu(conv_out)                          # (B, di)
+    xh = xs1.reshape(b, h, hp)
+    bmat = _broadcast_groups(bm, h)[:, 0]                # (B, H, N)
+    cmat = _broadcast_groups(cm, h)[:, 0]
+    dt1 = dt_v[:, 0]                                     # (B, H)
+    a1 = a[:, 0]                                         # (B, H)
+    x_in = (xh * dt1[..., None].astype(xh.dtype)).astype(jnp.float32)
+    new_state = (
+        jnp.exp(a1)[..., None, None] * ssm_state
+        + jnp.einsum("bhn,bhp->bhnp", bmat.astype(jnp.float32), x_in)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", cmat.astype(jnp.float32), new_state)
+    y = y.astype(x.dtype) + p["d_skip"].astype(x.dtype)[None, :, None] * xh
+    y = y.reshape(b, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"])
+    out = jnp.einsum("btf,fd->btd", y, p["wout"].astype(x.dtype))
+    return out, new_conv, new_state
+
+
+def ssm_cache_shapes(cfg, batch: int):
+    """(conv_state shape/axes, ssm_state shape/axes) for one layer."""
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    h = di // ssm.head_dim
+    conv = ((batch, ssm.conv_kernel - 1, di), ("batch", None, "ssm_inner"))
+    state = ((batch, h, ssm.state_dim, ssm.head_dim), ("batch", "ssm_heads", None, None))
+    return conv, state

@@ -1,0 +1,203 @@
+"""Vision-language decoder (llama-3.2-vision backbone).
+
+Text decoder with a gated cross-attention layer to image patch embeddings
+after every ``cross_attn_every`` self-attention layers (llama-3.2-vision: one
+cross layer per 4 self layers, 8 + 32 = 40). The ViT tower + projector are a
+STUB per the assignment: ``input_specs`` provides precomputed patch
+embeddings (B, num_image_tokens, d_model).
+
+Structure: scan over superblocks of (cross_attn_every self layers + 1 gated
+cross layer). Cross K/V are position-independent (no RoPE on image tokens)
+and cached once at prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import attn_param_specs, decode_mha, mha, out_project, qkv_project
+from .common import Activations, ParamSpec, cross_entropy_loss
+from .lm import (
+    _dense_block,
+    _dense_block_decode,
+    apply_norm,
+    dense_block_specs,
+    norm_specs,
+    stack_specs,
+)
+from .mlp import mlp_forward, mlp_param_specs
+
+__all__ = [
+    "param_specs",
+    "forward_train",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "cache_specs",
+]
+
+
+def _geometry(cfg: ArchConfig) -> tuple[int, int]:
+    per = cfg.cross_attn_every
+    nb = cfg.num_layers // (per + 1)
+    if nb * (per + 1) != cfg.num_layers:
+        raise ValueError("num_layers must be divisible by cross_attn_every + 1")
+    return nb, per
+
+
+def _cross_block_specs(cfg: ArchConfig) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "ln1": norm_specs(cfg),
+        "attn": attn_param_specs(
+            cfg.d_model, cfg.physical_q_heads, cfg.physical_kv_heads, hd, cross=True
+        ),
+        "ln2": norm_specs(cfg),
+        "mlp": mlp_param_specs(cfg.d_model, cfg.d_ff, cfg.activation),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    nb, per = _geometry(cfg)
+    d, v = cfg.d_model, cfg.padded_vocab
+    self_cfg = dataclasses.replace(cfg, family="dense")
+    inner = stack_specs(dense_block_specs(self_cfg), per, axis="inner")
+    return {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), scale=0.02),
+        "self_blocks": stack_specs(inner, nb),
+        "cross_blocks": stack_specs(_cross_block_specs(cfg), nb),
+        "final_norm": norm_specs(cfg),
+        "unembed": ParamSpec((d, v), ("embed", "vocab")),
+    }
+
+
+def _cross_apply(bp, x, image_embeds, cfg: ArchConfig):
+    """Gated cross-attention + MLP. Returns (x, (ck, cv))."""
+    h = apply_norm(bp["ln1"], x, cfg)
+    q, ck, cv = qkv_project(bp["attn"], h, kv_x=image_embeds)
+    x = x + out_project(bp["attn"], mha(q, ck, cv, causal=False))
+    x = x + mlp_forward(bp["mlp"], apply_norm(bp["ln2"], x, cfg), cfg.activation)
+    return x, (ck, cv)
+
+
+def forward_train(params, tokens, image_embeds, cfg: ArchConfig,
+                  act: Activations | None = None, dtype=jnp.bfloat16):
+    act = act or Activations(lambda x, k: x)
+    img = image_embeds.astype(dtype)
+    x = act(jnp.take(params["embed"], tokens, axis=0).astype(dtype), "embed")
+    self_cfg = dataclasses.replace(cfg, family="dense")
+
+    @jax.checkpoint
+    def super_body(h, blk):
+        sp, cp = blk
+
+        def self_body(hh, bp):
+            hh, _, _ = _dense_block(bp, hh, self_cfg, act)
+            return hh, None
+
+        h, _ = jax.lax.scan(self_body, h, sp)
+        h, _ = _cross_apply(cp, h, img, cfg)
+        return act(h, "residual"), None
+
+    x, _ = jax.lax.scan(super_body, x, (params["self_blocks"], params["cross_blocks"]))
+    x = apply_norm(params["final_norm"], x, cfg)
+    return act(jnp.einsum("btd,dv->btv", x, params["unembed"].astype(x.dtype)), "logits")
+
+
+def loss_fn(params, tokens, image_embeds, labels, cfg: ArchConfig,
+            act: Activations | None = None):
+    logits = forward_train(params, tokens, image_embeds, cfg, act)
+    return cross_entropy_loss(logits, labels, cfg.vocab_size)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    nb, per = _geometry(cfg)
+    hd = cfg.resolved_head_dim
+    kv_self = ((nb, per, batch, max_seq, cfg.physical_kv_heads, hd),
+               ("layers", "inner", "batch", "cache_seq", "kv_heads", "head_dim"), dtype)
+    kv_cross = ((nb, batch, cfg.num_image_tokens, cfg.physical_kv_heads, hd),
+                ("layers", "batch", None, "kv_heads", "head_dim"), dtype)
+    return {
+        "self_k": kv_self, "self_v": kv_self,
+        "cross_k": kv_cross, "cross_v": kv_cross,
+        "key_pos": ((batch, max_seq), ("batch", "cache_seq"), jnp.int32),
+    }
+
+
+def prefill(params, tokens, image_embeds, cfg: ArchConfig, max_seq: int,
+            act: Activations | None = None, dtype=jnp.bfloat16):
+    act = act or Activations(lambda x, k: x)
+    img = image_embeds.astype(dtype)
+    b, t = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    self_cfg = dataclasses.replace(cfg, family="dense")
+    pad = [(0, 0), (0, max_seq - t), (0, 0), (0, 0)]
+
+    def super_body(h, blk):
+        sp, cp = blk
+
+        def self_body(hh, bp):
+            hh, _, (k, v) = _dense_block(bp, hh, self_cfg, act)
+            return hh, (jnp.pad(k, pad).astype(dtype), jnp.pad(v, pad).astype(dtype))
+
+        h, (ks, vs) = jax.lax.scan(self_body, h, sp)
+        h, (ck, cv) = _cross_apply(cp, h, img, cfg)
+        return h, (ks, vs, ck.astype(dtype), cv.astype(dtype))
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(
+        super_body, x, (params["self_blocks"], params["cross_blocks"])
+    )
+    key_pos = jnp.concatenate(
+        [jnp.arange(t, dtype=jnp.int32), jnp.full((max_seq - t,), -1, jnp.int32)]
+    )
+    cache = {
+        "self_k": ks, "self_v": vs, "cross_k": cks, "cross_v": cvs,
+        "key_pos": jnp.broadcast_to(key_pos, (b, max_seq)),
+    }
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = jnp.einsum("btd,dv->btv", x[:, -1:], params["unembed"].astype(x.dtype))
+    return logits, cache
+
+
+def decode_step(params, token, pos, cache, cfg: ArchConfig, dtype=jnp.bfloat16, act=None):
+    b = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    rows = jnp.arange(b)
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+    self_cfg = dataclasses.replace(cfg, family="dense")
+    key_pos = cache["key_pos"].at[rows, pos].set(pos)
+    n_img = cache["cross_k"].shape[2]
+    img_pos = jnp.broadcast_to(jnp.arange(n_img, dtype=jnp.int32), (b, n_img))
+    far = jnp.full((b,), 2**30, jnp.int32)
+
+    def super_body(h, blk):
+        sp, kcs, vcs, cp, ck, cv = blk
+
+        def self_body(hh, layer):
+            bp, kc, vc = layer
+            hh, new = _dense_block_decode(
+                bp, hh, {"k": kc, "v": vc, "key_pos": key_pos}, pos, self_cfg, act
+            )
+            return hh, (new["k"], new["v"])
+
+        h, (ks, vs) = jax.lax.scan(self_body, h, (sp, kcs, vcs))
+        c_in = apply_norm(cp["ln1"], h, cfg)
+        cq = jnp.einsum("btd,dhk->bthk", c_in, cp["attn"]["wq"].astype(c_in.dtype))
+        h = h + out_project(
+            cp["attn"],
+            decode_mha(cq, ck.astype(c_in.dtype), cv.astype(c_in.dtype), far, img_pos),
+        )
+        h = h + mlp_forward(cp["mlp"], apply_norm(cp["ln2"], h, cfg), cfg.activation)
+        return h, (ks, vs)
+
+    x, (ks, vs) = jax.lax.scan(
+        super_body, x,
+        (params["self_blocks"], cache["self_k"], cache["self_v"],
+         params["cross_blocks"], cache["cross_k"], cache["cross_v"]),
+    )
+    new_cache = dict(cache, self_k=ks, self_v=vs, key_pos=key_pos)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return jnp.einsum("btd,dv->btv", x, params["unembed"].astype(x.dtype)), new_cache

@@ -1,0 +1,21 @@
+from .base import (
+    Optimizer,
+    adafactor,
+    adamw,
+    constant_schedule,
+    cosine_schedule,
+    for_config,
+    global_norm,
+    wsd_schedule,
+)
+
+__all__ = [
+    "Optimizer",
+    "adafactor",
+    "adamw",
+    "constant_schedule",
+    "cosine_schedule",
+    "for_config",
+    "global_norm",
+    "wsd_schedule",
+]

@@ -1,0 +1,198 @@
+"""Optimizers: AdamW and Adafactor (factored second moments), with global-norm
+clipping and the schedules the assigned archs require (cosine, minicpm's WSD).
+
+Written against a minimal (init, update) protocol so the train step can treat
+them uniformly; states are plain pytrees (per-leaf dicts), so they shard and
+checkpoint exactly like parameters.
+
+Adafactor is the default for nemotron-4-340b: full AdamW moments at 340B fp32
+(2 x 1.36 TB) would crowd out activations at 256 chips; factored second
+moments cut optimizer state to ~1 byte/param equivalent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "cosine_schedule",
+    "wsd_schedule",
+    "constant_schedule",
+    "global_norm",
+]
+
+
+class Optimizer(Protocol):
+    def init(self, params: PyTree) -> PyTree: ...
+    def update(self, grads: PyTree, state: PyTree, params: PyTree) -> tuple[PyTree, PyTree]: ...
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def _clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda t: t * scale, grads)
+
+
+# ---------------------------------------------------------------------------
+# Schedules.
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, peak * cos)
+
+    return fn
+
+
+def wsd_schedule(
+    peak: float, warmup: int, total: int, decay_frac: float = 0.1, floor: float = 0.01
+) -> Callable:
+    """Warmup-Stable-Decay (minicpm): warmup -> flat -> sharp final decay."""
+    decay_start = int(total * (1.0 - decay_frac))
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        dec = peak * (floor ** frac)  # exponential decay to floor*peak
+        out = jnp.where(step < warmup, warm, jnp.where(step < decay_start, peak, dec))
+        return out
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# AdamW.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip: float = 1.0
+
+    def init(self, params):
+        zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+        return {"count": jnp.zeros((), jnp.int32), "mu": zeros(), "nu": zeros()}
+
+    def update(self, grads, state, params):
+        grads = _clip_by_global_norm(grads, self.clip)
+        count = state["count"] + 1
+        cf = count.astype(jnp.float32)
+        b1c = 1.0 - self.b1 ** cf
+        b2c = 1.0 - self.b2 ** cf
+        lr = self.lr(count)
+
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g, state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state["nu"], grads)
+
+        def upd(m, v, p):
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            if p.ndim >= 2:
+                step = step + self.weight_decay * p
+            return -lr * step
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"count": count, "mu": mu, "nu": nu}
+
+
+def adamw(lr: Callable | float, **kw) -> AdamW:
+    return AdamW(lr=lr if callable(lr) else constant_schedule(lr), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments over the last two dims).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Callable
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"count": jnp.zeros((), jnp.int32), "v": jax.tree.map(leaf, params)}
+
+    def update(self, grads, state, params):
+        grads = _clip_by_global_norm(grads, self.clip)
+        count = state["count"] + 1
+        lr = self.lr(count)
+        d = self.decay
+
+        def upd(g, s, p):
+            g2 = g.astype(jnp.float32) ** 2 + self.eps
+            if g.ndim >= 2:
+                vr = d * s["vr"] + (1 - d) * g2.mean(axis=-1)
+                vc = d * s["vc"] + (1 - d) * g2.mean(axis=-2)
+                denom = vr[..., None] * vc[..., None, :] / jnp.maximum(
+                    vr.mean(axis=-1)[..., None, None], self.eps
+                )
+                step = g / jnp.sqrt(denom + self.eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = d * s["v"] + (1 - d) * g2
+                step = g / jnp.sqrt(v + self.eps)
+                new_s = {"v": v}
+            if p.ndim >= 2 and self.weight_decay:
+                step = step + self.weight_decay * p
+            return -lr * step, new_s
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state["v"])
+        flat_p = jax.tree.leaves(params)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_v = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return updates, {"count": count, "v": new_v}
+
+
+def adafactor(lr: Callable | float, **kw) -> Adafactor:
+    return Adafactor(lr=lr if callable(lr) else constant_schedule(lr), **kw)
+
+
+def for_config(cfg, total_steps: int = 10_000, peak_lr: float = 3e-4) -> Optimizer:
+    """The optimizer + schedule an ArchConfig asks for."""
+    warm = max(total_steps // 100, 10)
+    sched = (
+        wsd_schedule(peak_lr, warm, total_steps)
+        if cfg.lr_schedule == "wsd"
+        else cosine_schedule(peak_lr, warm, total_steps)
+    )
+    if cfg.optimizer == "adafactor":
+        return adafactor(sched)
+    return adamw(sched)

@@ -1,0 +1,3 @@
+from .elastic import ElasticFabric, FailureDetector, PodHealth
+
+__all__ = ["ElasticFabric", "FailureDetector", "PodHealth"]

@@ -1,0 +1,125 @@
+"""Elastic membership + failure policy for the pod-level consensus fabric.
+
+This is the control plane that makes the paper's cheap initialization a
+*systems* feature: with consensus gradient sync, a pod failure is a **graph
+edit**, not a world stall. The runtime:
+
+  1. detects failure/stragglers from heartbeat age (``FailureDetector``);
+  2. rebuilds the pod graph without the dead pod (``ElasticFabric.resize``);
+  3. re-solves the paper's optimization for the new graph — analytic
+     lambda_2 for ring/chain/torus, or O(K) distributed Algorithm 1
+     (``repro.dist.gossip.distributed_lambda2``) for irregular graphs: this
+     is exactly the paper's Section III-D selling point (prior DOI variants
+     were O(K^2), making frequent re-initialization impractical);
+  4. continues training with P-1 pods — surviving replicas are already
+     within the consensus epsilon of each other, so no re-broadcast of
+     parameters is needed (vs allreduce mode, where recovery is
+     checkpoint-restart, see launch/train.py --resume auto).
+
+Straggler mitigation: gossip rounds wait only on *graph neighbours*. The
+policy grants a straggling pod ``backup_rounds`` extra rounds of slack
+before it is treated as failed (its neighbours keep mixing; consensus error
+from one lagging pod stays bounded by rho^R_extra — same analysis as the
+epsilon knob).
+
+In a real deployment the resize triggers a re-lowered train step on the new
+device set; in this repo the same happens through launch.train's rebuild
+hook, exercised in tests/test_elastic.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from ..core.accel import Theta
+from ..dist.gossip import PodFabric, make_fabric
+
+__all__ = ["FailureDetector", "ElasticFabric", "PodHealth"]
+
+
+@dataclasses.dataclass
+class PodHealth:
+    pod_id: int
+    last_heartbeat: float
+    step_latency_ema: float = 0.0
+
+
+@dataclasses.dataclass
+class FailureDetector:
+    """Heartbeat-age classifier: healthy / straggler / dead."""
+
+    dead_after_s: float = 60.0
+    straggler_factor: float = 2.0   # x median step latency
+    _pods: dict[int, PodHealth] = dataclasses.field(default_factory=dict)
+
+    def heartbeat(self, pod_id: int, step_latency: float | None = None, now: float | None = None):
+        now = time.monotonic() if now is None else now
+        h = self._pods.setdefault(pod_id, PodHealth(pod_id, now))
+        h.last_heartbeat = now
+        if step_latency is not None:
+            h.step_latency_ema = (
+                step_latency if h.step_latency_ema == 0.0
+                else 0.9 * h.step_latency_ema + 0.1 * step_latency
+            )
+
+    def classify(self, now: float | None = None) -> dict[int, str]:
+        now = time.monotonic() if now is None else now
+        lats = sorted(h.step_latency_ema for h in self._pods.values() if h.step_latency_ema > 0)
+        med = lats[len(lats) // 2] if lats else 0.0
+        out = {}
+        for pid, h in self._pods.items():
+            if now - h.last_heartbeat > self.dead_after_s:
+                out[pid] = "dead"
+            elif med > 0 and h.step_latency_ema > self.straggler_factor * med:
+                out[pid] = "straggler"
+            else:
+                out[pid] = "healthy"
+        return out
+
+
+@dataclasses.dataclass
+class ElasticFabric:
+    """Live pod set + the paper-optimal consensus parameters for it."""
+
+    topology: str = "ring"
+    theta: Theta | None = None
+    backup_rounds: int = 2
+    fabric: PodFabric | None = None
+    members: list[int] = dataclasses.field(default_factory=list)
+    resize_count: int = 0
+
+    def bootstrap(self, pod_ids: list[int]) -> PodFabric:
+        self.members = sorted(pod_ids)
+        self.fabric = make_fabric(len(self.members), self.topology, self.theta)
+        return self.fabric
+
+    def resize(self, remove: list[int] | None = None, add: list[int] | None = None) -> PodFabric:
+        """Graph edit: recompute W, lambda_2, alpha*, rho* for the new set.
+
+        O(P^3) dense eigensolve here (P = pods, small); irregular fabrics at
+        scale use the O(K) in-mesh Algorithm 1 instead — see
+        dist.gossip.distributed_lambda2.
+        """
+        for pid in remove or []:
+            self.members.remove(pid)
+        for pid in add or []:
+            if pid in self.members:
+                raise ValueError(f"pod {pid} already a member")
+            self.members.append(pid)
+        self.members.sort()
+        if not self.members:
+            raise RuntimeError("all pods lost")
+        self.resize_count += 1
+        self.fabric = make_fabric(len(self.members), self.topology, self.theta)
+        return self.fabric
+
+    def rounds(self, eps: float) -> int:
+        """Per-sync rounds incl. straggler slack."""
+        return self.fabric.rounds_for(eps) + self.backup_rounds
+
+    def react(self, classification: dict[int, str]) -> PodFabric | None:
+        """Apply a FailureDetector verdict; returns a new fabric if resized."""
+        dead = [p for p, s in classification.items() if s == "dead" and p in self.members]
+        if dead:
+            return self.resize(remove=dead)
+        return None

@@ -1,0 +1,153 @@
+"""Slot-based continuous-batching decode engine.
+
+A fixed pool of ``max_batch`` slots over one shared decode cache. Requests
+are admitted into free slots (prefill writes that slot's cache region),
+``step()`` decodes one token for *all* active slots in a single jitted call
+(the decode_32k/long_500k dry-run shapes are exactly this program), and
+finished requests free their slots immediately for waiting work — classic
+continuous batching (Orca/vLLM style) on a dense cache.
+
+Per-slot positions ride in a (B,) int32 vector; the model's decode path
+masks cache entries by stored absolute position, so mixed-progress slots
+coexist in one batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import Model
+
+__all__ = ["DecodeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (T,) int32
+    max_new_tokens: int
+    eos_id: int | None = None
+    out_tokens: list = dataclasses.field(default_factory=list)
+    slot: int | None = None
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, model: Model, params: Any, max_batch: int, max_seq: int):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        cfg = model.cfg
+
+        def init_leaf(leaf):
+            shape, _axes, dt = leaf
+            if dt == jnp.int32:
+                return jnp.full(shape, -1, dt)
+            return jnp.zeros(shape, dt)
+
+        self.cache = jax.tree.map(
+            init_leaf, model.cache_specs(max_batch, max_seq),
+            is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple),
+        )
+        self.positions = np.full((max_batch,), -1, np.int64)  # -1 = free slot
+        self.cur_token = np.zeros((max_batch, 1), np.int32)
+        self.slot_req: list[Request | None] = [None] * max_batch
+        self.waiting: list[Request] = []
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill1 = jax.jit(self._prefill_impl)
+
+    # --- jitted kernels -----------------------------------------------------
+    def _decode_impl(self, params, cache, tokens, pos_vec):
+        # per-slot (B,) positions: mixed-progress slots decode in one call
+        logits, cache = self.model.decode(params, tokens, pos_vec, cache)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    def _prefill_impl(self, params, batch):
+        return self.model.prefill(params, batch, self.max_seq)
+
+    # --- scheduling ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting.pop(0)
+            req.slot = slot
+            t = len(req.prompt)
+            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+            if self.model.cfg.family == "encdec":
+                batch["frames"] = jnp.zeros(
+                    (1, self.model.cfg.encoder_len, self.model.cfg.d_model), jnp.bfloat16
+                )
+            if self.model.cfg.family == "vlm":
+                batch["image_embeds"] = jnp.zeros(
+                    (1, self.model.cfg.num_image_tokens, self.model.cfg.d_model), jnp.bfloat16
+                )
+            logits, cache1 = self._prefill1(self.params, batch)
+            # scatter the single-request cache into this slot
+            self.cache = jax.tree.map(
+                lambda full, one: _slot_insert(full, one, slot), self.cache, cache1
+            )
+            first = int(np.argmax(np.asarray(logits[0, -1])))
+            req.out_tokens.append(first)
+            self.cur_token[slot, 0] = first
+            self.positions[slot] = t
+            self.slot_req[slot] = req
+
+    def step(self) -> list[Request]:
+        """Admit + one decode tick for all active slots. Returns finished."""
+        self._admit()
+        active = self.positions >= 0
+        if not active.any():
+            return []
+        tok, self.cache = self._decode(
+            self.params, self.cache,
+            jnp.asarray(self.cur_token), jnp.asarray(self.positions.clip(min=0), jnp.int32),
+        )
+        tok = np.asarray(tok)
+        finished = []
+        for slot in range(self.max_batch):
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            t = int(tok[slot])
+            req.out_tokens.append(t)
+            self.positions[slot] += 1
+            self.cur_token[slot, 0] = t
+            hit_eos = req.eos_id is not None and t == req.eos_id
+            if len(req.out_tokens) >= req.max_new_tokens or hit_eos or \
+               self.positions[slot] >= self.max_seq - 1:
+                req.done = True
+                finished.append(req)
+                self.slot_req[slot] = None
+                self.positions[slot] = -1
+        return finished
+
+    def run(self, until_idle: bool = True, max_ticks: int = 10_000) -> list[Request]:
+        out = []
+        for _ in range(max_ticks):
+            out.extend(self.step())
+            if until_idle and not self.waiting and all(r is None for r in self.slot_req):
+                break
+        return out
+
+
+def _slot_insert(full: jax.Array, one: jax.Array, slot: int) -> jax.Array:
+    """Insert a batch=1 cache leaf into slot ``slot`` of the engine cache.
+
+    Cache leaves carry the batch dim after their stacking dims; we locate it
+    as the first dim where shapes differ (full=B, one=1).
+    """
+    for d, (fs, os_) in enumerate(zip(full.shape, one.shape)):
+        if fs != os_:
+            idx = [slice(None)] * full.ndim
+            idx[d] = slice(slot, slot + 1)
+            return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype), slot, axis=d)
+    return full  # shapes equal (e.g. shared key_pos row) - overwrite slot 0? keep full

@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests and
+benches must see the real (single) device; only launch/dryrun.py forces 512
+host devices, and multi-device tests spawn subprocesses with their own flags.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

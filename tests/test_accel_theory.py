@@ -1,0 +1,179 @@
+"""Numeric validation of the paper's theorems (Sections III & V)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accel, metrics, topology, weights
+from repro.core.accel import Theta
+
+
+def _mh(graph):
+    w = weights.metropolis_hastings(graph)
+    weights.check_consensus_matrix(w)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Predictor designs.
+# ---------------------------------------------------------------------------
+
+def test_ls_design_matches_closed_form():
+    th = accel.theta_ls()
+    np.testing.assert_allclose(th.as_tuple, (-2 / 3, 1 / 3, 4 / 3), atol=1e-12)
+
+
+def test_asymptotic_design_gamma_sqrt2():
+    for eps in (0.1, 0.5, 2.0):
+        th = accel.theta_asymptotic(eps)
+        assert abs(th.gamma - np.sqrt(2)) < 1e-12  # eps-independent (Eq. 15)
+
+
+def test_theta_conditions_enforced():
+    with pytest.raises(ValueError):
+        Theta(0.5, 0.5, 0.0)   # theta3 < 1
+    with pytest.raises(ValueError):
+        Theta(0.0, -0.5, 1.5)  # theta2 < 0
+    with pytest.raises(ValueError):
+        Theta(0.0, 0.5, 1.0)   # sum != 1
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: alpha* is the argmin of rho(Phi3[alpha] - J).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", ["chain", "ring", "grid", "rgg"])
+@pytest.mark.parametrize("design", ["ls", "asym"])
+def test_alpha_star_is_argmin(topo, design, rng):
+    g = {
+        "chain": lambda: topology.chain(30),
+        "ring": lambda: topology.ring(30),
+        "grid": lambda: topology.grid2d(6),
+        "rgg": lambda: topology.random_geometric(40, rng),
+    }[topo]()
+    w = _mh(g)
+    vals = np.linalg.eigvalsh(w)
+    if abs(vals[0]) > vals[-2]:  # ensure |lambda_N| <= lambda_2 (paper Sec III-A)
+        w = weights.lazy(w)
+    th = accel.theta_ls() if design == "ls" else accel.theta_asymptotic(0.5)
+    lam2 = accel.lambda2(w)
+    a_star = accel.alpha_star(lam2, th)
+    assert 0.0 <= a_star < th.alpha_max
+    rho_star = accel.spectral_radius_minus_j(w, a_star, th)
+    # scan the stability interval: no alpha beats alpha*
+    alphas = np.linspace(0.0, th.alpha_max * 0.999, 1200)
+    rhos = np.array([accel.spectral_radius_minus_j(w, a, th) for a in alphas])
+    assert rho_star <= rhos.min() + 2e-4
+    # closed form rho = sqrt(-alpha* theta1) (Section V-C)
+    np.testing.assert_allclose(rho_star, accel.rho_accel(lam2, th), atol=1e-9)
+
+
+def test_analytic_eigenvalues_match_dense():
+    g = topology.chain(20)
+    w = _mh(g)
+    th = accel.theta_asymptotic(0.5)
+    for alpha in (0.0, 0.3, 1.0):
+        phi = accel.phi3_matrix(w, alpha, th)
+        dense = np.sort_complex(np.linalg.eigvals(phi))
+        analytic = np.sort_complex(
+            accel.phi3_eigenvalues(np.linalg.eigvalsh(w), alpha, th)
+        )
+        np.testing.assert_allclose(dense, analytic, atol=1e-8)
+
+
+def test_closed_form_chebyshev_rate():
+    """theta=(-eps,0,1+eps): rho* = (1 - sqrt(1-lam^2))/lam, eps-independent."""
+    lam = 0.97
+    expected = (1 - np.sqrt(1 - lam**2)) / lam
+    for eps in (0.1, 0.5, 1.0):
+        th = accel.theta_asymptotic(eps)
+        np.testing.assert_allclose(accel.rho_accel(lam, th), expected, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2 / Theorem 3.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [10, 40, 120])
+def test_theorem2_bound_chain(n):
+    w = _mh(topology.chain(n))
+    th = accel.theta_asymptotic(0.5)
+    lam2 = accel.lambda2(w)
+    psi = 1.0 - lam2  # rho(W-J) = lam2 here (chain MH: positive spectrum dominates)
+    assert accel.rho_accel(lam2, th) <= accel.rho_accel_bound(psi) + 1e-12
+
+
+def test_theorem3_gain_scaling_chain():
+    """Chain: gain = Omega(N) (Section III-C)."""
+    th = accel.theta_asymptotic(0.5)
+    gains = []
+    for n in (20, 40, 80):
+        w = _mh(topology.chain(n))
+        lam2 = accel.lambda2(w)
+        gains.append(metrics.processing_gain(lam2, accel.rho_accel(lam2, th)))
+    # doubling N should at least ~double the gain
+    assert gains[1] / gains[0] > 1.7
+    assert gains[2] / gains[1] > 1.7
+
+
+def test_gain_bound_theorem3():
+    th = accel.theta_asymptotic(0.5)
+    for n in (20, 50):
+        w = _mh(topology.grid2d(n // 5, 5))
+        lam2 = accel.lambda2(w)
+        psi = 1.0 - lam2
+        gain = metrics.processing_gain(lam2, accel.rho_accel(lam2, th))
+        assert gain >= accel.gain_bound(psi) * 0.95  # 1/sqrt(psi) lower bound
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants (hypothesis).
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(6, 28),
+    p=st.floats(0.15, 0.7),
+    seed=st.integers(0, 2**31 - 1),
+    eps=st.floats(0.05, 2.0),
+)
+def test_acceleration_never_hurts(n, p, seed, eps):
+    """On any connected graph (lazy-fixed), rho(Phi3[alpha*]-J) <= rho(W-J)."""
+    rng = np.random.default_rng(seed)
+    g = topology.erdos_renyi(n, p, rng)
+    if not topology.is_connected(g.adjacency):
+        return
+    w = weights.lazy(weights.metropolis_hastings(g))  # all-positive spectrum
+    lam2 = accel.lambda2(w)
+    if lam2 <= 1e-9:  # complete-graph-like: single round exact, nothing to gain
+        return
+    th = accel.theta_asymptotic(eps)
+    rho_w = max(abs(np.linalg.eigvalsh(w)[0]), lam2)
+    assert accel.rho_accel(lam2, th) <= rho_w + 1e-9
+    a = accel.alpha_star(lam2, th)
+    assert 0.0 <= a < th.alpha_max
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(6, 24), seed=st.integers(0, 2**31 - 1))
+def test_mh_weights_invariants(n, seed):
+    rng = np.random.default_rng(seed)
+    g = topology.erdos_renyi(n, 0.4, rng)
+    if not topology.is_connected(g.adjacency):
+        return
+    w = weights.metropolis_hastings(g)
+    np.testing.assert_allclose(w, w.T, atol=1e-12)          # symmetric
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-12)   # stochastic
+    vals = np.linalg.eigvalsh(w)
+    assert vals[0] >= -1.0 - 1e-9 and vals[-1] <= 1.0 + 1e-9
+    lz = weights.lazy(w)
+    assert np.linalg.eigvalsh(lz)[0] >= -1e-9               # positive spectrum
+
+
+@settings(max_examples=15, deadline=None)
+@given(lam=st.floats(0.05, 0.999), eps=st.floats(0.05, 2.0))
+def test_rho_formula_consistency(lam, eps):
+    th = accel.theta_asymptotic(eps)
+    a = accel.alpha_star(lam, th)
+    np.testing.assert_allclose(
+        accel.rho_accel(lam, th), np.sqrt(max(-a * th.t1, 0.0)), atol=1e-12
+    )

@@ -1,0 +1,103 @@
+"""Algorithm 1 (decentralized lambda_2) + comparison baselines."""
+import numpy as np
+import pytest
+
+from repro.core import accel, baselines, doi, topology, weights
+
+
+def test_doi_rgg_accuracy(rng):
+    """Paper regime: K = 2N, L = 10 on a 200-node RGG -> ~1e-3 accuracy."""
+    g = topology.random_geometric(200, rng)
+    w = weights.metropolis_hastings(g)
+    lam2 = accel.lambda2(w)
+    res = doi.estimate_lambda2(w, g, num_iters=2 * g.n, normalize_every=10, rng=rng)
+    assert abs(res.lambda2_hat - lam2) / lam2 < 1e-3
+
+
+def test_doi_chain_needs_more_iterations(rng):
+    """Chain: lambda3/lambda2 -> 1, K must grow (paper uses K = N^2)."""
+    g = topology.chain(30)
+    w = weights.metropolis_hastings(g)
+    lam2 = accel.lambda2(w)
+    res = doi.estimate_lambda2(w, g, num_iters=g.n**2, normalize_every=10, rng=rng)
+    assert abs(res.lambda2_hat - lam2) / lam2 < 1e-3
+
+
+def test_doi_cost_model():
+    """Cost = K + D*K/L + D; with L ~ D this is O(K) (paper Sec III-D)."""
+    assert doi.doi_cost(400, 10, 20) == 400 + 20 * 40 + 20
+    g = topology.random_geometric(100, np.random.default_rng(1))
+    w = weights.metropolis_hastings(g)
+    res = doi.estimate_lambda2(w, g, num_iters=200, normalize_every=10)
+    d = topology.diameter(g.adjacency)
+    assert res.num_max_consensus_ticks == d * (200 // 10) + 2 * d
+
+
+def test_doi_zero_mean_start(rng):
+    g = topology.ring(24)
+    w = weights.metropolis_hastings(g)
+    v = rng.standard_normal(24)
+    v0 = w @ v - v
+    assert abs(v0.sum()) < 1e-10  # 1^T W = 1^T kills the mean exactly
+
+
+# ---------------------------------------------------------------------------
+# Polynomial filtering (ref 14).
+# ---------------------------------------------------------------------------
+
+def test_polyfilt_beats_memoryless_per_tick(rng):
+    g = topology.random_geometric(80, rng)
+    w = weights.metropolis_hastings(g)
+    lam2 = accel.lambda2(w)
+    pf = baselines.design_poly_filter(w, 3)
+    assert pf.rho_per_tick() < lam2  # acceleration per communication tick
+
+
+def test_polyfilt_horner_matches_dense(rng):
+    g = topology.ring(40)
+    w = weights.metropolis_hastings(g)
+    pf = baselines.design_poly_filter(w, 5)
+    x = rng.standard_normal(40)
+    dense = baselines.poly_filter_matrix(w, pf) @ x
+    np.testing.assert_allclose(baselines.poly_filter_step(w, pf, x), dense, atol=1e-10)
+
+
+def test_polyfilt_preserves_average(rng):
+    g = topology.grid2d(5)
+    w = weights.metropolis_hastings(g)
+    pf = baselines.design_poly_filter(w, 4)
+    assert abs(np.polynomial.polynomial.polyval(1.0, pf.coeffs) - 1.0) < 1e-9
+    x = rng.standard_normal(25)
+    y = baselines.poly_filter_step(w, pf, x)
+    np.testing.assert_allclose(y.mean(), x.mean(), atol=1e-12)
+
+
+def test_polyfilt_ill_conditioning_grows(rng):
+    """Paper footnote 2: the Vandermonde system degrades with filter length."""
+    g = topology.random_geometric(60, rng)
+    w = weights.metropolis_hastings(g)
+    c3 = baselines.design_poly_filter(w, 3).cond
+    c7 = baselines.design_poly_filter(w, 7).cond
+    assert c7 > 50 * c3
+
+
+# ---------------------------------------------------------------------------
+# Finite-time consensus (ref 16).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda: topology.ring(9),
+    lambda: topology.chain(8),
+    lambda: topology.grid2d(3),
+])
+def test_finite_time_exact(make):
+    g = make()
+    w = weights.metropolis_hastings(g)
+    q = baselines.finite_time_matrix(w)
+    np.testing.assert_allclose(q, np.full((g.n, g.n), 1.0 / g.n), atol=1e-7)
+
+
+def test_finite_time_iterations_chain():
+    """Chain MH has N distinct eigenvalues -> N-1 iterations."""
+    w = weights.metropolis_hastings(topology.chain(12))
+    assert baselines.finite_time_iterations(w) == 11

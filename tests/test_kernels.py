@@ -1,0 +1,128 @@
+"""Per-kernel correctness: shape/dtype sweeps against the pure-jnp oracles
+(ref.py), plus autodiff checks for the custom-vjp SSD scan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# consensus_update (fused two-tap FMA).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(7,), (1024,), (257, 33), (4, 5, 6), (2, 3, 4, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_consensus_update_sweep(shape, dtype, rng):
+    xw, x, xp = (jnp.asarray(rng.standard_normal(shape), dtype) for _ in range(3))
+    y = ops.consensus_update(xw, x, xp, 1.3, 0.2, -0.5)
+    yr = ref.consensus_update_ref(xw, x, xp, 1.3, 0.2, -0.5)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32), rtol=tol, atol=tol
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    a=st.floats(-2, 2), b=st.floats(-2, 2), c=st.floats(-2, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_consensus_update_property(n, a, b, c, seed):
+    r = np.random.default_rng(seed)
+    xw, x, xp = (jnp.asarray(r.standard_normal(n), jnp.float32) for _ in range(3))
+    y = ops.consensus_update(xw, x, xp, a, b, c)
+    np.testing.assert_allclose(
+        y, a * xw + b * x + c * xp, rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# gossip_matvec (blocked W @ X).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,f", [(8, 1), (50, 3), (128, 512), (200, 300), (73, 640)])
+def test_gossip_matvec_sweep(n, f, rng):
+    w = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    np.testing.assert_allclose(
+        ops.gossip_matvec(w, x), ref.gossip_matvec_ref(w, x), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_gossip_matvec_bf16_inputs(rng):
+    w = jnp.asarray(rng.standard_normal((64, 64)), jnp.bfloat16)
+    x = jnp.asarray(rng.standard_normal((64, 32)), jnp.bfloat16)
+    y = ops.gossip_matvec(w, x)
+    assert y.dtype == jnp.float32  # fp32 accumulation contract
+    np.testing.assert_allclose(y, ref.gossip_matvec_ref(w, x), rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan (chunked Mamba-2 SSD) vs the naive recurrence oracle.
+# ---------------------------------------------------------------------------
+
+def _ssd_inputs(rng, b, t, h, g, dh, ds):
+    x = jnp.asarray(rng.standard_normal((b, t, h, dh)), jnp.float32)
+    a = -jnp.abs(jnp.asarray(rng.standard_normal((b, t, h)), jnp.float32)) * 0.15
+    bb = jnp.asarray(rng.standard_normal((b, t, g, ds)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((b, t, g, ds)), jnp.float32)
+    return x, a, bb, cc
+
+
+@pytest.mark.parametrize("b,t,h,g,dh,ds,chunk", [
+    (1, 32, 2, 1, 8, 16, 16),
+    (2, 256, 4, 2, 16, 32, 64),
+    (1, 96, 3, 1, 8, 8, 32),   # t not a power of chunk count
+    (2, 40, 2, 2, 4, 8, 16),   # t % chunk != 0 -> padded path
+])
+def test_ssd_scan_vs_recurrence(b, t, h, g, dh, ds, chunk, rng):
+    x, a, bb, cc = _ssd_inputs(rng, b, t, h, g, dh, ds)
+    y, hf = ops.ssd_scan(x, a, bb, cc, chunk=chunk)
+    b_h = jnp.repeat(bb, h // g, axis=2)
+    c_h = jnp.repeat(cc, h // g, axis=2)
+    yr, hr = ref.ssd_scan_ref(x, a, b_h, c_h)
+    np.testing.assert_allclose(y, yr, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(hf, hr, rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_scan_state_carry(rng):
+    """Splitting a sequence across two calls with h0 == one full call."""
+    b, t, h, g, dh, ds, chunk = 1, 64, 2, 1, 8, 16, 16
+    x, a, bb, cc = _ssd_inputs(rng, b, t, h, g, dh, ds)
+    y_full, h_full = ops.ssd_scan(x, a, bb, cc, chunk=chunk)
+    half = t // 2
+    y1, h1 = ops.ssd_scan(x[:, :half], a[:, :half], bb[:, :half], cc[:, :half], chunk=chunk)
+    y2, h2 = ops.ssd_scan(x[:, half:], a[:, half:], bb[:, half:], cc[:, half:], h0=h1, chunk=chunk)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h2, h_full, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_custom_vjp_gradcheck(rng):
+    b, t, h, g, dh, ds, chunk = 1, 48, 2, 1, 8, 12, 16
+    x, a, bb, cc = _ssd_inputs(rng, b, t, h, g, dh, ds)
+
+    def f_kernel(x, a, bb, cc):
+        y, hf = ops.ssd_scan(x, a, bb, cc, chunk=chunk)
+        return (y ** 2).sum() + (hf ** 2).sum()
+
+    def f_oracle(x, a, bb, cc):
+        y, hf = ref.ssd_scan_ref(x, a, jnp.repeat(bb, h // g, 2), jnp.repeat(cc, h // g, 2))
+        return (y ** 2).sum() + (hf ** 2).sum()
+
+    g1 = jax.grad(f_kernel, (0, 1, 2, 3))(x, a, bb, cc)
+    g2 = jax.grad(f_oracle, (0, 1, 2, 3))(x, a, bb, cc)
+    for u, v in zip(g1, g2):
+        rel = float(jnp.abs(u - v).max() / (jnp.abs(v).max() + 1e-9))
+        assert rel < 2e-3
+
+
+def test_ssd_decay_stability(rng):
+    """a <= 0 contract: outputs stay finite over long sequences."""
+    b, t, h, g, dh, ds = 1, 512, 2, 1, 8, 16
+    x, a, bb, cc = _ssd_inputs(rng, b, t, h, g, dh, ds)
+    y, hf = ops.ssd_scan(x, a * 10, bb, cc, chunk=128)  # strong decay
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(hf).all())

@@ -1,0 +1,68 @@
+"""Consensus simulation engine: backend agreement + paper-scale behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import accel, metrics, simulator, topology, weights
+
+
+@pytest.fixture
+def setup(rng):
+    g = topology.random_geometric(60, rng)
+    w = weights.metropolis_hastings(g)
+    th = accel.theta_asymptotic(0.5)
+    a = accel.alpha_star_from_w(w, th)
+    x0 = rng.standard_normal((60, 4))
+    return w, th, a, x0
+
+
+def test_backends_agree(setup):
+    w, th, a, x0 = setup
+    r_np = simulator.simulate(w, x0, 150, alpha=a, theta=th, backend="numpy")
+    r_jx = simulator.simulate(w, x0, 150, alpha=a, theta=th, backend="jax")
+    r_pl = simulator.simulate(w, x0, 150, alpha=a, theta=th, backend="pallas")
+    np.testing.assert_allclose(r_np.mse[:50], r_jx.mse[:50], rtol=1e-3, atol=1e-6)
+    np.testing.assert_allclose(r_jx.mse, r_pl.mse, rtol=1e-4, atol=1e-7)
+
+
+def test_accelerated_beats_memoryless(setup):
+    w, th, a, x0 = setup
+    r_mem = simulator.simulate(w, x0, 300, backend="numpy")
+    r_acc = simulator.simulate(w, x0, 300, alpha=a, theta=th, backend="numpy")
+    assert r_acc.mse[-1].max() < r_mem.mse[-1].min() * 1e-2
+
+
+def test_memoryless_matches_linear_recursion(setup, rng):
+    w, _, _, _ = setup
+    x0 = rng.standard_normal(60)
+    r = simulator.simulate(w, x0, 37, backend="numpy")
+    np.testing.assert_allclose(r.x_final, np.linalg.matrix_power(w, 37) @ x0, atol=1e-10)
+
+
+def test_average_is_preserved(setup):
+    w, th, a, x0 = setup
+    r = simulator.simulate(w, x0, 200, alpha=a, theta=th, backend="numpy")
+    np.testing.assert_allclose(r.x_final.mean(axis=0), x0.mean(axis=0), atol=1e-9)
+
+
+def test_empirical_gain_matches_asymptotic_chain():
+    """Fig. 4 behaviour: measured averaging-time ratio ~ asymptotic gain."""
+    n = 60
+    g = topology.chain(n)
+    w = weights.metropolis_hastings(g)
+    th = accel.theta_asymptotic(0.5)
+    lam2 = accel.lambda2(w)
+    a = accel.alpha_star(lam2, th)
+    x0 = metrics.slope_init(g.coords, n)
+    xbar = np.full(n, x0.mean())
+    t_mem = metrics.averaging_time(lambda s: w @ s, x0, xbar, eps=1e-5)
+    x, xp = x0.copy(), x0.copy()
+    err0 = np.linalg.norm(x0 - xbar)
+    t_acc = None
+    for t in range(1, 200_000):
+        x, xp = accel.accelerated_step(w, x, xp, a, th)
+        if np.linalg.norm(x - xbar) <= 1e-5 * err0:
+            t_acc = t
+            break
+    gain_emp = t_mem / t_acc
+    gain_asym = metrics.processing_gain(lam2, accel.rho_accel(lam2, th))
+    assert 0.5 * gain_asym < gain_emp < 2.0 * gain_asym
