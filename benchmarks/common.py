@@ -1,12 +1,14 @@
-"""Shared benchmark scaffolding: trial runners + CSV emit."""
+"""Shared benchmark scaffolding: trial runners + CSV/JSON emit."""
 from __future__ import annotations
 
+import json
 import os
+import platform
 import time
 
 import numpy as np
 
-from repro.core import accel, baselines, doi, metrics, simulator, topology, weights
+from repro.core import accel, metrics, topology, weights
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 
@@ -17,7 +19,11 @@ def ensure_out() -> str:
 
 
 def emit(name: str, rows: list[dict]) -> None:
-    """Print CSV to stdout and save under experiments/bench/<name>.csv."""
+    """Print CSV to stdout; save <name>.csv + BENCH_<name>.json artifacts.
+
+    The JSON mirror (rows + environment stamp) is what CI uploads as a
+    workflow artifact, so the perf trajectory accumulates across commits.
+    """
     if not rows:
         return
     cols = list(rows[0])
@@ -27,8 +33,25 @@ def emit(name: str, rows: list[dict]) -> None:
     text = "\n".join(lines)
     print(f"### {name}")
     print(text)
-    with open(os.path.join(ensure_out(), f"{name}.csv"), "w") as f:
+    out = ensure_out()
+    with open(os.path.join(out, f"{name}.csv"), "w") as f:
         f.write(text + "\n")
+    import jax
+
+    payload = {
+        "bench": name,
+        "unix_time": time.time(),
+        "env": {
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "commit": os.environ.get("GITHUB_SHA", ""),
+        },
+        "rows": rows,
+    }
+    with open(os.path.join(out, f"BENCH_{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
 
 
 def _fmt(v) -> str:

@@ -46,6 +46,44 @@ def run():
             "derived": "paper-scale trial batch",
         })
 
+    # fused gossip round vs the unfused matvec + consensus_update pair: the
+    # fusion removes the x_w HBM round-trip (1 write + 2 reads of the state
+    # block per round) and one kernel launch.
+    xp0 = rng.standard_normal((200, 300))
+    wj, xj, xpj = (jnp.asarray(t, jnp.float32) for t in (w, x0, xp0))
+    def f_fused():
+        return ops.gossip_round(wj, xj, xpj, 1.1, 0.2, -0.3)
+
+    def f_pair():
+        return ops.consensus_update(
+            ops.gossip_matvec(wj, xj), xj, xpj, 1.1, 0.2, -0.3
+        )
+    rows.append({"bench": "gossip_round_fused_N200xF300",
+                 "us_per_call": _time(f_fused),
+                 "derived": "one pallas_call per round"})
+    rows.append({"bench": "gossip_round_unfused_pair_N200xF300",
+                 "us_per_call": _time(f_pair),
+                 "derived": "matvec + FMA, x_w via HBM"})
+
+    # batched sweep engine: a full topology x design grid in one program.
+    # Build the ensemble once and warm each backend with an untimed call so
+    # the row tracks steady-state scan throughput, not host eigensolves or
+    # jit trace/compile time.
+    from repro.sweep import SweepSpec, build_ensemble, run_ensemble
+
+    spec = SweepSpec(topologies=("chain", "grid2d", "rgg"), sizes=(16, 32),
+                     designs=("memoryless", "asymptotic"), num_trials=8, seed=0)
+    ens = build_ensemble(spec)
+    for backend in ("jax", "pallas"):
+        run_ensemble(ens, num_iters=100, backend=backend)  # warm-up/compile
+        t0 = time.perf_counter()
+        res = run_ensemble(ens, num_iters=100, backend=backend)
+        rows.append({
+            "bench": f"sweep_{backend}_G{res.ensemble.num_configs}x100it",
+            "us_per_call": (time.perf_counter() - t0) * 1e6,
+            "derived": "ensemble grid, single jitted scan (warmed)",
+        })
+
     # ssd_scan kernel vs naive recurrence oracle (CPU interpret)
     B, T, H, G, dh, ds = 1, 1024, 8, 1, 64, 64
     x = jnp.asarray(rng.standard_normal((B, T, H, dh)), jnp.float32)

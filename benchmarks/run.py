@@ -1,10 +1,13 @@
 """Benchmark entry point: one suite per paper figure/table + the systems
-extensions. Prints CSV blocks; saves under experiments/bench/.
+extensions. Prints CSV blocks; saves CSV + BENCH_*.json under
+experiments/bench/.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full | --quick]
 
 Default sizes keep a single-core CPU run in minutes; --full uses paper-scale
-trial counts.
+trial counts; --quick is the CI smoke tier — kernel microbenches plus the
+sweep engine at toy sizes, a couple of minutes on a shared runner, emitting
+the BENCH_*.json artifacts that the workflow uploads.
 """
 from __future__ import annotations
 
@@ -12,17 +15,36 @@ import argparse
 import time
 
 
+def _quick() -> None:
+    from . import fig34_scaling, kernel_perf
+
+    kernel_perf.run()
+    fig34_scaling.run(
+        trials=2,
+        rgg_sizes=(30, 50),
+        chain_sizes=(10, 20, 30),
+        backend="pallas",
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale trials (300) instead of CI-scale")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: kernel perf + toy sweep only")
     args = ap.parse_args()
     full = args.full
+
+    t0 = time.time()
+    if args.quick:
+        _quick()
+        print(f"benchmarks (quick) done in {time.time()-t0:.0f}s")
+        return
 
     from . import (fig1_mse, fig2_polyfilt, fig34_scaling, fig5_finite_time,
                    init_cost, kernel_perf, roofline_table, sync_cost)
 
-    t0 = time.time()
     fig1_mse.run(trials=300 if full else 8, iters=400)
     fig2_polyfilt.run(trials=100 if full else 5, iters=600)
     fig34_scaling.run(trials=20 if full else 3,

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
 
 from repro.dist.gossip import make_fabric
 

@@ -25,7 +25,6 @@ from __future__ import annotations
 import dataclasses
 import numpy as np
 
-from .weights import averaging_matrix
 
 __all__ = [
     "Theta",
@@ -190,6 +189,18 @@ def phi3_matrix(w: np.ndarray, alpha: float, theta: Theta) -> np.ndarray:
     return np.concatenate([top, bot], axis=0)
 
 
+def _require_symmetric(w: np.ndarray, fn: str) -> None:
+    w = np.asarray(w)
+    if w.ndim != 2 or w.shape[0] != w.shape[1]:
+        raise ValueError(f"{fn} needs a square (N, N) matrix, got shape {w.shape}")
+    if not np.allclose(w, w.T, atol=1e-8):
+        raise ValueError(
+            f"{fn} requires a symmetric W (paper Eq. 2: W = W^T); "
+            f"max asymmetry {np.abs(w - w.T).max():.3g}. Symmetrize the weight "
+            f"matrix (e.g. metropolis_hastings) before the spectral analysis."
+        )
+
+
 def phi3_eigenvalues(w_eigs: np.ndarray, alpha: float, theta: Theta) -> np.ndarray:
     """Analytic eigenvalues of Phi_3[alpha] from the eigenvalues of W.
 
@@ -198,7 +209,14 @@ def phi3_eigenvalues(w_eigs: np.ndarray, alpha: float, theta: Theta) -> np.ndarr
     with lambda_i(W_3[alpha]) = (1 - alpha + alpha theta3) lambda_i(W) + alpha theta2.
     Returns a complex array of length 2N.
     """
-    lam_w3 = (1.0 - alpha + alpha * theta.t3) * np.asarray(w_eigs) + alpha * theta.t2
+    w_eigs = np.asarray(w_eigs)
+    if np.iscomplexobj(w_eigs) and np.abs(w_eigs.imag).max(initial=0.0) > 1e-9:
+        raise ValueError(
+            "phi3_eigenvalues got complex W eigenvalues — the quadratic "
+            "eigenvalue map (Eq. 34) assumes a symmetric W with a real "
+            "spectrum; non-symmetric weight matrices are outside Theorem 1."
+        )
+    lam_w3 = (1.0 - alpha + alpha * theta.t3) * w_eigs.real + alpha * theta.t2
     disc = lam_w3.astype(np.complex128) ** 2 + 4.0 * alpha * theta.t1
     root = np.sqrt(disc)
     return np.concatenate([0.5 * (lam_w3 + root), 0.5 * (lam_w3 - root)])
@@ -211,6 +229,7 @@ def spectral_radius_minus_j(w: np.ndarray, alpha: float, theta: Theta) -> float:
     mu = 1 root (from lambda_1(W) = 1) excluded; the companion root -alpha
     theta1 of that branch *is* included (Section V-B, Eq. 38).
     """
+    _require_symmetric(w, "spectral_radius_minus_j")
     vals = np.linalg.eigvalsh(w)
     lam_rest = np.sort(vals)[:-1]  # drop the top eigenvalue 1
     mus = phi3_eigenvalues(lam_rest, alpha, theta)

@@ -23,7 +23,6 @@ from __future__ import annotations
 import dataclasses
 import numpy as np
 
-from .weights import averaging_matrix
 
 __all__ = [
     "PolyFilter",

@@ -7,9 +7,14 @@ module provides a vectorized engine that runs *all trials at once* as an
 
 * ``numpy``  — float64, reference semantics (the theory layer's arithmetic);
 * ``jax``    — jitted lax.scan over iterations, fp32 by default;
-* ``pallas`` — same scan but the W @ X product and the fused two-tap update run
-  through the Pallas kernels in ``repro.kernels`` (interpret mode on CPU,
-  compiled VMEM-tiled kernels on TPU).
+* ``pallas`` — same scan but each round runs through the FUSED Pallas
+  gossip-round kernel (``repro.kernels.gossip_round``): matvec accumulation
+  and the two-tap FMA in one kernel launch, no intermediate x_w in HBM
+  (interpret mode on CPU, compiled VMEM-tiled on TPU).
+
+The jax/pallas backends are the degenerate G=1 case of the batched sweep
+engine (``repro.sweep.engine``) — one code path from single-config debugging
+runs to device-saturating ensemble grids.
 
 Returns per-iteration MSE trajectories without materializing the full state
 history (the scan carries only (x, x_prev)).
@@ -17,7 +22,6 @@ history (the scan carries only (x, x_prev)).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Literal
 
 import numpy as np
@@ -79,11 +83,12 @@ def simulate(
     alpha = 0 (or theta None) gives memoryless consensus; otherwise the
     two-tap accelerated recursion with mixing parameter alpha.
     """
+    if backend not in ("numpy", "jax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")  # before any array work
     x0 = np.asarray(x0)
     squeeze = x0.ndim == 1
     if squeeze:
         x0 = x0[:, None]
-    xbar = x0.mean(axis=0, keepdims=True) * np.ones_like(x0)
 
     if theta is None or alpha == 0.0:
         a_w, b_x, c_p = 1.0, 0.0, 0.0
@@ -93,6 +98,7 @@ def simulate(
         c_p = alpha * theta.t1
 
     if backend == "numpy":
+        xbar = x0.mean(axis=0, keepdims=True) * np.ones_like(x0)
         x = x0.astype(np.float64)
         xp = x.copy()
         wd = w.astype(np.float64)
@@ -102,55 +108,22 @@ def simulate(
             x, xp = a_w * xw + b_x * x + c_p * xp, x
             mse.append(_mse_to_target(x, xbar))
         out_x, out_mse = x, np.stack(mse)
-    elif backend in ("jax", "pallas"):
-        out_x, out_mse = _simulate_jax(
-            w, x0, xbar, num_iters, a_w, b_x, c_p, use_kernels=(backend == "pallas")
-        )
-        out_x, out_mse = np.asarray(out_x), np.asarray(out_mse)
     else:
-        raise ValueError(f"unknown backend {backend!r}")
+        # jax/pallas: the degenerate G=1 sweep through the batched engine —
+        # single-config simulation and paper-scale grids share one jitted
+        # scan (and its compilation cache). Import here: sweep sits above
+        # core in the layer order.
+        from repro.sweep import engine as sweep_engine
+
+        x_fin, mse = sweep_engine.run_batch(
+            np.asarray(w)[None],
+            x0[None],
+            np.asarray([[a_w, b_x, c_p]], dtype=np.float32),
+            num_iters=num_iters,
+            backend=backend,
+        )
+        out_x, out_mse = x_fin[0], mse[0]
 
     if squeeze:
         out_x = out_x[:, 0]
     return SimResult(x_final=out_x, mse=out_mse)
-
-
-@functools.partial(
-    __import__("jax").jit,
-    static_argnames=("num_iters", "use_kernels"),
-)
-def _simulate_jax(w, x0, xbar, num_iters, a_w, b_x, c_p, use_kernels=False):
-    import jax
-    import jax.numpy as jnp
-
-    w = jnp.asarray(w, dtype=jnp.float32)
-    x0 = jnp.asarray(x0, dtype=jnp.float32)
-    xbar = jnp.asarray(xbar, dtype=jnp.float32)
-    coef = (jnp.float32(a_w), jnp.float32(b_x), jnp.float32(c_p))
-
-    if use_kernels:
-        from repro.kernels import ops as kops
-
-        def matvec(m, v):
-            return kops.gossip_matvec(m, v)
-
-        def fma(xw, x, xp):
-            return kops.consensus_update(xw, x, xp, *coef)
-    else:
-        def matvec(m, v):
-            return m @ v
-
-        def fma(xw, x, xp):
-            return coef[0] * xw + coef[1] * x + coef[2] * xp
-
-    def body(carry, _):
-        x, xp = carry
-        xw = matvec(w, x)
-        x_new = fma(xw, x, xp)
-        d = x_new - xbar
-        return (x_new, x), (d * d).mean(axis=0)
-
-    (x_fin, _), mse_tail = jax.lax.scan(body, (x0, x0), None, length=num_iters)
-    d0 = x0 - xbar
-    mse0 = (d0 * d0).mean(axis=0)
-    return x_fin, jnp.concatenate([mse0[None], mse_tail], axis=0)

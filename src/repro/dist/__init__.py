@@ -1,0 +1,13 @@
+"""Distributed consensus fabric (SPMD layer).
+
+This package grows toward the full SPMD consensus layer referenced across
+the tree (``make_train_step``, in-mesh ``accel_gossip``/``distributed_lambda2``,
+``sharding``): those land with the consensus-training PR. What is here today
+is the host-side fabric description (``gossip.make_fabric``) and the
+wire-level compression layer — both self-contained and test-covered.
+"""
+from . import compression, gossip
+from .compression import BF16Wire, Int8Wire
+from .gossip import PodFabric, make_fabric
+
+__all__ = ["compression", "gossip", "BF16Wire", "Int8Wire", "PodFabric", "make_fabric"]

@@ -1,0 +1,56 @@
+"""Gossip wire compression with error feedback.
+
+A consensus round exchanges full gradient buckets between pods over DCN; the
+wire formats here cut that traffic 2-4x. Both wires follow the standard
+error-feedback contract (Seide et al. / EF-SGD): ``encode_decode(x, err)``
+quantizes ``x + err`` (the signal plus the residual the wire failed to send
+last round), returns the dequantized payload the receiver will see, and the
+new residual. Accumulated payloads are therefore unbiased for the true
+signal: ``sum_t payload_t = T x + err_0 - err_T``.
+
+Everything is shape-polymorphic and jit-safe (no python branching on data);
+the wires are stateless — the caller carries ``err`` in its scan/loop state.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["BF16Wire", "Int8Wire"]
+
+
+class BF16Wire:
+    """Truncate mantissas to bfloat16 on the wire (2x traffic cut).
+
+    bf16 keeps fp32's exponent range, so the residual is pure mantissa
+    rounding — tiny, but still tracked for exactness of the EF contract.
+    """
+
+    bits_per_value = 16
+
+    def encode_decode(self, x: jnp.ndarray, err: jnp.ndarray):
+        target = x + err
+        payload = target.astype(jnp.bfloat16).astype(x.dtype)
+        return payload, target - payload
+
+
+class Int8Wire:
+    """Symmetric per-bucket int8 quantization (4x traffic cut).
+
+    Scale = max|x + err| / 127, so the quantization error per element is at
+    most half a step. The max-abs reduction is per call (per bucket), which
+    matches how the fabric shards gradients into buckets.
+    """
+
+    bits_per_value = 8
+
+    def __init__(self, levels: int = 127):
+        self.levels = levels
+
+    def encode_decode(self, x: jnp.ndarray, err: jnp.ndarray):
+        target = x + err
+        scale = jnp.max(jnp.abs(target)) / self.levels
+        # all-zero bucket: keep scale finite, payload exactly zero
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.clip(jnp.round(target / safe), -self.levels, self.levels)
+        payload = (q * safe).astype(x.dtype)
+        return payload, target - payload

@@ -1,0 +1,106 @@
+"""Pod-level gossip fabric: the paper's optimization applied to pod graphs.
+
+A ``PodFabric`` is the static description of cross-pod consensus for P pods
+on a named topology: the Metropolis-Hastings weight matrix W, its spectral
+gap, and the paper-optimal two-tap parameters (Theorem 1) for it. The
+elastic runtime (``repro.runtime.elastic``) rebuilds a fabric on every graph
+edit; the sync-cost model (``benchmarks/sync_cost.py``) reads round counts
+off it.
+
+The SPMD execution half (``accel_gossip`` inside shard_map, in-mesh
+``distributed_lambda2`` / Algorithm 1) lands with the consensus-training PR;
+everything here is host-side numpy and cheap (P is small).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from ..core import accel, topology, weights
+from ..core.accel import Theta
+
+__all__ = ["PodFabric", "make_fabric"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PodFabric:
+    """Pod graph + paper-optimal consensus parameters for it."""
+
+    w: np.ndarray            # (P, P) Metropolis-Hastings weights
+    topology: str
+    theta: Theta
+    lambda2: float           # lambda_2(W)
+    alpha: float             # alpha* (Theorem 1)
+    rho_accel: float         # rho(Phi3[alpha*] - J)
+    rho_memoryless: float    # rho(W - J)
+
+    @property
+    def num_pods(self) -> int:
+        return self.w.shape[0]
+
+    def _rounds(self, rho: float, eps: float) -> int:
+        """First R with rho^R <= eps (1 when the graph mixes exactly)."""
+        if rho <= 0.0:
+            return 1
+        if rho >= 1.0:
+            raise ValueError(f"non-contracting fabric (rho={rho})")
+        return max(1, math.ceil(math.log(eps) / math.log(rho)))
+
+    def rounds_for(self, eps: float) -> int:
+        """Accelerated rounds to reach relative consensus error eps."""
+        return self._rounds(self.rho_accel, eps)
+
+    def rounds_for_memoryless(self, eps: float) -> int:
+        """Memoryless x(t+1) = W x(t) rounds for the same eps."""
+        return self._rounds(self.rho_memoryless, eps)
+
+
+def _pod_graph(p: int, kind: str) -> topology.Graph:
+    if p < 1:
+        raise ValueError("need at least one pod")
+    if p == 1:
+        return topology.Graph(adjacency=np.zeros((1, 1)), name=kind)
+    if p == 2:
+        return topology.chain(2)
+    if kind == "ring":
+        return topology.ring(p)
+    if kind == "chain":
+        return topology.chain(p)
+    if kind == "torus":
+        side = int(round(math.sqrt(p)))
+        if side * side != p:
+            raise ValueError(f"torus fabric needs a square pod count, got {p}")
+        return topology.torus2d(side)
+    raise ValueError(f"unknown fabric topology {kind!r}")
+
+
+def make_fabric(p: int, kind: str = "ring", theta: Theta | None = None) -> PodFabric:
+    """Build the fabric for ``p`` pods: W, lambda_2, alpha*, rho*.
+
+    Dense O(P^3) eigensolve — P is the pod count (tens), not the node count.
+    """
+    theta = theta or accel.theta_asymptotic(0.5)
+    g = _pod_graph(p, kind)
+    if p == 1:
+        w = np.ones((1, 1))
+        return PodFabric(w=w, topology=kind, theta=theta, lambda2=0.0,
+                         alpha=0.0, rho_accel=0.0, rho_memoryless=0.0)
+    w = weights.metropolis_hastings(g)
+    vals = np.linalg.eigvalsh(w)
+    if abs(vals[0]) > vals[-2]:
+        # Theorem 1 needs |lambda_P| <= lambda_2; the lazy map guarantees it.
+        w = weights.lazy(w)
+        vals = np.linalg.eigvalsh(w)
+    lam2 = float(vals[-2])
+    rho_mem = float(max(abs(vals[0]), abs(lam2)))
+    if lam2 <= 0.0:
+        # complete-graph-like mixing: one round is exact, nothing to optimize
+        return PodFabric(w=w, topology=kind, theta=theta, lambda2=max(lam2, 0.0),
+                         alpha=0.0, rho_accel=0.0, rho_memoryless=rho_mem)
+    a_star = accel.alpha_star(lam2, theta)
+    return PodFabric(
+        w=w, topology=kind, theta=theta, lambda2=lam2, alpha=a_star,
+        rho_accel=accel.rho_accel(lam2, theta), rho_memoryless=rho_mem,
+    )

@@ -3,6 +3,10 @@
 * ``consensus_update`` — fused two-tap accelerated-gossip update (Eq. 4a-4c),
   the bandwidth-bound elementwise half of a gossip round over gradient buckets.
 * ``gossip_matvec``    — blocked W @ X, the paper-scale simulator inner loop.
+* ``gossip_round``     — ONE fused accelerated round a*(W@X) + b*X + c*Xp:
+  matvec accumulation and the two-tap FMA in a single pallas_call (no x_w HBM
+  round-trip), with a batched-grid variant over a (G, N, N) topology ensemble
+  that the sweep engine (``repro.sweep``) drives directly.
 * ``ssd_chunk``        — Mamba-2 SSD intra-chunk block (MXU-matmul dual form),
   the dominant compute of the ssm/hybrid assigned architectures.
 
@@ -10,6 +14,20 @@ Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd public
 wrapper in ``ops.py`` (interpret mode on CPU, compiled VMEM-tiled on TPU).
 """
 from . import ops, ref
-from .ops import consensus_update, gossip_matvec, ssd_scan
+from .ops import (
+    consensus_update,
+    gossip_matvec,
+    gossip_round,
+    gossip_round_batched,
+    ssd_scan,
+)
 
-__all__ = ["ops", "ref", "consensus_update", "gossip_matvec", "ssd_scan"]
+__all__ = [
+    "ops",
+    "ref",
+    "consensus_update",
+    "gossip_matvec",
+    "gossip_round",
+    "gossip_round_batched",
+    "ssd_scan",
+]

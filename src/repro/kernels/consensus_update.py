@@ -23,7 +23,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["consensus_update_kernel", "consensus_update_pallas", "LANES"]

@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: one fully-fused accelerated gossip round.
+
+    Y = a * (W @ X) + b * X + c * Xp
+
+with a = 1 - alpha + alpha*theta3, b = alpha*theta2, c = alpha*theta1
+(Eq. 4a-4c in combined form). This fuses the two kernels the simulator
+previously chained per iteration — ``gossip_matvec`` (W @ X) and
+``consensus_update`` (the two-tap FMA) — into a single ``pallas_call``:
+the matvec accumulates in the output VMEM block across the K grid steps,
+and on the final K step the FMA taps are applied to the resident block
+before writeback. The intermediate x_w = W @ X therefore never round-trips
+through HBM: per round this saves one full write + one full read of the
+(N, F) state block, on top of the second kernel's launch and its extra
+X read — the simulator's inner loop runs thousands of such rounds.
+
+Grid layout (single graph): (N/bm, F/bf, N/bk) with K innermost, exactly as
+in ``gossip_matvec`` — the output index map ignores k, so Pallas keeps the
+(bm, bf) block resident across the contraction. X is passed twice with two
+different index maps: (kk, j) tiles feed the MXU contraction; the (i, j)
+tile (k-independent, fetched once) provides the ``b * X`` tap.
+
+Batched variant: a leading G grid axis indexes a (G, N, N) stacked topology
+ensemble with per-graph coefficients (G, 3) — one kernel launch evaluates a
+full topology x theta x alpha sweep grid. The sweep engine
+(``repro.sweep.engine``) drives this directly; blocks carry a leading
+length-1 graph dim which is squeezed inside the kernel.
+
+VMEM budget per step at the default 128/128/512 tiles, fp32: out 256 KB +
+W 64 KB + three X-shaped tiles 768 KB — comfortably inside ~16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "gossip_round_kernel",
+    "gossip_round_pallas",
+    "gossip_round_batched_kernel",
+    "gossip_round_batched_pallas",
+]
+
+
+def gossip_round_kernel(nk: int, coef_ref, w_ref, xk_ref, xi_ref, xp_ref, y_ref):
+    """Accumulate one (bm,bk)@(bk,bf) partial product; FMA on the last K step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += jnp.dot(
+        w_ref[...], xk_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _fma():
+        a = coef_ref[0, 0]
+        b = coef_ref[0, 1]
+        c = coef_ref[0, 2]
+        y_ref[...] = a * y_ref[...] + b * xi_ref[...] + c * xp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bf", "interpret"))
+def gossip_round_pallas(
+    w: jax.Array,
+    x: jax.Array,
+    xp: jax.Array,
+    coef: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bf: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused Y = coef[0]*(W@X) + coef[1]*X + coef[2]*Xp, operands pre-padded.
+
+    ``coef`` is a (1, 3) traced array [a, b, c] (alpha* may be computed
+    in-program from a DOI lambda_2 estimate). Shape management lives in
+    ``repro.kernels.ops.gossip_round``.
+    """
+    n, k = w.shape
+    k2, f = x.shape
+    if k != k2 or x.shape != xp.shape:
+        raise ValueError(f"shape mismatch: W {w.shape}, X {x.shape}, Xp {xp.shape}")
+    if n % bm or k % bk or f % bf:
+        raise ValueError(f"shapes ({n},{k},{f}) not multiples of tiles ({bm},{bk},{bf})")
+    nk = k // bk
+    grid = (n // bm, f // bf, nk)
+    return pl.pallas_call(
+        functools.partial(gossip_round_kernel, nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bf), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        interpret=interpret,
+    )(coef, w, x, x, xp)
+
+
+def gossip_round_batched_kernel(nk: int, coef_ref, w_ref, xk_ref, xi_ref, xp_ref, y_ref):
+    """Batched-grid body: blocks carry a leading length-1 graph dim."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[0] += jnp.dot(
+        w_ref[0], xk_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _fma():
+        a = coef_ref[0, 0]
+        b = coef_ref[0, 1]
+        c = coef_ref[0, 2]
+        y_ref[...] = a * y_ref[...] + b * xi_ref[...] + c * xp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bf", "interpret"))
+def gossip_round_batched_pallas(
+    ws: jax.Array,
+    xs: jax.Array,
+    xps: jax.Array,
+    coefs: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bf: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused round over a stacked ensemble: Ws (G,N,N), Xs/Xps (G,N,F), coefs (G,3).
+
+    Grid (G, N/bm, F/bf, N/bk); each graph g reads its own W stack slice and
+    (a, b, c) row, so one launch covers the whole sweep grid.
+    """
+    g, n, k = ws.shape
+    g2, k2, f = xs.shape
+    if g != g2 or k != k2 or xs.shape != xps.shape or coefs.shape != (g, 3):
+        raise ValueError(
+            f"shape mismatch: Ws {ws.shape}, Xs {xs.shape}, Xps {xps.shape}, "
+            f"coefs {coefs.shape}"
+        )
+    if n % bm or k % bk or f % bf:
+        raise ValueError(f"shapes ({n},{k},{f}) not multiples of tiles ({bm},{bk},{bf})")
+    nk = k // bk
+    grid = (g, n // bm, f // bf, nk)
+    return pl.pallas_call(
+        functools.partial(gossip_round_batched_kernel, nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda gg, i, j, kk: (gg, 0)),
+            pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+            pl.BlockSpec((1, bk, bf), lambda gg, i, j, kk: (gg, kk, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, kk: (gg, i, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, kk: (gg, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bf), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, n, f), jnp.float32),
+        interpret=interpret,
+    )(coefs, ws, xs, xs, xps)

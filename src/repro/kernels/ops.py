@@ -12,6 +12,7 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import functools
+import inspect
 
 import jax
 import jax.numpy as jnp
@@ -21,10 +22,18 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .consensus_update import LANES, consensus_update_pallas
 from .gossip_matvec import gossip_matvec_pallas
+from .gossip_round import gossip_round_batched_pallas, gossip_round_pallas
 from .ref import ssd_chunk_ref
 from .ssd_chunk import ssd_chunk_pallas
 
-__all__ = ["consensus_update", "gossip_matvec", "ssd_scan", "use_interpret"]
+__all__ = [
+    "consensus_update",
+    "gossip_matvec",
+    "gossip_round",
+    "gossip_round_batched",
+    "ssd_scan",
+    "use_interpret",
+]
 
 
 def use_interpret() -> bool:
@@ -73,8 +82,7 @@ def consensus_update(xw, x, xp, a, b, c, *, block_rows: int = 256):
 def gossip_matvec(w, x):
     """Y = W(N,N) @ X(N,F), fp32 accumulation, auto-padded to MXU tiles."""
     n, f = w.shape[0], x.shape[1]
-    bm = bk = 128
-    bf = 512 if f > 256 else 128
+    bm, bk, bf = _round_tiles(f)
     np_, fp_ = _round_up(n, 128), _round_up(f, bf)
     wp = jnp.pad(w, ((0, np_ - n), (0, np_ - n)))
     xp_ = jnp.pad(x, ((0, np_ - n), (0, fp_ - f)))
@@ -82,6 +90,60 @@ def gossip_matvec(w, x):
         wp, xp_, bm=bm, bk=bk, bf=bf, interpret=use_interpret()
     )
     return y[:n, :f]
+
+
+# ---------------------------------------------------------------------------
+# gossip_round: fused Y = a*(W@X) + b*X + c*Xp (one accelerated round).
+# ---------------------------------------------------------------------------
+
+def _round_tiles(f: int) -> tuple[int, int, int]:
+    """(bm, bk, bf) MXU-aligned tiles; narrow trial blocks get narrow bf."""
+    return 128, 128, 512 if f > 256 else 128
+
+
+@jax.jit
+def gossip_round(w, x, xp, a, b, c):
+    """One fused two-tap round on a single graph, auto-padded to MXU tiles.
+
+    W (N, N), X/Xp (N, F), a/b/c scalars (python or traced). Zero padding is
+    exact: padded W rows/cols contribute nothing and padded X/Xp entries are
+    zero, so the sliced (N, F) output equals the unpadded computation.
+    """
+    n, f = w.shape[0], x.shape[1]
+    bm, bk, bf = _round_tiles(f)
+    np_, fp_ = _round_up(n, 128), _round_up(f, bf)
+    wp = jnp.pad(w.astype(jnp.float32), ((0, np_ - n), (0, np_ - n)))
+    xpad = jnp.pad(x.astype(jnp.float32), ((0, np_ - n), (0, fp_ - f)))
+    xppad = jnp.pad(xp.astype(jnp.float32), ((0, np_ - n), (0, fp_ - f)))
+    coef = jnp.stack(
+        [jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+         jnp.asarray(c, jnp.float32)]
+    ).reshape(1, 3)
+    y = gossip_round_pallas(
+        wp, xpad, xppad, coef, bm=bm, bk=bk, bf=bf, interpret=use_interpret()
+    )
+    return y[:n, :f]
+
+
+@jax.jit
+def gossip_round_batched(ws, xs, xps, coefs):
+    """Fused round over a stacked ensemble (the sweep-engine inner loop).
+
+    Ws (G, N, N), Xs/Xps (G, N, F), coefs (G, 3) -> (G, N, F) fp32. One
+    kernel launch covers the whole grid; per-graph coefficients ride in the
+    (G, 3) operand so heterogeneous (alpha, theta) cells share the program.
+    """
+    g, n, f = xs.shape
+    bm, bk, bf = _round_tiles(f)
+    np_, fp_ = _round_up(n, 128), _round_up(f, bf)
+    wp = jnp.pad(ws.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, np_ - n)))
+    xpad = jnp.pad(xs.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, fp_ - f)))
+    xppad = jnp.pad(xps.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, fp_ - f)))
+    y = gossip_round_batched_pallas(
+        wp, xpad, xppad, coefs.astype(jnp.float32),
+        bm=bm, bk=bk, bf=bf, interpret=use_interpret(),
+    )
+    return y[:, :n, :f]
 
 
 # ---------------------------------------------------------------------------
@@ -177,15 +239,21 @@ def _ssd_partition(mesh, arg_shapes, result_shape):
     return mesh, lower_fn, out_shardings, arg_shardings
 
 
-_ssd_chunk_cp.def_partition(
+# Shardy rule: n (batch*chunks) and h (heads) are parallel factors; the
+# chunk/state/head_dim factors stay whole per program; g (groups) is
+# replicated (its head mapping happens inside the kernel grid). jaxlib builds
+# that predate Shardy's custom_partitioning hook don't accept the kwarg —
+# GSPMD then relies on the infer/partition callbacks alone.
+_def_partition_kwargs = dict(
     partition=_ssd_partition,
     infer_sharding_from_operands=_ssd_infer,
     decode_shardings=True,
-    # Shardy rule: n (batch*chunks) and h (heads) are parallel factors; the
-    # chunk/state/head_dim factors stay whole per program; g (groups) is
-    # replicated (its head mapping happens inside the kernel grid).
-    sharding_rule="n h l p, n h o l, n g l s, n g l s -> n h l p, n h s p, n h o l, n h o q",
 )
+if "sharding_rule" in inspect.signature(custom_partitioning.def_partition).parameters:
+    _def_partition_kwargs["sharding_rule"] = (
+        "n h l p, n h o l, n g l s, n g l s -> n h l p, n h s p, n h o l, n h o q"
+    )
+_ssd_chunk_cp.def_partition(**_def_partition_kwargs)
 
 
 def _ssd_core(x, a, b, c, h0, chunk: int, use_kernel: bool):

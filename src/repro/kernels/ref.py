@@ -10,7 +10,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["consensus_update_ref", "gossip_matvec_ref", "ssd_chunk_ref", "ssd_scan_ref"]
+__all__ = [
+    "consensus_update_ref",
+    "gossip_matvec_ref",
+    "gossip_round_ref",
+    "gossip_round_batched_ref",
+    "ssd_chunk_ref",
+    "ssd_scan_ref",
+]
 
 
 def consensus_update_ref(xw, x, xp, a, b, c):
@@ -24,6 +31,28 @@ def gossip_matvec_ref(w, x):
         w.astype(jnp.float32), x.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
+
+
+def gossip_round_ref(w, x, xp, a, b, c):
+    """One fused accelerated round: y = a*(W@X) + b*X + c*Xp, fp32."""
+    x32 = x.astype(jnp.float32)
+    return (
+        a * gossip_matvec_ref(w, x32)
+        + b * x32
+        + c * xp.astype(jnp.float32)
+    )
+
+
+def gossip_round_batched_ref(ws, xs, xps, coefs):
+    """Ensemble round: Ws (G,N,N), Xs/Xps (G,N,F), coefs (G,3) -> (G,N,F)."""
+    xw = jnp.einsum(
+        "gij,gjf->gif", ws.astype(jnp.float32), xs.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    a = coefs[:, 0, None, None]
+    b = coefs[:, 1, None, None]
+    c = coefs[:, 2, None, None]
+    return a * xw + b * xs.astype(jnp.float32) + c * xps.astype(jnp.float32)
 
 
 def ssd_chunk_ref(x, a, b, c):

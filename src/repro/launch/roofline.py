@@ -25,7 +25,6 @@ the pod count in a multi-pod lowering are tagged DCN.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

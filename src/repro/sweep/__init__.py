@@ -1,0 +1,32 @@
+"""Batched ensemble sweep subsystem.
+
+Evaluates a full experiment grid — topology ensemble (chain / grid2d /
+torus2d / RGG / erdos_renyi) x theta designs x alpha grid x trial blocks —
+in a single jitted, vmapped, device-sharded program, with the per-round
+compute optionally running through the fused Pallas gossip-round kernel.
+
+* ``grid``   — declarative ``SweepSpec`` -> stacked ``Ensemble`` arrays.
+* ``engine`` — the one-compilation scan; ``run_sweep`` / ``run_batch``.
+
+``repro.core.simulator.simulate`` routes its jax/pallas backends through
+``run_batch`` as the degenerate G=1 sweep, so single-config simulation and
+paper-scale sweeps share one code path and one compilation cache.
+"""
+from . import engine, grid
+from .engine import SweepResult, run_batch, run_ensemble, run_sweep, trace_count
+from .grid import ConfigMeta, Ensemble, SweepSpec, build_ensemble, merge_ensembles
+
+__all__ = [
+    "engine",
+    "grid",
+    "SweepResult",
+    "run_batch",
+    "run_ensemble",
+    "run_sweep",
+    "trace_count",
+    "ConfigMeta",
+    "Ensemble",
+    "SweepSpec",
+    "build_ensemble",
+    "merge_ensembles",
+]

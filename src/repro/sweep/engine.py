@@ -1,0 +1,285 @@
+"""Batched sweep engine: the whole experiment grid in ONE jitted program.
+
+Axes and their mapping:
+
+* ``G`` (grid axis)  — every sweep cell: (topology family x size x graph
+  draw) x theta design x alpha. Stacked as the leading dim of the (G, N, N)
+  weight batch and sharded across devices over the mesh 'data' axis
+  (``NamedSharding(mesh, P('data'))``, mesh from ``repro.launch.mesh``).
+* ``N`` (node axis)  — padded to the largest network in the grid; replicated.
+* ``F`` (trial axis) — initial-condition columns, sharded over the mesh
+  'model' axis (degenerate on single-host CPU, real on a pod).
+* ``T`` (iterations) — a single ``lax.scan``; the carry is (x, x_prev) only,
+  so memory is O(G N F) while the returned MSE trajectory is O(T G F).
+
+The per-round body is the fused two-tap update. ``backend='jax'`` vmaps the
+single-graph round over the stacked graph axis (XLA fuses it into one batched
+matmul); ``backend='pallas'`` drives the batched-grid fused kernel
+``kernels.gossip_round_batched`` directly — matvec accumulation and the FMA
+taps in one kernel launch per round, no intermediate x_w in HBM.
+
+Everything funnels through one jit entry (``_sweep_scan``): a full sweep —
+and the degenerate G=1 sweep that ``repro.core.simulator.simulate`` routes
+through — costs exactly one compilation per (shape, backend) signature.
+``trace_count()`` exposes the compile counter so tests can assert that.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_cpu_mesh
+
+from .grid import ConfigMeta, Ensemble, SweepSpec, build_ensemble
+
+__all__ = ["SweepResult", "run_batch", "run_ensemble", "run_sweep", "trace_count"]
+
+# Incremented at trace time inside the jitted engine body: one bump per
+# compilation. Tests assert a full heterogeneous grid costs exactly one.
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "use_kernels", "tiles"))
+def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
+                tiles: tuple[int, int, int] | None = None):
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1  # trace-time side effect: counts compilations
+
+    ws = ws.astype(jnp.float32)
+    x0 = x0.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)[:, :, None]
+    inv_n = inv_n.astype(jnp.float32)
+    coefs = coefs.astype(jnp.float32)
+
+    # per-cell target: the true initial average over real nodes (padding is 0)
+    xbar = x0.sum(axis=1, keepdims=True) * inv_n[:, None, None]   # (G, 1, F)
+
+    if use_kernels:
+        # run_batch pre-pads the whole batch to the kernel tiles ONCE (and
+        # passes those tiles in), so the scan body drives the raw batched
+        # kernel directly — no per-round pad/slice materializations on the
+        # carry (the wrapper in kernels.ops pays those per call; over
+        # thousands of rounds they would dwarf the x_w round-trip the
+        # fusion removes).
+        from repro.kernels.ops import use_interpret
+        from repro.kernels.gossip_round import gossip_round_batched_pallas
+
+        bm, bk, bf = tiles
+        interpret = use_interpret()
+
+        def round_fn(x, xp):
+            return gossip_round_batched_pallas(
+                ws, x, xp, coefs, bm=bm, bk=bk, bf=bf, interpret=interpret
+            )
+    else:
+        def one_graph_round(w, x, xp, coef):
+            xw = jnp.dot(w, x, preferred_element_type=jnp.float32)
+            return coef[0] * xw + coef[1] * x + coef[2] * xp
+
+        vmapped_round = jax.vmap(one_graph_round)
+
+        def round_fn(x, xp):
+            return vmapped_round(ws, x, xp, coefs)
+
+    def mse_of(x):
+        d = (x - xbar) * mask
+        return (d * d).sum(axis=1) * inv_n[:, None]               # (G, F)
+
+    def body(carry, _):
+        x, xp = carry
+        x_new = round_fn(x, xp)
+        return (x_new, x), mse_of(x_new)
+
+    (x_fin, _), mse_tail = jax.lax.scan(body, (x0, x0), None, length=num_iters)
+    mse = jnp.concatenate([mse_of(x0)[None], mse_tail], axis=0)   # (T+1, G, F)
+    return x_fin, jnp.moveaxis(mse, 0, 1)                         # (G, T+1, F)
+
+
+def run_batch(
+    ws,
+    x0,
+    coefs,
+    node_counts=None,
+    *,
+    num_iters: int,
+    backend: str = "jax",
+    mesh=None,
+):
+    """Evaluate ``num_iters`` rounds over a stacked (G, N, N) ensemble.
+
+    Args:
+      ws:    (G, N, N) stacked weight matrices (zero-padded rows/cols OK).
+      x0:    (G, N, F) initial-condition blocks (zeros on padded nodes).
+      coefs: (G, 3) fused-round coefficients (a, b, c) per cell.
+      node_counts: (G,) real node count per cell; None means no padding.
+      num_iters: rounds T.
+      backend: 'jax' (vmapped matmul round) or 'pallas' (fused batched kernel).
+      mesh: optional jax Mesh; defaults to the host mesh when more than one
+        device is visible. The G axis is sharded over 'data' (padded with
+        replicas of cell 0 to divisibility; pad rows are dropped on return).
+
+    Returns:
+      (x_final (G, N, F), mse (G, T+1, F)) as numpy arrays.
+    """
+    if backend not in ("jax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r} (sweep runs 'jax' or 'pallas')")
+    ws = np.asarray(ws)
+    x0 = np.asarray(x0)
+    coefs = np.asarray(coefs)
+    g, n, f = x0.shape
+    if node_counts is None:
+        node_counts = np.full(g, n, dtype=np.int64)
+    node_counts = np.asarray(node_counts)
+
+    n_orig, f_orig = n, f
+    tiles = None
+    if backend == "pallas":
+        # pad N/F to the kernel's tile multiples ONCE, outside the scan; the
+        # node mask (below) keeps padded rows out of the MSE, padded trial
+        # columns are sliced off the outputs. The jax backend stays unpadded
+        # (padding a 20-node graph to 128 would be a ~40x flop tax there).
+        # The tiles chosen here are threaded into _sweep_scan as static args
+        # so padding and kernel blocking can never drift apart.
+        from repro.kernels import ops as kops
+
+        tiles = kops._round_tiles(f)
+        bm, bk, bf = tiles
+        n_pad = kops._round_up(n, max(bm, bk)) - n
+        f_pad = kops._round_up(f, bf) - f
+        if n_pad or f_pad:
+            ws = np.pad(ws, ((0, 0), (0, n_pad), (0, n_pad)))
+            x0 = np.pad(x0, ((0, 0), (0, n_pad), (0, f_pad)))
+            n, f = n + n_pad, f + f_pad
+
+    mask = (np.arange(n)[None, :] < node_counts[:, None]).astype(np.float32)
+    inv_n = (1.0 / node_counts).astype(np.float32)
+
+    # G=1 (the simulate() degenerate sweep) gains nothing from the mesh and
+    # would pay device_count replicas of the whole problem via G-padding —
+    # only auto-engage the mesh for real grids.
+    if mesh is None and g > 1 and jax.device_count() > 1:
+        mesh = make_cpu_mesh()
+    if mesh is not None and backend == "pallas":
+        from repro.kernels.ops import use_interpret
+
+        if not use_interpret():
+            # Compiled pallas_call is an opaque custom call with no GSPMD
+            # partitioning rule yet (cf. the SSD kernel's custom_partitioning
+            # wrapper) — sharding the G axis over a real TPU mesh would fail
+            # or silently replicate. Fail loudly until the rule lands.
+            raise NotImplementedError(
+                "sweep backend='pallas' on a multi-device TPU mesh needs a "
+                "partitioning rule for the fused kernel (planned: "
+                "custom_partitioning over the G axis); use backend='jax' "
+                "or a single device for now"
+            )
+
+    g_pad = 0
+    arrays = (ws, x0, mask, inv_n, coefs)
+    if mesh is not None:
+        ndata = mesh.shape["data"]
+        g_pad = (-g) % ndata
+        if g_pad:
+            arrays = tuple(
+                np.concatenate([a, np.repeat(a[:1], g_pad, axis=0)], axis=0)
+                for a in arrays
+            )
+        specs = (
+            P("data"),                    # ws
+            P("data", None, "model"),     # x0
+            P("data"),                    # mask
+            P("data"),                    # inv_n
+            P("data"),                    # coefs
+        )
+        arrays = tuple(
+            jax.device_put(a, NamedSharding(mesh, s))
+            for a, s in zip(arrays, specs)
+        )
+
+    x_fin, mse = _sweep_scan(
+        *arrays, num_iters=num_iters, use_kernels=(backend == "pallas"),
+        tiles=tiles,
+    )
+    x_fin, mse = np.asarray(x_fin), np.asarray(mse)
+    if g_pad:
+        x_fin, mse = x_fin[:g], mse[:g]
+    if n != n_orig or f != f_orig:
+        x_fin, mse = x_fin[:, :n_orig, :f_orig], mse[:, :, :f_orig]
+    return x_fin, mse
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Trajectories + per-cell metadata for one engine run."""
+
+    ensemble: Ensemble
+    x_final: np.ndarray        # (G, N, F)
+    mse: np.ndarray            # (G, T+1, F)
+
+    @property
+    def configs(self) -> tuple[ConfigMeta, ...]:
+        return self.ensemble.configs
+
+    @property
+    def num_iters(self) -> int:
+        return self.mse.shape[1] - 1
+
+    def averaging_times(self, eps: float = 1e-5) -> np.ndarray:
+        """(G, F) empirical eps-averaging times (Eq. 16) from the MSE curves.
+
+        First t with ||x(t) - xbar|| <= eps ||x(0) - xbar||, i.e.
+        mse(t) <= eps^2 mse(0); -1 where the cap was never reached.
+        """
+        thresh = (eps * eps) * self.mse[:, :1, :]                 # (G, 1, F)
+        hit = self.mse <= np.maximum(thresh, 0.0)                 # (G, T+1, F)
+        # first hit that STAYS below would be stricter; the paper uses first
+        # crossing, matching metrics.averaging_time
+        t = np.argmax(hit, axis=1)
+        reached = hit.any(axis=1)
+        return np.where(reached, t, -1).astype(np.int64)
+
+    def cells(self, **match) -> list[int]:
+        """Indices of cells whose ConfigMeta fields equal all of ``match``."""
+        out = []
+        for i, c in enumerate(self.configs):
+            if all(getattr(c, k) == v for k, v in match.items()):
+                out.append(i)
+        return out
+
+
+def run_ensemble(
+    ens: Ensemble,
+    *,
+    num_iters: int,
+    backend: str = "jax",
+    mesh=None,
+) -> SweepResult:
+    """Evaluate an already-built (possibly merged) grid in one program."""
+    x_fin, mse = run_batch(
+        ens.ws, ens.x0, ens.coefs, ens.node_counts,
+        num_iters=num_iters, backend=backend, mesh=mesh,
+    )
+    return SweepResult(ensemble=ens, x_final=x_fin, mse=mse)
+
+
+def run_sweep(
+    spec: SweepSpec,
+    *,
+    num_iters: int,
+    backend: str = "jax",
+    mesh=None,
+) -> SweepResult:
+    """Build the grid of ``spec`` and evaluate it in one jitted program."""
+    return run_ensemble(
+        build_ensemble(spec), num_iters=num_iters, backend=backend, mesh=mesh
+    )

@@ -1,0 +1,264 @@
+"""Experiment-grid construction: topology ensembles as stacked arrays.
+
+The paper's headline results are *ensemble* claims — Theorems 2-3 bound the
+averaging-time gain over families of graphs, and Figs. 3-4 average hundreds
+of random-geometric draws per network size. A sweep cell is one
+
+    (topology family, size, graph draw) x (theta design) x (alpha)
+
+configuration; this module materializes the full grid as stacked arrays the
+batched engine consumes in one jitted program:
+
+* ``ws``    (G, Nmax, Nmax) — the Metropolis-Hastings weight matrix of every
+  cell, zero-padded to the largest network in the grid. Zero padding is
+  exact: padded nodes start at 0, receive 0 from W and from both taps, and
+  are masked out of the MSE reduction.
+* ``x0``    (G, Nmax, F)    — F initial-condition columns per cell (paper
+  Section IV inits: one deterministic Slope column, then Spike columns at
+  random nodes, or i.i.d. Gaussians).
+* ``coefs`` (G, 3)          — the fused-round coefficients
+  (1 - alpha + alpha*theta3, alpha*theta2, alpha*theta1); memoryless cells
+  are the degenerate row (1, 0, 0).
+* ``mask`` / ``node_counts`` — per-cell valid-node indicators for padded
+  reductions.
+
+Graph draws are shared across the theta/alpha cells of the same (family,
+size, draw) triple — gain ratios (Fig. 4) then compare identical ensembles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.core import accel, metrics, topology, weights
+from repro.core.accel import Theta
+
+__all__ = [
+    "SweepSpec",
+    "ConfigMeta",
+    "Ensemble",
+    "build_ensemble",
+    "merge_ensembles",
+    "THETA_DESIGNS",
+]
+
+# Named predictor designs. ``None`` marks the memoryless baseline
+# x(t+1) = W x(t) (alpha = 0), kept in-grid so gains come from one run.
+THETA_DESIGNS: dict[str, Callable[[], Theta] | None] = {
+    "memoryless": None,
+    "ls": accel.theta_ls,
+    "asymptotic": lambda: accel.theta_asymptotic(0.5),
+}
+
+
+def _near_square(n: int) -> tuple[int, int]:
+    rows = max(int(math.isqrt(n)), 1)
+    while n % rows:
+        rows -= 1
+    return rows, n // rows
+
+
+def _build_graph(family: str, n: int, rng: np.random.Generator) -> topology.Graph:
+    if family == "chain":
+        return topology.chain(n)
+    if family == "ring":
+        return topology.ring(n)
+    if family == "grid2d":
+        return topology.grid2d(*_near_square(n))
+    if family == "torus2d":
+        return topology.torus2d(*_near_square(n))
+    if family == "rgg":
+        return topology.random_geometric(n, rng)
+    if family == "erdos_renyi":
+        p = min(1.0, 2.0 * math.log(max(n, 2)) / n)
+        for _ in range(200):
+            g = topology.erdos_renyi(n, p, rng)
+            if topology.is_connected(g.adjacency):
+                return g
+        raise RuntimeError(f"could not draw a connected G({n}, {p:.3f})")
+    raise ValueError(f"unknown topology family {family!r} "
+                     f"(have chain/ring/grid2d/torus2d/rgg/erdos_renyi)")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Declarative sweep grid (see module docstring for the cell structure)."""
+
+    topologies: tuple[str, ...] = ("chain", "grid2d", "rgg")
+    sizes: tuple[int, ...] = (16, 36, 64)
+    designs: tuple[str, ...] = ("memoryless", "asymptotic")
+    alphas: tuple[float, ...] | None = None   # None -> alpha*(lambda_2) per cell
+    graph_trials: int = 1                     # draws per (family, size); random families only
+    num_trials: int = 4                       # F: initial conditions per cell
+    init: str = "paper"                       # "paper" (slope+spikes) | "gaussian"
+    seed: int = 0
+
+    def __post_init__(self):
+        for d in self.designs:
+            if d not in THETA_DESIGNS:
+                raise ValueError(f"unknown design {d!r} (have {sorted(THETA_DESIGNS)})")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigMeta:
+    """Host-side metadata for one sweep cell (one row of the stacked arrays)."""
+
+    topology: str
+    n: int
+    graph_index: int
+    design: str
+    theta: Theta | None
+    alpha: float
+    lam2: float
+    rho_memoryless: float      # rho(W - J)
+    psi: float                 # spectral gap 1 - rho(W - J) (Theorem 2's Psi)
+    rho_accel: float           # sqrt(-alpha* theta1) for accelerated cells
+
+    @property
+    def gain_asym(self) -> float:
+        """tau(W)/tau(accel) — Theorem 3's asymptotic processing gain."""
+        if self.rho_accel <= 0.0 or self.rho_memoryless <= 0.0:
+            return float("inf")
+        return metrics.processing_gain(self.rho_memoryless, self.rho_accel)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ensemble:
+    """The stacked grid (see module docstring). Arrays are numpy fp32/fp64."""
+
+    ws: np.ndarray             # (G, Nmax, Nmax)
+    x0: np.ndarray             # (G, Nmax, F)
+    coefs: np.ndarray          # (G, 3)
+    node_counts: np.ndarray    # (G,) int
+    configs: tuple[ConfigMeta, ...]
+
+    @property
+    def num_configs(self) -> int:
+        return self.ws.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self.ws.shape[1]
+
+    def mask(self) -> np.ndarray:
+        """(G, Nmax) 1.0 on real nodes, 0.0 on padding."""
+        idx = np.arange(self.n_max)[None, :]
+        return (idx < self.node_counts[:, None]).astype(np.float32)
+
+
+def merge_ensembles(*ensembles: Ensemble) -> Ensemble:
+    """Concatenate grids along G, re-padding to the largest Nmax.
+
+    Lets callers combine specs with per-family size ranges (e.g. Fig. 3's
+    RGG sizes with Fig. 4's chain sizes) into ONE engine run. Trial counts
+    (F) must match across the inputs.
+    """
+    if not ensembles:
+        raise ValueError("merge_ensembles needs at least one ensemble")
+    fs = {e.x0.shape[2] for e in ensembles}
+    if len(fs) > 1:
+        raise ValueError(f"trial-axis mismatch across ensembles: {sorted(fs)}")
+    n_max = max(e.n_max for e in ensembles)
+
+    def grow(a: np.ndarray, axes: tuple[int, ...]) -> np.ndarray:
+        pad = [(0, 0)] * a.ndim
+        for ax in axes:
+            pad[ax] = (0, n_max - a.shape[ax])
+        return np.pad(a, pad)
+
+    return Ensemble(
+        ws=np.concatenate([grow(e.ws, (1, 2)) for e in ensembles]),
+        x0=np.concatenate([grow(e.x0, (1,)) for e in ensembles]),
+        coefs=np.concatenate([e.coefs for e in ensembles]),
+        node_counts=np.concatenate([e.node_counts for e in ensembles]),
+        configs=tuple(c for e in ensembles for c in e.configs),
+    )
+
+
+def _init_block(g: topology.Graph, f: int, kind: str, rng: np.random.Generator) -> np.ndarray:
+    n = g.n
+    if kind == "gaussian":
+        return rng.standard_normal((n, f))
+    cols = [metrics.slope_init(g.coords, n)]
+    for _ in range(f - 1):
+        cols.append(metrics.spike_init(n, node=int(rng.integers(0, n))))
+    return np.stack(cols[:f], axis=1)
+
+
+def build_ensemble(spec: SweepSpec) -> Ensemble:
+    """Materialize the sweep grid of ``spec`` as stacked padded arrays."""
+    rng = np.random.default_rng(spec.seed)
+    random_families = {"rgg", "erdos_renyi"}
+
+    # (family, graph_index, graph, W, eigvals(W), lambda2, rho(W-J)) per draw
+    graphs = []
+    for family in spec.topologies:
+        for n in spec.sizes:
+            draws = spec.graph_trials if family in random_families else 1
+            for gi in range(draws):
+                g = _build_graph(family, n, rng)
+                w = weights.metropolis_hastings(g)
+                vals = np.linalg.eigvalsh(w)
+                if abs(vals[0]) > vals[-2]:
+                    # Theorem 1 needs |lambda_N| <= lambda_2; lazy map fixes it.
+                    w = weights.lazy(w)
+                    vals = np.linalg.eigvalsh(w)
+                lam2 = float(vals[-2])
+                rho_mem = float(max(abs(vals[0]), abs(lam2)))
+                graphs.append((family, gi, g, w, vals, lam2, rho_mem))
+
+    if not graphs:
+        raise ValueError("empty sweep grid")
+    n_max = max(g.n for _, _, g, *_ in graphs)
+    f = spec.num_trials
+
+    ws, x0s, coefs, counts, metas = [], [], [], [], []
+    for family, gi, g, w, vals, lam2, rho_mem in graphs:
+        n = g.n
+        x0 = _init_block(g, f, spec.init, rng)
+        for design in spec.designs:
+            maker = THETA_DESIGNS[design]
+            if maker is None:
+                cells = [(None, 0.0)]
+            else:
+                th = maker()
+                alphas = spec.alphas if spec.alphas is not None else (
+                    accel.alpha_star(lam2, th),
+                )
+                cells = [(th, float(al)) for al in alphas]
+            for th, al in cells:
+                if th is None:
+                    a_w, b_x, c_p = 1.0, 0.0, 0.0
+                    rho_acc = rho_mem
+                else:
+                    a_w = 1.0 - al + al * th.t3
+                    b_x = al * th.t2
+                    c_p = al * th.t1
+                    # exact rho(Phi3[alpha] - J) from the spectrum of W
+                    # (equals sqrt(-alpha theta1) only at alpha = alpha*)
+                    mus = accel.phi3_eigenvalues(np.sort(vals)[:-1], al, th)
+                    rho_acc = float(max(np.abs(mus).max(), abs(al * th.t1)))
+                wp = np.zeros((n_max, n_max), dtype=np.float32)
+                wp[:n, :n] = w
+                xp0 = np.zeros((n_max, f), dtype=np.float32)
+                xp0[:n] = x0
+                ws.append(wp)
+                x0s.append(xp0)
+                coefs.append((a_w, b_x, c_p))
+                counts.append(n)
+                metas.append(ConfigMeta(
+                    topology=family, n=n, graph_index=gi, design=design,
+                    theta=th, alpha=al, lam2=lam2, rho_memoryless=rho_mem,
+                    psi=1.0 - rho_mem, rho_accel=rho_acc,
+                ))
+
+    return Ensemble(
+        ws=np.stack(ws),
+        x0=np.stack(x0s),
+        coefs=np.asarray(coefs, dtype=np.float32),
+        node_counts=np.asarray(counts, dtype=np.int64),
+        configs=tuple(metas),
+    )

@@ -1,9 +1,78 @@
 """Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests and
 benches must see the real (single) device; only launch/dryrun.py forces 512
 host devices, and multi-device tests spawn subprocesses with their own flags.
+
+Also provides a deterministic fallback for ``hypothesis`` (see the ``test``
+extra in pyproject.toml): hermetic images that bake only the runtime deps can
+still collect and run the property-based tests. The fallback implements the
+tiny slice of the API these tests use — ``given`` with keyword strategies,
+``settings(max_examples=..., deadline=...)``, ``st.integers``/``st.floats`` —
+by sampling a fixed number of examples from a CRC-seeded generator, so runs
+are reproducible across processes (``hash()`` is salted; crc32 is not).
 """
+import sys
+import types
+import zlib
+
 import numpy as np
 import pytest
+
+try:  # pragma: no cover - exercised only when hypothesis is absent
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:  # pragma: no cover
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+
+    _DEFAULT_EXAMPLES = 10
+
+    def _given(**strategies):
+        def deco(fn):
+            def runner():
+                # settings() may sit outside given() (sets the attr on this
+                # runner) or inside it (sets it on the wrapped fn) — both are
+                # valid hypothesis orderings.
+                n = getattr(
+                    runner, "_hyp_max_examples",
+                    getattr(fn, "_hyp_max_examples", _DEFAULT_EXAMPLES),
+                )
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode("utf-8"))
+                )
+                for _ in range(n):
+                    fn(**{k: s.sample(rng) for k, s in strategies.items()})
+
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco
+
+    def _settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture

@@ -89,6 +89,23 @@ def test_closed_form_chebyshev_rate():
         np.testing.assert_allclose(accel.rho_accel(lam, th), expected, atol=1e-12)
 
 
+def test_spectral_radius_rejects_nonsymmetric_w():
+    w = np.array([[0.5, 0.5, 0.0], [0.0, 0.5, 0.5], [0.5, 0.0, 0.5]])  # row-stochastic, W != W^T
+    th = accel.theta_asymptotic(0.5)
+    with pytest.raises(ValueError, match="symmetric"):
+        accel.spectral_radius_minus_j(w, 0.3, th)
+
+
+def test_phi3_eigenvalues_rejects_complex_spectrum():
+    th = accel.theta_asymptotic(0.5)
+    bad = np.array([1.0, 0.2 + 0.3j, 0.2 - 0.3j])  # spectrum of a non-symmetric W
+    with pytest.raises(ValueError, match="symmetric"):
+        accel.phi3_eigenvalues(bad, 0.3, th)
+    # real spectra passed as complex dtype are fine
+    ok = accel.phi3_eigenvalues(np.array([1.0 + 0j, 0.5 + 0j]), 0.3, th)
+    assert ok.shape == (4,)
+
+
 # ---------------------------------------------------------------------------
 # Theorem 2 / Theorem 3.
 # ---------------------------------------------------------------------------

@@ -1,0 +1,127 @@
+"""Fused gossip-round kernel: backend equivalence on paper-realistic draws.
+
+The contract (ISSUE acceptance): numpy float64 reference, jnp oracle
+(``ref.gossip_round_ref``) and the Pallas kernel (interpret mode on CPU)
+agree to 1e-5 on random (W, alpha, theta) draws, for both the single-graph
+and the batched-grid variants.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accel, topology, weights
+from repro.kernels import ops, ref
+
+
+def _draw_config(rng, n):
+    """(W, theta, alpha*) from a connected Erdos-Renyi draw, lazy-fixed."""
+    p = min(1.0, 2.5 * np.log(max(n, 2)) / n)
+    for _ in range(100):
+        g = topology.erdos_renyi(n, p, rng)
+        if topology.is_connected(g.adjacency):
+            break
+    else:
+        raise RuntimeError("no connected draw")
+    w = weights.lazy(weights.metropolis_hastings(g))
+    th = accel.theta_asymptotic(float(rng.uniform(0.1, 1.5)))
+    lam2 = accel.lambda2(w)
+    a = accel.alpha_star(lam2, th) if lam2 > 1e-9 else 0.0
+    return w, th, a
+
+
+def _coef(alpha, th):
+    return (1.0 - alpha + alpha * th.t3, alpha * th.t2, alpha * th.t1)
+
+
+@pytest.mark.parametrize("n,f", [(8, 1), (31, 7), (60, 40), (128, 300), (150, 513)])
+def test_fused_round_matches_numpy_reference(n, f, rng):
+    w, th, alpha = _draw_config(rng, n)
+    x = rng.standard_normal((n, f))
+    xp = rng.standard_normal((n, f))
+    a, b, c = _coef(alpha, th)
+
+    y_np = a * (w @ x) + b * x + c * xp                      # float64 reference
+    y_ref = ref.gossip_round_ref(
+        jnp.asarray(w, jnp.float32), jnp.asarray(x, jnp.float32),
+        jnp.asarray(xp, jnp.float32), a, b, c,
+    )
+    y_ker = ops.gossip_round(
+        jnp.asarray(w, jnp.float32), jnp.asarray(x, jnp.float32),
+        jnp.asarray(xp, jnp.float32), a, b, c,
+    )
+    np.testing.assert_allclose(np.asarray(y_ker), y_np, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_round_equals_unfused_pair(rng):
+    """Fusion is a pure perf change: same math as matvec + consensus_update."""
+    n, f = 70, 33
+    w, th, alpha = _draw_config(rng, n)
+    a, b, c = _coef(alpha, th)
+    x = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    xp = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    fused = ops.gossip_round(jnp.asarray(w, jnp.float32), x, xp, a, b, c)
+    pair = ops.consensus_update(
+        ops.gossip_matvec(jnp.asarray(w, jnp.float32), x), x, xp, a, b, c
+    )
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(pair),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("g,n,f", [(1, 16, 3), (4, 40, 5), (7, 33, 130)])
+def test_batched_round_matches_per_graph(g, n, f, rng):
+    """The batched-grid kernel row-for-row equals G single-graph calls."""
+    ws, coefs = [], []
+    for _ in range(g):
+        w, th, alpha = _draw_config(rng, n)
+        ws.append(w)
+        coefs.append(_coef(alpha, th))
+    ws = jnp.asarray(np.stack(ws), jnp.float32)
+    coefs = jnp.asarray(np.asarray(coefs), jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((g, n, f)), jnp.float32)
+    xps = jnp.asarray(rng.standard_normal((g, n, f)), jnp.float32)
+
+    y = ops.gossip_round_batched(ws, xs, xps, coefs)
+    y_ref = ref.gossip_round_batched_ref(ws, xs, xps, coefs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    for i in range(g):
+        yi = ops.gossip_round(ws[i], xs[i], xps[i], *[coefs[i, k] for k in range(3)])
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(yi),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_batched_round_heterogeneous_coefficients(rng):
+    """Each graph must read ITS coefficient row (regression for grid mixups)."""
+    g, n, f = 3, 12, 2
+    w = np.eye(n)  # identity W isolates the coefficient path: y = (a+b)x + c xp
+    ws = jnp.asarray(np.stack([w] * g), jnp.float32)
+    coefs = jnp.asarray([[1.0, 0.0, 0.0], [0.5, 0.25, 0.25], [2.0, -1.0, 0.5]],
+                        jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((g, n, f)), jnp.float32)
+    xps = jnp.asarray(rng.standard_normal((g, n, f)), jnp.float32)
+    y = ops.gossip_round_batched(ws, xs, xps, coefs)
+    for i in range(3):
+        a, b, c = (float(coefs[i, k]) for k in range(3))
+        np.testing.assert_allclose(
+            np.asarray(y[i]), (a + b) * np.asarray(xs[i]) + c * np.asarray(xps[i]),
+            rtol=1e-5, atol=1e-6,
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(2, 80), f=st.integers(1, 20),
+    a=st.floats(-2, 2), b=st.floats(-2, 2), c=st.floats(-2, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_round_property(n, f, a, b, c, seed):
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.standard_normal((n, n)), jnp.float32)
+    x = jnp.asarray(r.standard_normal((n, f)), jnp.float32)
+    xp = jnp.asarray(r.standard_normal((n, f)), jnp.float32)
+    y = ops.gossip_round(w, x, xp, a, b, c)
+    yr = ref.gossip_round_ref(w, x, xp, a, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)

@@ -1,7 +1,6 @@
 """Per-architecture smoke tests (reduced configs, CPU): forward/loss/grad
 shapes + finiteness, prefill->decode consistency with the teacher-forced
 forward, family-specific behaviours (ring cache, SSM state, cross-attn)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -24,6 +24,14 @@ def test_backends_agree(setup):
     np.testing.assert_allclose(r_jx.mse, r_pl.mse, rtol=1e-4, atol=1e-7)
 
 
+def test_unknown_backend_rejected_before_array_work():
+    """Backend validation precedes any allocation (satellite fix)."""
+    w = np.eye(3)
+    with pytest.raises(ValueError, match="unknown backend"):
+        # an x0 that would explode any array work if it were touched first
+        simulator.simulate(w, object(), 5, backend="torch")
+
+
 def test_accelerated_beats_memoryless(setup):
     w, th, a, x0 = setup
     r_mem = simulator.simulate(w, x0, 300, backend="numpy")

@@ -1,7 +1,6 @@
 """Substrate: data pipeline, optimizers, checkpointing, elastic runtime,
 compression wire, serving engine."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
