@@ -21,6 +21,8 @@ jitted SPMD program over a mesh axis.
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
+
 import numpy as np
 
 from .topology import Graph, diameter
@@ -52,6 +54,7 @@ def estimate_lambda2(
     normalize_every: int = 10,
     rng: np.random.Generator | None = None,
     v_init: np.ndarray | None = None,
+    matvec: Callable[[np.ndarray], np.ndarray] | None = None,
 ) -> DoiResult:
     """Run Algorithm 1. ``num_iters`` is K; ``normalize_every`` is L.
 
@@ -59,26 +62,31 @@ def estimate_lambda2(
     simulation computes the exact max directly — max-consensus converges to
     exactly that value, so the simulation is faithful; the *cost model* is
     where D enters).
+
+    ``matvec`` overrides the ``w @ v`` application — pass
+    ``repro.dist.gossip.fabric_matvec(w)`` to reproduce the in-mesh
+    ``distributed_lambda2`` accumulation order bit-for-bit.
     """
     rng = rng if rng is not None else np.random.default_rng(0)
     n = w.shape[0]
     d = diameter(graph.adjacency)
+    mv = matvec if matvec is not None else (lambda v: w @ v)
 
     v = v_init if v_init is not None else rng.standard_normal(n)
     # Line 2: exactly zero-mean start (one consensus tick).
-    v = w @ v - v
+    v = mv(v) - v
     ticks_w = 1
     ticks_max = 0
 
     for k in range(1, num_iters + 1):
-        v = w @ v
+        v = mv(v)
         ticks_w += 1
         if k % normalize_every == 0:
             norm = np.max(np.abs(v))  # sup-norm via max-consensus: D ticks
             ticks_max += d
             if norm > 0:
                 v = v / norm
-    wv = w @ v
+    wv = mv(v)
     ticks_w += 1
     num = np.max(np.abs(wv))
     den = np.max(np.abs(v))

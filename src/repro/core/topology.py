@@ -160,7 +160,10 @@ def hypercube(d: int) -> Graph:
 
 def erdos_renyi(n: int, p: float, rng: np.random.Generator) -> Graph:
     u = rng.random((n, n))
-    a = (np.triu(u, 1) < p).astype(np.float64)
+    # Bernoulli(p) on the strictly-upper entries only: masking AFTER the
+    # comparison, else the zeroed lower triangle compares 0 < p == True and
+    # every draw degenerates to (nearly) complete with doubled entries.
+    a = np.triu(u < p, 1).astype(np.float64)
     return _finalize(a + a.T, "erdos_renyi")
 
 

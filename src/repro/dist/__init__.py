@@ -1,13 +1,48 @@
 """Distributed consensus fabric (SPMD layer).
 
-This package grows toward the full SPMD consensus layer referenced across
-the tree (``make_train_step``, in-mesh ``accel_gossip``/``distributed_lambda2``,
-``sharding``): those land with the consensus-training PR. What is here today
-is the host-side fabric description (``gossip.make_fabric``) and the
-wire-level compression layer — both self-contained and test-covered.
-"""
-from . import compression, gossip
-from .compression import BF16Wire, Int8Wire
-from .gossip import PodFabric, make_fabric
+Two halves, one package:
 
-__all__ = ["compression", "gossip", "BF16Wire", "Int8Wire", "PodFabric", "make_fabric"]
+* **Host-side description** — ``gossip.make_fabric`` builds the pod graph's
+  Metropolis-Hastings W, its spectral gap, and the paper-optimal two-tap
+  parameters (Theorem 1); ``compression`` is the wire-level error-feedback
+  quantization the consensus rounds ride on.
+* **SPMD execution** — ``accel_gossip`` / ``gossip`` run consensus rounds
+  inside shard_map over the mesh 'pod' axis; ``distributed_lambda2`` is the
+  in-mesh Algorithm 1 (Section III-D); ``make_train_step`` wires either mode
+  (or a plain all-reduce) into the training drivers; ``sharding`` maps the
+  model layer's logical axes onto mesh axes; ``pipeline`` is the GPipe-style
+  stage ring the multidevice suite exercises.
+"""
+from . import compression, gossip, pipeline, sharding
+from .compression import BF16Wire, Int8Wire
+from .gossip import (
+    PodFabric,
+    accel_gossip,
+    distributed_lambda2,
+    edge_permutations,
+    fabric_matvec,
+    make_fabric,
+)
+from .gossip import gossip as gossip_rounds
+from .sharding import partition_spec
+from .train_step import SyncConfig, TrainStep, make_train_step
+
+__all__ = [
+    "compression",
+    "gossip",
+    "pipeline",
+    "sharding",
+    "BF16Wire",
+    "Int8Wire",
+    "PodFabric",
+    "make_fabric",
+    "accel_gossip",
+    "gossip_rounds",
+    "distributed_lambda2",
+    "edge_permutations",
+    "fabric_matvec",
+    "partition_spec",
+    "SyncConfig",
+    "TrainStep",
+    "make_train_step",
+]

@@ -7,21 +7,41 @@ elastic runtime (``repro.runtime.elastic``) rebuilds a fabric on every graph
 edit; the sync-cost model (``benchmarks/sync_cost.py``) reads round counts
 off it.
 
-The SPMD execution half (``accel_gossip`` inside shard_map, in-mesh
-``distributed_lambda2`` / Algorithm 1) lands with the consensus-training PR;
-everything here is host-side numpy and cheap (P is small).
+The SPMD execution half lives here too: ``gossip`` / ``accel_gossip`` run a
+consensus round *inside* shard_map over a mesh axis (ppermute along the
+fabric's graph edges, the accelerated variant carrying the ``(x, x_prev)``
+taps across rounds), and ``distributed_lambda2`` is Algorithm 1 run in-mesh —
+power iteration with periodic max-consensus normalization, mirroring the
+host-side ``repro.core.doi`` network simulation op for op.
+
+The edge structure of W is lowered to a static list of permutations (greedy
+matching decomposition of the directed edge set, one ppermute each); per-node
+weights are looked up by ``axis_index``, so one code path serves any fabric
+topology.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+from fractions import Fraction
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core import accel, topology, weights
 from ..core.accel import Theta
 
-__all__ = ["PodFabric", "make_fabric"]
+__all__ = [
+    "PodFabric",
+    "make_fabric",
+    "gossip",
+    "accel_gossip",
+    "distributed_lambda2",
+    "default_doi_iters",
+    "edge_permutations",
+    "fabric_matvec",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,10 +96,16 @@ def _pod_graph(p: int, kind: str) -> topology.Graph:
     raise ValueError(f"unknown fabric topology {kind!r}")
 
 
-def make_fabric(p: int, kind: str = "ring", theta: Theta | None = None) -> PodFabric:
+def make_fabric(p: int, kind: str = "ring", theta: Theta | None = None,
+                lambda2: float | None = None) -> PodFabric:
     """Build the fabric for ``p`` pods: W, lambda_2, alpha*, rho*.
 
     Dense O(P^3) eigensolve — P is the pod count (tens), not the node count.
+    Passing ``lambda2`` skips the eigensolve and re-solves Theorem 1 from a
+    supplied estimate (the O(K) in-mesh ``distributed_lambda2`` / Algorithm 1),
+    which is how ``ElasticFabric.resize`` re-optimizes an irregular fabric
+    without gathering W; it assumes |lambda_P| <= lambda_2 (the lazy map or a
+    regular topology guarantees it), so rho_memoryless = lambda_2 there.
     """
     theta = theta or accel.theta_asymptotic(0.5)
     g = _pod_graph(p, kind)
@@ -88,13 +114,17 @@ def make_fabric(p: int, kind: str = "ring", theta: Theta | None = None) -> PodFa
         return PodFabric(w=w, topology=kind, theta=theta, lambda2=0.0,
                          alpha=0.0, rho_accel=0.0, rho_memoryless=0.0)
     w = weights.metropolis_hastings(g)
-    vals = np.linalg.eigvalsh(w)
-    if abs(vals[0]) > vals[-2]:
-        # Theorem 1 needs |lambda_P| <= lambda_2; the lazy map guarantees it.
-        w = weights.lazy(w)
+    if lambda2 is None:
         vals = np.linalg.eigvalsh(w)
-    lam2 = float(vals[-2])
-    rho_mem = float(max(abs(vals[0]), abs(lam2)))
+        if abs(vals[0]) > vals[-2]:
+            # Theorem 1 needs |lambda_P| <= lambda_2; the lazy map guarantees it.
+            w = weights.lazy(w)
+            vals = np.linalg.eigvalsh(w)
+        lam2 = float(vals[-2])
+        rho_mem = float(max(abs(vals[0]), abs(lam2)))
+    else:
+        lam2 = float(lambda2)
+        rho_mem = lam2
     if lam2 <= 0.0:
         # complete-graph-like mixing: one round is exact, nothing to optimize
         return PodFabric(w=w, topology=kind, theta=theta, lambda2=max(lam2, 0.0),
@@ -104,3 +134,258 @@ def make_fabric(p: int, kind: str = "ring", theta: Theta | None = None) -> PodFa
         w=w, topology=kind, theta=theta, lambda2=lam2, alpha=a_star,
         rho_accel=accel.rho_accel(lam2, theta), rho_memoryless=rho_mem,
     )
+
+
+# ---------------------------------------------------------------------------
+# SPMD execution half: consensus rounds inside shard_map over a mesh axis.
+# ---------------------------------------------------------------------------
+
+def edge_permutations(w: np.ndarray) -> list[tuple[tuple[tuple[int, int], ...], np.ndarray]]:
+    """Decompose the off-diagonal support of W into ppermute-able matchings.
+
+    Returns ``[(perm, wvec), ...]`` where ``perm`` is a list of (src, dst)
+    device pairs with each src/dst used at most once (a valid ``ppermute``
+    argument) and ``wvec[dst] = W[dst, src]`` scales what dst receives. The
+    greedy matching decomposition needs at most ~max-degree passes and is
+    deterministic (edges visited in sorted order), so the lowered program is
+    stable across hosts.
+    """
+    p = w.shape[0]
+    remaining = [
+        (s, d) for s in range(p) for d in range(p)
+        if s != d and w[d, s] != 0.0
+    ]
+    perms = []
+    while remaining:
+        used_src: set[int] = set()
+        used_dst: set[int] = set()
+        perm = []
+        for s, d in remaining:
+            if s not in used_src and d not in used_dst:
+                perm.append((s, d))
+                used_src.add(s)
+                used_dst.add(d)
+        remaining = [e for e in remaining if e not in set(perm)]
+        wvec = np.zeros(p, dtype=w.dtype)
+        for s, d in perm:
+            wvec[d] = w[d, s]
+        perms.append((tuple(perm), wvec))
+    return perms
+
+
+def _fma(a: float, b: float, c: float) -> float:
+    """Correctly-rounded fused multiply-add a*b + c (one rounding).
+
+    Exact rational arithmetic then round-to-nearest-even via float(Fraction):
+    the portable stand-in for ``math.fma`` (3.13+) at the tiny sizes the
+    bit-for-bit tests need (P <= 8 components).
+    """
+    return float(Fraction(a) * Fraction(b) + Fraction(c))
+
+
+def fabric_matvec(w: np.ndarray, contraction: str = "fma"):
+    """Host mirror of the in-mesh neighbour sum — the bit-for-bit reference
+    for Algorithm 1 agreement tests
+    (``doi.estimate_lambda2(..., matvec=fabric_matvec(w))``).
+
+    ``contraction`` selects the floating-point recipe:
+
+    * ``"fma"`` — mirror LLVM's mul+add contraction as XLA:CPU emits it for
+      ``_neighbor_sum``: the first accumulation fuses the diagonal product
+      (``fma(W_ii, v_i, p_0)``), every later matching fuses its own product
+      (``fma(wvec_k, recv_k, acc)``). Emulated with exact rational arithmetic
+      and a single rounding per fma, so the host trajectory reproduces the
+      jitted SPMD trajectory bit for bit.
+    * ``"none"`` — plain mul-then-add (the reference on backends that do not
+      contract).
+    """
+    if contraction not in ("fma", "none"):
+        raise ValueError(f"unknown contraction {contraction!r}")
+    diag = np.diag(w).copy()
+    perms = edge_permutations(w)
+
+    def recv_of(v, perm):
+        recv = np.zeros_like(v)
+        for s, d in perm:
+            recv[d] = v[s]
+        return recv
+
+    def mv_plain(v: np.ndarray) -> np.ndarray:
+        out = diag * v
+        for perm, wvec in perms:
+            out = out + wvec * recv_of(v, perm)
+        return out
+
+    def mv_fma(v: np.ndarray) -> np.ndarray:
+        if not perms:
+            return diag * v
+        (perm0, wvec0), rest = perms[0], perms[1:]
+        p0 = wvec0 * recv_of(v, perm0)
+        out = np.array([_fma(diag[i], v[i], p0[i]) for i in range(len(v))])
+        for perm, wvec in rest:
+            recv = recv_of(v, perm)
+            out = np.array([_fma(wvec[i], recv[i], out[i]) for i in range(len(v))])
+        return out
+
+    return mv_fma if contraction == "fma" else mv_plain
+
+
+def _neighbor_sum(x_self, payload, axis_name, idx, diag, perms):
+    """x_w[i] = W[i,i] x_self + sum_j W[i,j] payload_j — one exchange tick.
+
+    ``x_self`` is the node's true state (never quantized); ``payload`` is what
+    goes on the wire. One ppermute per matching; nodes outside a matching
+    receive zeros and carry a zero weight, so the same program serves every
+    fabric topology. The accumulation is written mul-then-add; XLA:CPU
+    contracts it to the fma chain ``fabric_matvec(w, "fma")`` mirrors.
+    """
+    out = diag[idx] * x_self
+    for perm, wvec in perms:
+        recv = jax.lax.ppermute(payload, axis_name, perm)
+        out = out + wvec[idx] * recv
+    return out
+
+
+def _wire_rounds(x, axis_name, fabric, num_rounds, wire, step):
+    """Shared driver: carries (state, wire error-feedback) across rounds."""
+    idx = jax.lax.axis_index(axis_name)
+    diag = jnp.asarray(np.diag(fabric.w), x.dtype)
+    perms = [(perm, jnp.asarray(wvec, x.dtype))
+             for perm, wvec in edge_permutations(fabric.w)]
+    err = jnp.zeros_like(x) if wire is not None else None
+    carry = None
+    for _ in range(num_rounds):
+        payload = x
+        if wire is not None:
+            payload, err = wire.encode_decode(x, err)
+        xw = _neighbor_sum(x, payload, axis_name, idx, diag, perms)
+        x, carry = step(xw, x, carry)
+    return x
+
+
+def gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int, wire=None):
+    """Memoryless consensus x(t+1) = W x(t), run inside shard_map.
+
+    ``x`` is this pod's block (any shape); ``axis_name`` the mesh axis the
+    fabric lives on (one device slot per pod). ``num_rounds`` is static —
+    read it off ``fabric.rounds_for_memoryless(eps)``. ``wire`` optionally
+    compresses the neighbour payload (error feedback carried across rounds).
+    """
+    return _wire_rounds(x, axis_name, fabric, num_rounds, wire,
+                        lambda xw, x, carry: (xw, None))
+
+
+def accel_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int, wire=None):
+    """The paper's two-tap accelerated recursion (Eq. 4a-4c), in-mesh.
+
+    Carries the ``(x, x_prev)`` taps across rounds; per round one neighbour
+    exchange (same wire cost as memoryless gossip) plus two local FMAs:
+
+        x(t+1) = (1 - alpha + alpha theta3) W x(t)
+                 + alpha theta2 x(t) + alpha theta1 x(t-1)
+
+    with (alpha*, theta) read off the fabric (Theorem 1). ``num_rounds``
+    comes from ``fabric.rounds_for(eps)`` = ceil(log eps / log rho_accel) —
+    ~sqrt of the memoryless round count (Theorem 2).
+    """
+    t = fabric.theta
+    a = 1.0 - fabric.alpha + fabric.alpha * t.t3
+    b = fabric.alpha * t.t2
+    c = fabric.alpha * t.t1
+
+    def step(xw, x, x_prev):
+        x_prev = x if x_prev is None else x_prev
+        return a * xw + b * x + c * x_prev, x
+
+    return _wire_rounds(x, axis_name, fabric, num_rounds, wire, step)
+
+
+def default_doi_iters(fab: PodFabric, dtype, tol: float = 1e-4) -> int:
+    """Largest safe K for Algorithm 1 on this fabric at this precision.
+
+    Floating-point rounding re-injects a lambda_1 = 1 (mean) component that
+    the W-applications amplify by (1/lambda_2)^K relative to the dominant
+    mode, so K cannot grow freely on fast-mixing fabrics: pick the largest K
+    whose contamination floor eps_mach * (1/lambda_2)^K stays below ``tol``,
+    capped at the paper's K ~ N^2 slow-mixing budget. The dtype is
+    canonicalized first: with x64 disabled a float64 request silently runs in
+    float32, and K must budget for the eps that will actually round.
+    """
+    eps_mach = float(jnp.finfo(jax.dtypes.canonicalize_dtype(dtype)).eps)
+    k_paper = max(4 * fab.num_pods * fab.num_pods, 8)
+    lam2 = fab.lambda2
+    if not 0.0 < lam2 < 1.0:
+        return 8
+    k_cap = int(math.log(tol / eps_mach) / math.log(1.0 / lam2))
+    return max(1, min(k_paper, k_cap))
+
+
+def distributed_lambda2(
+    axis_name: str,
+    num_pods: int,
+    key,
+    num_iters: int | None = None,
+    normalize_every: int = 10,
+    topology_kind: str = "ring",
+    fabric: PodFabric | None = None,
+    v_init=None,
+    dtype=jnp.float32,
+):
+    """Algorithm 1 (Section III-D) run *inside* a jitted SPMD program.
+
+    Each device holds one component of the iterate; consensus ticks are
+    neighbour ppermutes, and the sup-norm normalizations are genuine
+    max-consensus (diameter(G) neighbour-max sweeps — every node normalizes by
+    the SAME number). Mirrors ``repro.core.doi.estimate_lambda2`` op for op:
+    with ``matvec=fabric_matvec(fab.w)`` and the same ``v_init`` the host
+    simulation agrees bit-for-bit in float64. Returns the per-device scalar
+    lambda2_hat (identical on every device); cost is O(K) ticks, which is what
+    lets ``ElasticFabric.resize`` re-solve Theorem 1 after a graph edit
+    without gathering W (``make_fabric(..., lambda2=estimate)``).
+
+    ``num_iters=None`` picks K via ``default_doi_iters``: explicit K is
+    honoured as-is, but beware the contamination floor it documents —
+    K=80 on a lambda_2=1/3 ring returns ~1.0, not lambda_2, at any precision.
+    """
+    fab = fabric if fabric is not None else make_fabric(num_pods, topology_kind)
+    p = fab.num_pods
+    # with x64 off a float64 request silently runs in float32; resolve it
+    # up front so the K guard and the array dtypes agree
+    dtype = jax.dtypes.canonicalize_dtype(dtype)
+    if p == 1:
+        return jnp.zeros((), dtype)
+    if num_iters is None:
+        num_iters = default_doi_iters(fab, dtype)
+    idx = jax.lax.axis_index(axis_name)
+    diag = jnp.asarray(np.diag(fab.w), dtype)
+    perms = [(perm, jnp.asarray(wvec, dtype))
+             for perm, wvec in edge_permutations(fab.w)]
+    adj = (np.abs(fab.w) > 0).astype(np.float64)
+    np.fill_diagonal(adj, 0.0)
+    diam = topology.diameter(adj)
+
+    def matvec(v):
+        return _neighbor_sum(v, v, axis_name, idx, diag, perms)
+
+    def max_consensus(m):
+        # |v| >= 0, so the zero fill of off-matching ppermute slots is the
+        # identity for max; D sweeps reach exact global agreement.
+        for _ in range(diam):
+            recvs = [jax.lax.ppermute(m, axis_name, perm) for perm, _ in perms]
+            for r in recvs:
+                m = jnp.maximum(m, r)
+        return m
+
+    v_full = (jnp.asarray(v_init, dtype)
+              if v_init is not None else jax.random.normal(key, (p,), dtype))
+    v = v_full[idx]
+    v = matvec(v) - v           # line 2: exactly zero-mean start
+    for k in range(1, num_iters + 1):
+        v = matvec(v)
+        if k % normalize_every == 0:
+            norm = max_consensus(jnp.abs(v))
+            v = jnp.where(norm > 0, v / norm, v)
+    wv = matvec(v)
+    num = max_consensus(jnp.abs(wv))
+    den = max_consensus(jnp.abs(v))
+    return jnp.where(den > 0, num / den, jnp.zeros_like(den))

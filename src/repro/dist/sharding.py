@@ -1,0 +1,189 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+One rule table maps the model layer's logical axis vocabulary ('batch',
+'vocab', 'embed', 'heads', ...) onto mesh axes, with two hard guarantees:
+
+  * a dimension is sharded only if the mesh axis (or axis product) divides it
+    exactly — non-divisible dims are replicated, never unevenly sharded;
+  * each mesh axis is consumed at most once per array, assigned in logical
+    priority order (TP consumers like 'heads'/'kv_heads' outrank the
+    'cache_seq' fallback, so a KV cache gives 'model' to the head dim when it
+    divides and falls back to flash-decode-style sequence sharding when not).
+
+``partition_spec`` is pure logic over shapes (works on ``AbstractMesh``, no
+devices needed); the ``abstract_*`` helpers attach ``NamedSharding`` to
+ShapeDtypeStructs for the dry-run/compile-only paths.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.common import Activations, ParamSpec
+
+PyTree = Any
+
+__all__ = [
+    "TRAIN_RULES",
+    "partition_spec",
+    "serving_rules",
+    "abstract_params",
+    "abstract_tree",
+    "batch_pspecs",
+    "make_activations",
+]
+
+# logical axis -> (priority, candidate mesh axes). Candidates are tried in
+# order; a tuple candidate means the product of those axes shards the dim.
+# Lower priority number = assigned earlier (wins contended mesh axes).
+TRAIN_RULES: dict[str, tuple[int, tuple]] = {
+    "pod":       (0, ("pod",)),
+    "batch":     (0, (("pod", "data"), "data")),
+    "vocab":     (0, ("model",)),
+    "heads":     (0, ("model",)),
+    "kv_heads":  (0, ("model",)),
+    "mlp":       (0, ("model",)),
+    "expert":    (0, ("model",)),
+    "ssm_heads": (0, ("model",)),
+    "ssm_inner": (0, ("model",)),
+    "embed":     (1, ("data",)),          # FSDP: shard the embed dim over DP
+    "cache_seq": (2, ("model", "data")),  # fallback when TP found no taker
+}
+
+
+def serving_rules() -> dict[str, tuple[int, tuple]]:
+    """Pure-TP layout for serving: params replicated over 'data', TP dims on
+    'model' (no FSDP gather in the decode loop)."""
+    rules = dict(TRAIN_RULES)
+    rules["embed"] = (1, ())
+    return rules
+
+
+def partition_spec(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    mesh,
+    rules: dict[str, tuple[int, tuple]] | None = None,
+) -> P:
+    """Best valid PartitionSpec for an array with the given logical axes."""
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} vs axes {axes} rank mismatch")
+    rules = rules if rules is not None else TRAIN_RULES
+    sizes = dict(mesh.shape)
+    taken: set[str] = set()
+    assigned: dict[int, str | tuple[str, ...]] = {}
+    order = sorted(
+        (i for i, name in enumerate(axes) if name in rules),
+        key=lambda i: (rules[axes[i]][0], i),
+    )
+    for i in order:
+        for cand in rules[axes[i]][1]:
+            names = cand if isinstance(cand, tuple) else (cand,)
+            if any(n not in sizes or n in taken for n in names):
+                continue
+            total = 1
+            for n in names:
+                total *= sizes[n]
+            if shape[i] % total:
+                continue
+            assigned[i] = cand
+            taken.update(names)
+            break
+    # trailing replicated dims are dropped (P("data", None) == P("data"))
+    last = max(assigned) if assigned else -1
+    return P(*(assigned.get(i) for i in range(last + 1)))
+
+
+def abstract_params(
+    specs: PyTree, mesh, dtype=None, rules=None, stacked_pods: int = 0
+) -> PyTree:
+    """ParamSpec tree -> ShapeDtypeStructs with production NamedShardings.
+
+    ``stacked_pods > 0`` prepends a (P, ...) per-pod replica axis sharded over
+    'pod' — the decentralized-sync layout of ``make_train_step``.
+    """
+
+    def conv(tree):
+        if isinstance(tree, ParamSpec):
+            shape, axes = tree.shape, tree.axes
+            if stacked_pods:
+                shape, axes = (stacked_pods, *shape), ("pod", *axes)
+            return jax.ShapeDtypeStruct(
+                shape,
+                dtype if dtype is not None else tree.dtype,
+                sharding=NamedSharding(
+                    mesh, partition_spec(shape, axes, mesh, rules)
+                ),
+            )
+        return {k: conv(v) for k, v in tree.items()}
+
+    return conv(specs)
+
+
+def abstract_tree(tree: PyTree, mesh, rules=None) -> PyTree:
+    """(shape, axes, dtype) tree -> sharded ShapeDtypeStructs."""
+
+    def conv(node):
+        if isinstance(node, tuple) and len(node) == 3:
+            shape, axes, dtype = node
+            return jax.ShapeDtypeStruct(
+                shape, dtype,
+                sharding=NamedSharding(
+                    mesh, partition_spec(shape, axes, mesh, rules)
+                ),
+            )
+        return {k: conv(v) for k, v in node.items()}
+
+    return conv(tree)
+
+
+def batch_pspecs(tree: PyTree, mesh, rules=None) -> PyTree:
+    """(shape, axes, dtype) tree -> matching tree of PartitionSpecs."""
+
+    def conv(node):
+        if isinstance(node, tuple) and len(node) == 3:
+            shape, axes, _ = node
+            return partition_spec(shape, axes, mesh, rules)
+        return {k: conv(v) for k, v in node.items()}
+
+    return conv(tree)
+
+
+# activation kind -> logical axes per rank (None entries replicate)
+_ACT_AXES: dict[str, dict[int, tuple]] = {
+    "embed":       {3: ("batch", None, None)},
+    "residual":    {3: ("batch", None, None)},
+    "logits":      {3: ("batch", None, "vocab")},
+    "kv_expanded": {4: ("batch", "cache_seq", "kv_heads", None)},
+    "moe_tokens":  {2: ("batch", None), 3: ("batch", None, None)},
+    "moe_buf":     {3: ("expert", None, None), 4: ("expert", None, None, None)},
+    "moe_buf_dp":  {3: (None, "batch", None), 4: (None, "batch", None, None)},
+}
+
+
+def make_activations(mesh, include_pod: bool = False, kv_spec: P | None = None,
+                     rules=None) -> Activations:
+    """Activation-sharding constraints for the model forward passes.
+
+    ``include_pod`` lets the batch dim absorb the 'pod' axis (decentralized
+    replicas share no batch, so activations shard over pod x data); when the
+    mesh has no 'pod' axis the rule falls through to plain 'data'.
+    ``kv_spec`` pins the expanded K/V blocks to the cache storage layout.
+    """
+    rules = dict(rules if rules is not None else TRAIN_RULES)
+    if not include_pod or "pod" not in dict(mesh.shape):
+        rules["batch"] = (0, ("data",))
+
+    def constrain(x, kind: str):
+        if kind == "kv_expanded" and kv_spec is not None:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, kv_spec))
+        axes = _ACT_AXES.get(kind, {}).get(jnp.ndim(x))
+        if axes is None:
+            return x
+        spec = partition_spec(jnp.shape(x), axes, mesh, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return Activations(constrain=constrain)

@@ -176,6 +176,8 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
             - mem["alias_bytes"]
         )
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # jax<=0.4.x returns [dict]
+            ca = ca[0] if ca else {}
         cost = analyze_hlo(compiled.as_text(), num_pods=2 if multi_pod else 1)
         rep = roofline_report(cost, chips, _model_flops(cfg, shape))
         rec.update(

@@ -93,12 +93,18 @@ class ElasticFabric:
         self.fabric = make_fabric(len(self.members), self.topology, self.theta)
         return self.fabric
 
-    def resize(self, remove: list[int] | None = None, add: list[int] | None = None) -> PodFabric:
+    def resize(
+        self,
+        remove: list[int] | None = None,
+        add: list[int] | None = None,
+        lambda2_estimate: float | None = None,
+    ) -> PodFabric:
         """Graph edit: recompute W, lambda_2, alpha*, rho* for the new set.
 
-        O(P^3) dense eigensolve here (P = pods, small); irregular fabrics at
-        scale use the O(K) in-mesh Algorithm 1 instead — see
-        dist.gossip.distributed_lambda2.
+        O(P^3) dense eigensolve by default (P = pods, small); irregular
+        fabrics at scale pass ``lambda2_estimate`` from the O(K) in-mesh
+        Algorithm 1 (``dist.gossip.distributed_lambda2``) so Theorem 1 is
+        re-solved without ever gathering W — the paper's Section III-D point.
         """
         for pid in remove or []:
             self.members.remove(pid)
@@ -110,7 +116,9 @@ class ElasticFabric:
         if not self.members:
             raise RuntimeError("all pods lost")
         self.resize_count += 1
-        self.fabric = make_fabric(len(self.members), self.topology, self.theta)
+        self.fabric = make_fabric(
+            len(self.members), self.topology, self.theta, lambda2=lambda2_estimate
+        )
         return self.fabric
 
     def rounds(self, eps: float) -> int:

@@ -1,0 +1,134 @@
+"""Elastic runtime: failure detection, graph-edit resize, straggler grace.
+
+The control plane referenced by ``repro.runtime.elastic``'s docstring: a pod
+failure is a graph edit followed by a re-solve of the paper's optimization
+(Theorem 1) for the surviving fabric — cheap because initialization is O(K)
+(Section III-D) — and stragglers get ``backup_rounds`` of slack instead of
+eviction.
+"""
+import numpy as np
+
+from repro.core import accel, topology, weights
+from repro.runtime import ElasticFabric, FailureDetector
+
+
+# ---------------------------------------------------------------------------
+# FailureDetector: heartbeat-age transitions.
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_age_drives_healthy_to_dead():
+    fd = FailureDetector(dead_after_s=10.0)
+    fd.heartbeat(0, step_latency=1.0, now=100.0)
+    fd.heartbeat(1, step_latency=1.0, now=100.0)
+    assert fd.classify(now=105.0) == {0: "healthy", 1: "healthy"}
+    # pod 1 stops heartbeating; crosses the age threshold, pod 0 does not
+    fd.heartbeat(0, step_latency=1.0, now=109.0)
+    cls = fd.classify(now=111.0)
+    assert cls[0] == "healthy" and cls[1] == "dead"
+
+
+def test_heartbeat_revives_a_dead_pod():
+    fd = FailureDetector(dead_after_s=10.0)
+    fd.heartbeat(0, now=0.0)
+    assert fd.classify(now=50.0)[0] == "dead"
+    fd.heartbeat(0, now=50.0)  # the pod came back
+    assert fd.classify(now=51.0)[0] == "healthy"
+
+
+def test_straggler_needs_latency_history():
+    fd = FailureDetector(dead_after_s=60.0, straggler_factor=2.0)
+    now = 0.0
+    for pid, lat in [(0, 1.0), (1, 1.0), (2, 1.1), (3, 6.0)]:
+        fd.heartbeat(pid, step_latency=lat, now=now)
+        fd.heartbeat(pid, step_latency=lat, now=now)
+    cls = fd.classify(now=now)
+    assert cls[3] == "straggler"
+    assert all(cls[p] == "healthy" for p in (0, 1, 2))
+
+
+def test_straggler_ema_recovers():
+    """A slow patch decays out of the EMA; the pod returns to healthy."""
+    fd = FailureDetector(dead_after_s=60.0, straggler_factor=2.0)
+    for pid in (0, 1):
+        fd.heartbeat(pid, step_latency=1.0, now=0.0)
+        fd.heartbeat(pid, step_latency=1.0, now=0.0)
+    fd.heartbeat(2, step_latency=10.0, now=0.0)
+    assert fd.classify(now=0.0)[2] == "straggler"
+    for _ in range(60):  # fast steps decay the EMA below 2x median
+        fd.heartbeat(2, step_latency=1.0, now=0.0)
+    assert fd.classify(now=0.0)[2] == "healthy"
+
+
+# ---------------------------------------------------------------------------
+# Resize: connected (P-1)-pod fabric with re-solved (alpha*, theta).
+# ---------------------------------------------------------------------------
+
+def _fabric_graph_connected(fabric) -> bool:
+    adj = (np.abs(fabric.w) > 0).astype(np.float64)
+    np.fill_diagonal(adj, 0.0)
+    return topology.is_connected(adj)
+
+
+def test_resize_produces_connected_resolved_fabric():
+    ef = ElasticFabric(topology="ring")
+    f8 = ef.bootstrap(list(range(8)))
+    f7 = ef.resize(remove=[5])
+    assert ef.members == [0, 1, 2, 3, 4, 6, 7]
+    assert f7.num_pods == 7
+    assert _fabric_graph_connected(f7)
+    # W is a valid consensus matrix for the new graph
+    weights.check_consensus_matrix(f7.w)
+    # (alpha*, theta): theta carried over, alpha re-solved from the new gap
+    assert f7.theta == f8.theta
+    assert f7.alpha != f8.alpha
+    assert f7.alpha == accel.alpha_star(f7.lambda2, f7.theta)
+    assert f7.rho_accel < f7.rho_memoryless  # Theorem 2 still holds post-edit
+
+
+def test_resize_chain_of_edits_stays_connected():
+    ef = ElasticFabric(topology="ring")
+    ef.bootstrap(list(range(6)))
+    for gone in (2, 4, 0):
+        fab = ef.resize(remove=[gone])
+        assert _fabric_graph_connected(fab)
+        weights.check_consensus_matrix(fab.w)
+    assert fab.num_pods == 3
+    assert ef.resize_count == 3
+
+
+def test_resize_accepts_distributed_lambda2_estimate():
+    """Irregular fabrics re-solve Theorem 1 from the in-mesh Algorithm 1
+    output instead of a dense eigensolve — no W gather."""
+    ef = ElasticFabric(topology="ring")
+    ef.bootstrap(list(range(8)))
+    dense = ef.resize(remove=[3])
+    est = dense.lambda2 + 1e-6  # what distributed_lambda2 would hand back
+    ef2 = ElasticFabric(topology="ring")
+    ef2.bootstrap(list(range(8)))
+    approx = ef2.resize(remove=[3], lambda2_estimate=est)
+    assert approx.lambda2 == est
+    assert approx.alpha == accel.alpha_star(est, approx.theta)
+    assert abs(approx.alpha - dense.alpha) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Straggler grace path.
+# ---------------------------------------------------------------------------
+
+def test_backup_rounds_grace():
+    ef = ElasticFabric(topology="ring", backup_rounds=2)
+    ef.bootstrap(list(range(8)))
+    base = ef.fabric.rounds_for(1e-2)
+    assert ef.rounds(1e-2) == base + 2
+
+
+def test_straggler_gets_grace_not_eviction():
+    ef = ElasticFabric(topology="ring", backup_rounds=2)
+    ef.bootstrap(list(range(4)))
+    # stragglers never trigger a resize — they ride the backup_rounds slack
+    assert ef.react({0: "healthy", 1: "straggler", 2: "healthy", 3: "straggler"}) is None
+    assert ef.members == [0, 1, 2, 3]
+    # a dead pod does; the straggler still stays
+    fab = ef.react({0: "healthy", 1: "straggler", 2: "dead", 3: "healthy"})
+    assert fab is not None and fab.num_pods == 3
+    assert ef.members == [0, 1, 3]

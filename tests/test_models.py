@@ -108,7 +108,10 @@ def test_moe_aux_losses_present():
     x = jax.random.normal(KEY, (2, 8, cfg.d_model), jnp.bfloat16)
     out, aux = moe_forward(block0["moe"], x, cfg.moe, cfg.activation)
     assert out.shape == x.shape
-    assert float(aux["load_balance"]) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz
+    # >= 1 by Cauchy-Schwarz in exact arithmetic; bf16 routing fractions and
+    # XLA:CPU reduction partitioning (which varies with process load) leave
+    # ~1e-2 of fp slack below the bound
+    assert float(aux["load_balance"]) >= 1.0 - 1e-2
     assert np.isfinite(float(aux["router_z"]))
 
 

@@ -1,0 +1,90 @@
+"""Property-based tests for ``core.topology`` + ``core.weights``.
+
+Real hypothesis strategies in CI (the ``test`` extra installs it); the
+deterministic shim in ``tests/conftest.py`` serves hermetic local images.
+Properties, over generated sizes/seeds:
+
+* every generator returns a symmetric 0/1 adjacency with a zero diagonal;
+* generators that claim connectivity (deterministic families, RGG's
+  resample-until-connected contract) actually deliver it;
+* Metropolis-Hastings W on any connected draw is symmetric, doubly
+  stochastic, and a strict contraction off the consensus line
+  (rho(W - J) < 1) — the Xiao-Boyd conditions the whole paper rests on.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology, weights
+
+# deterministic families: builder given n (clamped to each family's domain)
+_FAMILIES = [
+    ("chain", lambda n: topology.chain(max(n, 2))),
+    ("ring", lambda n: topology.ring(max(n, 3))),
+    ("grid2d", lambda n: topology.grid2d(max(2, int(round(n ** 0.5))))),
+    ("torus2d", lambda n: topology.torus2d(max(2, int(round(n ** 0.5))))),
+    ("star", lambda n: topology.star(max(n, 3))),
+    ("hypercube", lambda n: topology.hypercube(max(1, n.bit_length() % 5))),
+    ("complete", lambda n: topology.complete(max(n, 2))),
+]
+
+
+def _assert_valid_adjacency(g):
+    a = g.adjacency
+    assert a.shape == (g.n, g.n)
+    np.testing.assert_array_equal(a, a.T)            # symmetric
+    np.testing.assert_array_equal(np.diag(a), 0.0)   # zero diagonal
+    assert set(np.unique(a)) <= {0.0, 1.0}           # 0/1 entries
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(min_value=2, max_value=40))
+def test_deterministic_families_valid_and_connected(n):
+    for _, make in _FAMILIES:
+        g = make(n)
+        _assert_valid_adjacency(g)
+        assert topology.is_connected(g.adjacency), g.name
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=8, max_value=60), seed=st.integers(0, 2**31 - 1))
+def test_rgg_draws_connected_as_claimed(n, seed):
+    g = topology.random_geometric(n, np.random.default_rng(seed))
+    _assert_valid_adjacency(g)
+    assert topology.is_connected(g.adjacency)  # the resample contract
+    assert g.coords is not None and g.coords.shape == (n, 2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=3, max_value=30), seed=st.integers(0, 2**31 - 1),
+       p=st.floats(min_value=0.0, max_value=1.0))
+def test_erdos_renyi_valid_adjacency(n, seed, p):
+    g = topology.erdos_renyi(n, p, np.random.default_rng(seed))
+    _assert_valid_adjacency(g)  # no connectivity claim to honour
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(min_value=2, max_value=40), seed=st.integers(0, 2**31 - 1))
+def test_metropolis_hastings_xiao_boyd_conditions(n, seed):
+    rng = np.random.default_rng(seed)
+    graphs = [make(n) for _, make in _FAMILIES]
+    graphs.append(topology.random_geometric(max(n, 8), rng))
+    for g in graphs:
+        w = weights.metropolis_hastings(g)
+        np.testing.assert_allclose(w, w.T, atol=1e-12)            # symmetric
+        np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-9)  # W 1 = 1
+        np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-9)  # 1^T W = 1^T
+        assert w.min() >= -1e-12                                   # nonneg
+        j = weights.averaging_matrix(g.n)
+        rho = float(np.max(np.abs(np.linalg.eigvalsh(w - j))))
+        assert rho < 1.0 - 1e-12, (g.name, rho)                    # contraction
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=3, max_value=25), seed=st.integers(0, 2**31 - 1))
+def test_lazy_map_fixes_negative_spectrum(n, seed):
+    """(I + W)/2 guarantees |lambda_N| <= lambda_2 (Theorem 1's condition)."""
+    g = topology.random_geometric(max(n, 8), np.random.default_rng(seed))
+    w = weights.lazy(weights.metropolis_hastings(g))
+    vals = np.sort(np.linalg.eigvalsh(w))
+    assert vals[0] >= -1e-10              # all-positive spectrum
+    assert abs(vals[0]) <= vals[-2] + 1e-10
