@@ -10,7 +10,8 @@ import numpy as np
 
 from repro.core import accel, metrics, topology, weights
 
-OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+ROOT_DIR = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_DIR = os.path.join(ROOT_DIR, "experiments", "bench")
 
 
 def ensure_out() -> str:
@@ -50,8 +51,12 @@ def emit(name: str, rows: list[dict]) -> None:
         },
         "rows": rows,
     }
-    with open(os.path.join(out, f"BENCH_{name}.json"), "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+    # JSON lands BOTH under experiments/bench/ and at the repo root: the
+    # perf tracker reads the root-level BENCH_*.json trajectory, which an
+    # experiments/-only emit left permanently empty.
+    for d in (out, ROOT_DIR):
+        with open(os.path.join(d, f"BENCH_{name}.json"), "w") as f:
+            json.dump(payload, f, indent=1, default=float)
 
 
 def _fmt(v) -> str:

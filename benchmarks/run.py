@@ -16,6 +16,10 @@ import time
 
 
 def _quick() -> None:
+    # fig_robustness is NOT in this tier: CI runs it as its own named step
+    # (python -m benchmarks.fig_robustness --quick) so the masked-kernel
+    # path's cost and failures stay attributable, and running it here too
+    # would double the most expensive interpret-mode bench of the job.
     from . import fig34_scaling, kernel_perf
 
     kernel_perf.run()

@@ -6,7 +6,8 @@ weight matrices, the accelerated operator and its optimal mixing parameter
 (Theorem 1), Algorithm-1 decentralized lambda_2 estimation, the comparison
 baselines, convergence metrics, and a vectorized simulation engine.
 """
-from . import accel, baselines, doi, metrics, simulator, topology, weights
+from . import accel, baselines, doi, dynamics, metrics, simulator, topology, weights
+from .dynamics import DynamicsSpec, masked_w, parse_dynamics
 from .accel import (
     Theta,
     alpha_star,
@@ -25,6 +26,10 @@ __all__ = [
     "accel",
     "baselines",
     "doi",
+    "dynamics",
+    "DynamicsSpec",
+    "masked_w",
+    "parse_dynamics",
     "metrics",
     "simulator",
     "topology",

@@ -1,0 +1,215 @@
+"""Time-varying & failure-injected consensus dynamics.
+
+The paper's analysis (Theorems 1-3) fixes one symmetric W, but the
+deployments that motivate it — sensor networks, gossip-based learning — run
+on links that drop and nodes that churn. This module provides the *topology
+schedule* layer: per-round edge activity masks over a nominal graph, plus
+the mass-preserving re-weighting that turns a masked W back into a valid
+consensus matrix, and the float64 numpy reference the accelerated engines
+are tested against.
+
+Masking rule (mass-preserving Metropolis re-weighting): when edge (i, j) is
+down in round t, its weight W_ij returns to BOTH diagonals,
+
+    W_eff(t) = W .* M(t) + diag( (W .* (1 - M(t))) @ 1 ),
+
+with M(t) symmetric 0/1 on the off-diagonal support of W and 1 on the
+diagonal. W_eff(t) stays symmetric and doubly stochastic for every mask, so
+the network average is conserved round by round no matter which links fail —
+an isolated node simply holds its value (W_eff row -> e_i). What is *lost*
+under failures is the optimality of alpha*: the two-tap predictor keeps the
+mixing parameter computed for the nominal W, and ``benchmarks/fig_robustness``
+measures what that mismatch costs.
+
+Schedules (all produce per-round edge bits; 1 = link up):
+
+* ``bernoulli:p``  — every edge fails independently each round w.p. p
+  (i.i.d. link failures, the model of Sirocchi & Bogliolo, arXiv:2309.01144).
+* ``rewire:p:T``   — the failure set is redrawn every T rounds and held in
+  between (periodic rewiring: the active graph B(t) is piecewise-constant).
+* ``churn:p``      — node churn: each *node* is down w.p. p per round; an
+  edge is live iff both endpoints are up. A down node keeps its value
+  (mass-preserving re-weighting above), so returning nodes rejoin without
+  biasing the average.
+* ``static``       — all edges up every round (the paper's regime).
+
+Schedules are sampled on the host with a numpy RNG keyed by the *graph*
+(not the grid cell), and thresholded as ``U >= p``: cells that share a graph
+share the underlying uniforms, so failure sets are **nested across failure
+probabilities** (monotone coupling) and identical across theta designs
+(common random numbers). Gain-vs-p curves read off such a grid are
+variance-reduced and degrade monotonically instead of bouncing with the
+draw.
+
+The accelerated execution paths live elsewhere: ``repro.sweep.engine``
+scans compressed (R, E) bit masks and expands them in the scan body (never
+materializing per-round W matrices in HBM), and
+``repro.kernels.gossip_round`` has the fused masked Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+__all__ = [
+    "DynamicsSpec",
+    "parse_dynamics",
+    "edge_index",
+    "graph_rng",
+    "sample_edge_bits",
+    "masked_w",
+    "simulate_dynamic_reference",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicsSpec:
+    """One parsed topology schedule (see module docstring for the kinds)."""
+
+    kind: str          # "static" | "bernoulli" | "rewire" | "churn"
+    p: float = 0.0     # failure probability (per-edge or per-node, by kind)
+    period: int = 1    # rewire: rounds between redraws of the failure set
+
+    def __post_init__(self):
+        if self.kind not in ("static", "bernoulli", "rewire", "churn"):
+            raise ValueError(
+                f"unknown dynamics kind {self.kind!r} "
+                f"(have static/bernoulli/rewire/churn)"
+            )
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"failure probability must be in [0, 1], got {self.p}")
+        if self.period < 1:
+            raise ValueError(f"rewire period must be >= 1, got {self.period}")
+
+    @property
+    def is_static(self) -> bool:
+        return self.kind == "static" or self.p == 0.0
+
+
+def parse_dynamics(spec: str | DynamicsSpec) -> DynamicsSpec:
+    """Parse ``"static"`` / ``"bernoulli:p"`` / ``"rewire:p:period"`` / ``"churn:p"``."""
+    if isinstance(spec, DynamicsSpec):
+        return spec
+    parts = str(spec).split(":")
+    kind = parts[0]
+    if kind == "static":
+        if len(parts) != 1:
+            raise ValueError(f"static takes no parameters, got {spec!r}")
+        return DynamicsSpec("static")
+    if kind in ("bernoulli", "churn"):
+        if len(parts) != 2:
+            raise ValueError(f"{kind} needs one parameter, e.g. '{kind}:0.1', got {spec!r}")
+        return DynamicsSpec(kind, p=float(parts[1]))
+    if kind == "rewire":
+        if len(parts) != 3:
+            raise ValueError(f"rewire needs 'rewire:p:period', got {spec!r}")
+        return DynamicsSpec(kind, p=float(parts[1]), period=int(parts[2]))
+    raise ValueError(f"unknown dynamics kind {kind!r} in {spec!r} "
+                     f"(have static/bernoulli/rewire/churn)")
+
+
+def edge_index(w: np.ndarray) -> np.ndarray:
+    """(E, 2) int32 upper-triangular off-diagonal support of W (i < j).
+
+    Deterministic row-major order, so two cells built from the same graph get
+    identical edge orderings — the invariant the coupled-RNG sampling relies
+    on. Zero-padded rows/cols contribute no edges.
+    """
+    i, j = np.nonzero(np.triu(np.abs(np.asarray(w)), k=1))
+    return np.stack([i, j], axis=1).astype(np.int32)
+
+
+def graph_rng(seed: int, key: tuple) -> np.random.Generator:
+    """Host RNG stream keyed by (seed, graph identity) — NOT by grid cell.
+
+    crc32 (unsalted, unlike ``hash``) keeps the stream reproducible across
+    processes; cells sharing a graph share the stream, which is what couples
+    their failure draws.
+    """
+    return np.random.default_rng([int(seed), zlib.crc32(repr(key).encode("utf-8"))])
+
+
+def sample_edge_bits(
+    spec: str | DynamicsSpec,
+    num_rounds: int,
+    idx: np.ndarray,
+    num_nodes: int,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """(R, E) uint8 per-round edge activity bits (1 = link up) for ``spec``.
+
+    Always consumes the same uniforms from ``rng`` in the same order —
+    (R, E) edge uniforms then (R, N) node uniforms — regardless of kind, so
+    different specs sampled from clones of one graph-keyed stream stay
+    coupled (bits at p' >= p are a subset of bits at p).
+    """
+    spec = parse_dynamics(spec)
+    e = len(idx)
+    u_edges = rng.random((num_rounds, e))
+    u_nodes = rng.random((num_rounds, num_nodes))
+    if spec.is_static:
+        return np.ones((num_rounds, e), dtype=np.uint8)
+    if spec.kind == "bernoulli":
+        return (u_edges >= spec.p).astype(np.uint8)
+    if spec.kind == "rewire":
+        held = (np.arange(num_rounds) // spec.period) * spec.period
+        return (u_edges[held] >= spec.p).astype(np.uint8)
+    # churn: edge live iff both endpoints are up this round
+    up = u_nodes >= spec.p
+    return (up[:, idx[:, 0]] & up[:, idx[:, 1]]).astype(np.uint8)
+
+
+def masked_w(w: np.ndarray, bits: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    """One round's re-normalized effective matrix W_eff (numpy reference).
+
+    ``bits`` is the (E,) activity row for this round, ``idx`` the (E, 2)
+    edge list. Dropped weight returns to both endpoint diagonals, keeping
+    W_eff symmetric doubly stochastic (module docstring).
+    """
+    w = np.asarray(w)
+    m = np.ones_like(w)
+    b = np.asarray(bits, dtype=w.dtype)
+    m[idx[:, 0], idx[:, 1]] = b
+    m[idx[:, 1], idx[:, 0]] = b
+    weff = w * m
+    drop = (w * (1.0 - m)).sum(axis=1)
+    np.fill_diagonal(weff, weff.diagonal() + drop)
+    return weff
+
+
+def simulate_dynamic_reference(
+    w: np.ndarray,
+    x0: np.ndarray,
+    coef: tuple[float, float, float],
+    bits: np.ndarray,
+    idx: np.ndarray,
+    dtype=np.float64,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-round masked-W reference run (the engines' correctness oracle).
+
+    Materializes W_eff(t) = ``masked_w(w, bits[t], idx)`` each round and
+    iterates the fused two-tap recursion
+
+        x(t+1) = a W_eff(t) x(t) + b x(t) + c x(t-1)
+
+    mirroring the engine's MSE semantics (vs the true initial average, mean
+    over nodes, round 0 included). Returns (x_final (N, F), mse (R+1, F)).
+    """
+    a, b, c = (float(v) for v in coef)
+    x = np.asarray(x0, dtype=dtype)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    xp = x.copy()
+    xbar = x.mean(axis=0, keepdims=True)
+    mse = [((x - xbar) ** 2).mean(axis=0)]
+    wd = np.asarray(w, dtype=dtype)
+    for t in range(bits.shape[0]):
+        weff = masked_w(wd, bits[t], idx)
+        x, xp = a * (weff @ x) + b * x + c * xp, x
+        mse.append(((x - xbar) ** 2).mean(axis=0))
+    if squeeze:
+        x = x[:, 0]
+    return x, np.stack(mse)

@@ -230,7 +230,7 @@ def fabric_matvec(w: np.ndarray, contraction: str = "fma"):
     return mv_fma if contraction == "fma" else mv_plain
 
 
-def _neighbor_sum(x_self, payload, axis_name, idx, diag, perms):
+def _neighbor_sum(x_self, payload, axis_name, idx, diag, perms, live=None):
     """x_w[i] = W[i,i] x_self + sum_j W[i,j] payload_j — one exchange tick.
 
     ``x_self`` is the node's true state (never quantized); ``payload`` is what
@@ -238,44 +238,68 @@ def _neighbor_sum(x_self, payload, axis_name, idx, diag, perms):
     receive zeros and carry a zero weight, so the same program serves every
     fabric topology. The accumulation is written mul-then-add; XLA:CPU
     contracts it to the fma chain ``fabric_matvec(w, "fma")`` mirrors.
+
+    ``live`` (optional, one 0/1 scalar per matching) marks which matchings
+    delivered this round. A dead matching's weight returns to the node's own
+    state — the mass-preserving re-weighting of ``repro.core.dynamics`` —
+    instead of scaling whatever stale/zero payload ppermute produced, so the
+    round's effective W stays doubly stochastic and the pod-mean exact.
     """
     out = diag[idx] * x_self
-    for perm, wvec in perms:
+    for k, (perm, wvec) in enumerate(perms):
         recv = jax.lax.ppermute(payload, axis_name, perm)
-        out = out + wvec[idx] * recv
+        w_k = wvec[idx]
+        if live is None:
+            out = out + w_k * recv
+        else:
+            out = out + w_k * (live[k] * recv + (1.0 - live[k]) * x_self)
     return out
 
 
-def _wire_rounds(x, axis_name, fabric, num_rounds, wire, step):
+def _wire_rounds(x, axis_name, fabric, num_rounds, wire, step, drop_mask=None):
     """Shared driver: carries (state, wire error-feedback) across rounds."""
     idx = jax.lax.axis_index(axis_name)
     diag = jnp.asarray(np.diag(fabric.w), x.dtype)
     perms = [(perm, jnp.asarray(wvec, x.dtype))
              for perm, wvec in edge_permutations(fabric.w)]
+    if drop_mask is not None:
+        drop_mask = jnp.asarray(drop_mask, x.dtype)
+        if drop_mask.shape != (num_rounds, len(perms)):
+            raise ValueError(
+                f"drop_mask shape {drop_mask.shape} != (num_rounds, num_matchings)"
+                f" = ({num_rounds}, {len(perms)})"
+            )
     err = jnp.zeros_like(x) if wire is not None else None
     carry = None
-    for _ in range(num_rounds):
+    for r in range(num_rounds):
         payload = x
         if wire is not None:
             payload, err = wire.encode_decode(x, err)
-        xw = _neighbor_sum(x, payload, axis_name, idx, diag, perms)
+        live = None if drop_mask is None else drop_mask[r]
+        xw = _neighbor_sum(x, payload, axis_name, idx, diag, perms, live)
         x, carry = step(xw, x, carry)
     return x
 
 
-def gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int, wire=None):
+def gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int, wire=None,
+           drop_mask=None):
     """Memoryless consensus x(t+1) = W x(t), run inside shard_map.
 
     ``x`` is this pod's block (any shape); ``axis_name`` the mesh axis the
     fabric lives on (one device slot per pod). ``num_rounds`` is static —
     read it off ``fabric.rounds_for_memoryless(eps)``. ``wire`` optionally
     compresses the neighbour payload (error feedback carried across rounds).
+    ``drop_mask`` (num_rounds, num_matchings), 1 = delivered: failed
+    matchings return their weight to the sender's own state (mass-preserving,
+    see ``_neighbor_sum``) so consensus degrades gracefully instead of
+    averaging stale ppermute data.
     """
     return _wire_rounds(x, axis_name, fabric, num_rounds, wire,
-                        lambda xw, x, carry: (xw, None))
+                        lambda xw, x, carry: (xw, None), drop_mask=drop_mask)
 
 
-def accel_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int, wire=None):
+def accel_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int, wire=None,
+                 drop_mask=None):
     """The paper's two-tap accelerated recursion (Eq. 4a-4c), in-mesh.
 
     Carries the ``(x, x_prev)`` taps across rounds; per round one neighbour
@@ -286,7 +310,10 @@ def accel_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int, wire=Non
 
     with (alpha*, theta) read off the fabric (Theorem 1). ``num_rounds``
     comes from ``fabric.rounds_for(eps)`` = ceil(log eps / log rho_accel) —
-    ~sqrt of the memoryless round count (Theorem 2).
+    ~sqrt of the memoryless round count (Theorem 2). ``drop_mask``
+    (num_rounds, num_matchings) injects per-round matching failures with the
+    same mass-preserving semantics as ``gossip``; alpha* stays the nominal
+    one, mirroring what a real deployment can actually compute.
     """
     t = fabric.theta
     a = 1.0 - fabric.alpha + fabric.alpha * t.t3
@@ -297,7 +324,8 @@ def accel_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int, wire=Non
         x_prev = x if x_prev is None else x_prev
         return a * xw + b * x + c * x_prev, x
 
-    return _wire_rounds(x, axis_name, fabric, num_rounds, wire, step)
+    return _wire_rounds(x, axis_name, fabric, num_rounds, wire, step,
+                        drop_mask=drop_mask)
 
 
 def default_doi_iters(fab: PodFabric, dtype, tol: float = 1e-4) -> int:

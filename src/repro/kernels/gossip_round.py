@@ -41,6 +41,10 @@ __all__ = [
     "gossip_round_pallas",
     "gossip_round_batched_kernel",
     "gossip_round_batched_pallas",
+    "gossip_round_masked_kernel",
+    "gossip_round_masked_pallas",
+    "gossip_round_masked_batched_kernel",
+    "gossip_round_masked_batched_pallas",
 ]
 
 
@@ -168,3 +172,166 @@ def gossip_round_batched_pallas(
         out_shape=jax.ShapeDtypeStruct((g, n, f), jnp.float32),
         interpret=interpret,
     )(coefs, ws, xs, xs, xps)
+
+
+# ---------------------------------------------------------------------------
+# Masked variants: per-round edge-failure masks applied INSIDE the kernel.
+#
+#     W_eff = W .* M + diag((W .* (1 - M)) @ 1)        (mass-preserving)
+#     Y     = a * (W_eff @ X) + b * X + c * Xp
+#
+# M is the 0/1 edge-activity mask of this round (1 on the diagonal, 1 on live
+# edges; see repro.core.dynamics). The kernel never materializes W_eff: each
+# K step contracts the elementwise-masked tile W.*M against X on the MXU and
+# folds that tile's dropped row mass back onto the node's own state via the
+# k-independent (i, j) X tile — so a time-varying topology costs one extra
+# VPU multiply and row-sum per tile, and the per-round W matrices never
+# round-trip through HBM (the scan carries only the compressed bit masks).
+# ---------------------------------------------------------------------------
+
+
+def gossip_round_masked_kernel(nk: int, coef_ref, w_ref, m_ref, xk_ref, xi_ref,
+                               xp_ref, y_ref):
+    """Masked matvec + dropped-mass return per K tile; FMA on the last step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    w = w_ref[...]
+    wm = w * m_ref[...]
+    # dropped mass of this K tile's columns returns to the diagonal: the
+    # (bm, 1) row sum of W .* (1 - M) scales the node's own (i, j) X tile,
+    # accumulating the diag((W .* (1-M)) @ 1) @ X term across the contraction.
+    drop = jnp.sum(w - wm, axis=1, keepdims=True)
+    y_ref[...] += (
+        jnp.dot(wm, xk_ref[...], preferred_element_type=jnp.float32)
+        + drop * xi_ref[...]
+    )
+
+    @pl.when(k == nk - 1)
+    def _fma():
+        a = coef_ref[0, 0]
+        b = coef_ref[0, 1]
+        c = coef_ref[0, 2]
+        y_ref[...] = a * y_ref[...] + b * xi_ref[...] + c * xp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bf", "interpret"))
+def gossip_round_masked_pallas(
+    w: jax.Array,
+    m: jax.Array,
+    x: jax.Array,
+    xp: jax.Array,
+    coef: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bf: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused masked round Y = a*(W_eff@X) + b*X + c*Xp, operands pre-padded.
+
+    ``m`` is this round's (N, N) 0/1 activity mask (1 on the diagonal). Pad
+    the mask region beyond the real nodes with zeros — padded W entries are
+    zero either way. Shape management lives in ``repro.kernels.ops``.
+    """
+    n, k = w.shape
+    k2, f = x.shape
+    if k != k2 or x.shape != xp.shape or m.shape != w.shape:
+        raise ValueError(
+            f"shape mismatch: W {w.shape}, M {m.shape}, X {x.shape}, Xp {xp.shape}"
+        )
+    if n % bm or k % bk or f % bf:
+        raise ValueError(f"shapes ({n},{k},{f}) not multiples of tiles ({bm},{bk},{bf})")
+    nk = k // bk
+    grid = (n // bm, f // bf, nk)
+    return pl.pallas_call(
+        functools.partial(gossip_round_masked_kernel, nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bf), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        interpret=interpret,
+    )(coef, w, m, x, x, xp)
+
+
+def gossip_round_masked_batched_kernel(nk: int, coef_ref, w_ref, m_ref, xk_ref,
+                                       xi_ref, xp_ref, y_ref):
+    """Batched-grid masked body: blocks carry a leading length-1 graph dim."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    w = w_ref[0]
+    wm = w * m_ref[0]
+    drop = jnp.sum(w - wm, axis=1, keepdims=True)
+    y_ref[0] += (
+        jnp.dot(wm, xk_ref[0], preferred_element_type=jnp.float32)
+        + drop * xi_ref[0]
+    )
+
+    @pl.when(k == nk - 1)
+    def _fma():
+        a = coef_ref[0, 0]
+        b = coef_ref[0, 1]
+        c = coef_ref[0, 2]
+        y_ref[...] = a * y_ref[...] + b * xi_ref[...] + c * xp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bf", "interpret"))
+def gossip_round_masked_batched_pallas(
+    ws: jax.Array,
+    ms: jax.Array,
+    xs: jax.Array,
+    xps: jax.Array,
+    coefs: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bf: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Masked fused round over a stacked ensemble (the dynamic-sweep inner loop).
+
+    Ws/Ms (G, N, N), Xs/Xps (G, N, F), coefs (G, 3): each graph g reads its
+    own W slice, this round's mask slice, and its (a, b, c) row — one launch
+    evaluates a whole failure-probability grid's round.
+    """
+    g, n, k = ws.shape
+    g2, k2, f = xs.shape
+    if g != g2 or k != k2 or xs.shape != xps.shape or coefs.shape != (g, 3) \
+            or ms.shape != ws.shape:
+        raise ValueError(
+            f"shape mismatch: Ws {ws.shape}, Ms {ms.shape}, Xs {xs.shape}, "
+            f"Xps {xps.shape}, coefs {coefs.shape}"
+        )
+    if n % bm or k % bk or f % bf:
+        raise ValueError(f"shapes ({n},{k},{f}) not multiples of tiles ({bm},{bk},{bf})")
+    nk = k // bk
+    grid = (g, n // bm, f // bf, nk)
+    return pl.pallas_call(
+        functools.partial(gossip_round_masked_batched_kernel, nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda gg, i, j, kk: (gg, 0)),
+            pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+            pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+            pl.BlockSpec((1, bk, bf), lambda gg, i, j, kk: (gg, kk, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, kk: (gg, i, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, kk: (gg, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bf), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, n, f), jnp.float32),
+        interpret=interpret,
+    )(coefs, ws, ms, xs, xs, xps)

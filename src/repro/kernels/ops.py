@@ -22,7 +22,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .consensus_update import LANES, consensus_update_pallas
 from .gossip_matvec import gossip_matvec_pallas
-from .gossip_round import gossip_round_batched_pallas, gossip_round_pallas
+from .gossip_round import (
+    gossip_round_batched_pallas,
+    gossip_round_masked_batched_pallas,
+    gossip_round_masked_pallas,
+    gossip_round_pallas,
+)
 from .ref import ssd_chunk_ref
 from .ssd_chunk import ssd_chunk_pallas
 
@@ -31,6 +36,8 @@ __all__ = [
     "gossip_matvec",
     "gossip_round",
     "gossip_round_batched",
+    "gossip_round_masked",
+    "gossip_round_masked_batched",
     "ssd_scan",
     "use_interpret",
 ]
@@ -141,6 +148,52 @@ def gossip_round_batched(ws, xs, xps, coefs):
     xppad = jnp.pad(xps.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, fp_ - f)))
     y = gossip_round_batched_pallas(
         wp, xpad, xppad, coefs.astype(jnp.float32),
+        bm=bm, bk=bk, bf=bf, interpret=use_interpret(),
+    )
+    return y[:, :n, :f]
+
+
+@jax.jit
+def gossip_round_masked(w, m, x, xp, a, b, c):
+    """One fused masked round on a single graph, auto-padded to MXU tiles.
+
+    ``m`` is the round's (N, N) 0/1 edge-activity mask (ones on the diagonal;
+    see ``repro.core.dynamics``): dropped weight returns to the diagonal, so
+    W_eff stays doubly stochastic. Mask padding is zeros — padded W entries
+    are zero, so they contribute neither matvec nor dropped mass.
+    """
+    n, f = w.shape[0], x.shape[1]
+    bm, bk, bf = _round_tiles(f)
+    np_, fp_ = _round_up(n, 128), _round_up(f, bf)
+    wp = jnp.pad(w.astype(jnp.float32), ((0, np_ - n), (0, np_ - n)))
+    mp = jnp.pad(m.astype(jnp.float32), ((0, np_ - n), (0, np_ - n)))
+    xpad = jnp.pad(x.astype(jnp.float32), ((0, np_ - n), (0, fp_ - f)))
+    xppad = jnp.pad(xp.astype(jnp.float32), ((0, np_ - n), (0, fp_ - f)))
+    coef = jnp.stack(
+        [jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+         jnp.asarray(c, jnp.float32)]
+    ).reshape(1, 3)
+    y = gossip_round_masked_pallas(
+        wp, mp, xpad, xppad, coef, bm=bm, bk=bk, bf=bf, interpret=use_interpret()
+    )
+    return y[:n, :f]
+
+
+@jax.jit
+def gossip_round_masked_batched(ws, ms, xs, xps, coefs):
+    """Masked fused round over a stacked ensemble (dynamic-sweep inner loop).
+
+    Ws/Ms (G, N, N), Xs/Xps (G, N, F), coefs (G, 3) -> (G, N, F) fp32.
+    """
+    g, n, f = xs.shape
+    bm, bk, bf = _round_tiles(f)
+    np_, fp_ = _round_up(n, 128), _round_up(f, bf)
+    wp = jnp.pad(ws.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, np_ - n)))
+    mp = jnp.pad(ms.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, np_ - n)))
+    xpad = jnp.pad(xs.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, fp_ - f)))
+    xppad = jnp.pad(xps.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, fp_ - f)))
+    y = gossip_round_masked_batched_pallas(
+        wp, mp, xpad, xppad, coefs.astype(jnp.float32),
         bm=bm, bk=bk, bf=bf, interpret=use_interpret(),
     )
     return y[:, :n, :f]

@@ -15,6 +15,8 @@ __all__ = [
     "gossip_matvec_ref",
     "gossip_round_ref",
     "gossip_round_batched_ref",
+    "gossip_round_masked_ref",
+    "gossip_round_masked_batched_ref",
     "ssd_chunk_ref",
     "ssd_scan_ref",
 ]
@@ -53,6 +55,36 @@ def gossip_round_batched_ref(ws, xs, xps, coefs):
     b = coefs[:, 1, None, None]
     c = coefs[:, 2, None, None]
     return a * xw + b * xs.astype(jnp.float32) + c * xps.astype(jnp.float32)
+
+
+def gossip_round_masked_ref(w, m, x, xp, a, b, c):
+    """Masked fused round: W_eff = W.*M + diag((W.*(1-M))@1), then the FMA.
+
+    ``m`` is a 0/1 edge-activity mask with ones on the diagonal; dropped
+    weight returns to the diagonal (mass-preserving re-weighting, see
+    ``repro.core.dynamics``).
+    """
+    w32 = w.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    wm = w32 * m.astype(jnp.float32)
+    drop = jnp.sum(w32 - wm, axis=1, keepdims=True)
+    xw = gossip_matvec_ref(wm, x32) + drop * x32
+    return a * xw + b * x32 + c * xp.astype(jnp.float32)
+
+
+def gossip_round_masked_batched_ref(ws, ms, xs, xps, coefs):
+    """Ensemble masked round: Ws/Ms (G,N,N), Xs/Xps (G,N,F), coefs (G,3)."""
+    ws32 = ws.astype(jnp.float32)
+    xs32 = xs.astype(jnp.float32)
+    wm = ws32 * ms.astype(jnp.float32)
+    drop = jnp.sum(ws32 - wm, axis=2, keepdims=True)          # (G, N, 1)
+    xw = jnp.einsum(
+        "gij,gjf->gif", wm, xs32, preferred_element_type=jnp.float32
+    ) + drop * xs32
+    a = coefs[:, 0, None, None]
+    b = coefs[:, 1, None, None]
+    c = coefs[:, 2, None, None]
+    return a * xw + b * xs32 + c * xps.astype(jnp.float32)
 
 
 def ssd_chunk_ref(x, a, b, c):

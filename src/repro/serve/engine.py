@@ -50,14 +50,22 @@ class DecodeEngine:
                 return jnp.full(shape, -1, dt)
             return jnp.zeros(shape, dt)
 
-        self.cache = jax.tree.map(
-            init_leaf, model.cache_specs(max_batch, max_seq),
-            is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple),
+        is_leaf = lambda x: isinstance(x, tuple) and isinstance(x[0], tuple)
+        specs = model.cache_specs(max_batch, max_seq)
+        self.cache = jax.tree.map(init_leaf, specs, is_leaf=is_leaf)
+        # Batch-dim index per cache leaf, read off the spec's logical axes.
+        # Inferring it from a shape mismatch (full=B vs one=1) breaks at
+        # max_batch == 1, where every dim matches and the prefill cache was
+        # silently discarded; -1 marks (hypothetical) slot-shared leaves.
+        self._batch_axis = jax.tree.map(
+            lambda leaf: leaf[1].index("batch") if "batch" in leaf[1] else -1,
+            specs, is_leaf=is_leaf,
         )
         self.positions = np.full((max_batch,), -1, np.int64)  # -1 = free slot
         self.cur_token = np.zeros((max_batch, 1), np.int32)
         self.slot_req: list[Request | None] = [None] * max_batch
         self.waiting: list[Request] = []
+        self._done_at_admit: list[Request] = []
         self._decode = jax.jit(self._decode_impl)
         self._prefill1 = jax.jit(self._prefill_impl)
 
@@ -75,44 +83,65 @@ class DecodeEngine:
         self.waiting.append(req)
 
     def _admit(self) -> None:
+        # a request can finish AT prefill (EOS first token / 1-token budget)
+        # without ever occupying its slot, so keep pulling from the queue
+        # until one claims it — but bound the prefills per step so a burst of
+        # finish-at-prefill requests cannot starve already-decoding slots of
+        # their tick (leftovers are admitted on subsequent steps)
+        budget = self.max_batch
         for slot in range(self.max_batch):
-            if self.slot_req[slot] is not None or not self.waiting:
+            if self.slot_req[slot] is not None:
                 continue
-            req = self.waiting.pop(0)
-            req.slot = slot
-            t = len(req.prompt)
-            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
-            if self.model.cfg.family == "encdec":
-                batch["frames"] = jnp.zeros(
-                    (1, self.model.cfg.encoder_len, self.model.cfg.d_model), jnp.bfloat16
+            while self.waiting and budget > 0:
+                budget -= 1
+                req = self.waiting.pop(0)
+                t = len(req.prompt)
+                batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+                if self.model.cfg.family == "encdec":
+                    batch["frames"] = jnp.zeros(
+                        (1, self.model.cfg.encoder_len, self.model.cfg.d_model), jnp.bfloat16
+                    )
+                if self.model.cfg.family == "vlm":
+                    batch["image_embeds"] = jnp.zeros(
+                        (1, self.model.cfg.num_image_tokens, self.model.cfg.d_model), jnp.bfloat16
+                    )
+                logits, cache1 = self._prefill1(self.params, batch)
+                first = int(np.argmax(np.asarray(logits[0, -1])))
+                req.out_tokens.append(first)
+                # the prefill-time token must face the same termination checks
+                # as decode-time tokens: an immediate EOS (or a 1-token
+                # budget) must not burn max_new_tokens decode ticks on junk —
+                # and such a request never occupies the slot (no cache write)
+                if (req.eos_id is not None and first == req.eos_id) or \
+                        len(req.out_tokens) >= req.max_new_tokens:
+                    req.done = True
+                    self._done_at_admit.append(req)
+                    continue
+                # scatter the single-request cache into this slot, each leaf
+                # along its spec-declared batch axis
+                self.cache = jax.tree.map(
+                    lambda full, one, ax: _slot_insert(full, one, slot, ax),
+                    self.cache, cache1, self._batch_axis,
                 )
-            if self.model.cfg.family == "vlm":
-                batch["image_embeds"] = jnp.zeros(
-                    (1, self.model.cfg.num_image_tokens, self.model.cfg.d_model), jnp.bfloat16
-                )
-            logits, cache1 = self._prefill1(self.params, batch)
-            # scatter the single-request cache into this slot
-            self.cache = jax.tree.map(
-                lambda full, one: _slot_insert(full, one, slot), self.cache, cache1
-            )
-            first = int(np.argmax(np.asarray(logits[0, -1])))
-            req.out_tokens.append(first)
-            self.cur_token[slot, 0] = first
-            self.positions[slot] = t
-            self.slot_req[slot] = req
+                req.slot = slot
+                self.cur_token[slot, 0] = first
+                self.positions[slot] = t
+                self.slot_req[slot] = req
+                break
 
     def step(self) -> list[Request]:
         """Admit + one decode tick for all active slots. Returns finished."""
         self._admit()
+        finished_admit, self._done_at_admit = self._done_at_admit, []
         active = self.positions >= 0
         if not active.any():
-            return []
+            return finished_admit
         tok, self.cache = self._decode(
             self.params, self.cache,
             jnp.asarray(self.cur_token), jnp.asarray(self.positions.clip(min=0), jnp.int32),
         )
         tok = np.asarray(tok)
-        finished = []
+        finished = finished_admit
         for slot in range(self.max_batch):
             req = self.slot_req[slot]
             if req is None:
@@ -139,15 +168,16 @@ class DecodeEngine:
         return out
 
 
-def _slot_insert(full: jax.Array, one: jax.Array, slot: int) -> jax.Array:
+def _slot_insert(full: jax.Array, one: jax.Array, slot: int, axis: int) -> jax.Array:
     """Insert a batch=1 cache leaf into slot ``slot`` of the engine cache.
 
-    Cache leaves carry the batch dim after their stacking dims; we locate it
-    as the first dim where shapes differ (full=B, one=1).
+    ``axis`` is the leaf's batch dim, read off the model's ``cache_specs``
+    logical axes (never inferred from shape differences: at max_batch == 1
+    every dim matches and inference used to silently drop the prefill
+    cache). ``axis == -1`` marks a slot-shared leaf, kept as-is.
     """
-    for d, (fs, os_) in enumerate(zip(full.shape, one.shape)):
-        if fs != os_:
-            idx = [slice(None)] * full.ndim
-            idx[d] = slice(slot, slot + 1)
-            return jax.lax.dynamic_update_slice_in_dim(full, one.astype(full.dtype), slot, axis=d)
-    return full  # shapes equal (e.g. shared key_pos row) - overwrite slot 0? keep full
+    if axis < 0:
+        return full
+    return jax.lax.dynamic_update_slice_in_dim(
+        full, one.astype(full.dtype), slot, axis=axis
+    )

@@ -14,7 +14,15 @@ paper-scale sweeps share one code path and one compilation cache.
 """
 from . import engine, grid
 from .engine import SweepResult, run_batch, run_ensemble, run_sweep, trace_count
-from .grid import ConfigMeta, Ensemble, SweepSpec, build_ensemble, merge_ensembles
+from .grid import (
+    ConfigMeta,
+    Ensemble,
+    RoundMasks,
+    SweepSpec,
+    build_ensemble,
+    build_round_masks,
+    merge_ensembles,
+)
 
 __all__ = [
     "engine",
@@ -26,7 +34,9 @@ __all__ = [
     "trace_count",
     "ConfigMeta",
     "Ensemble",
+    "RoundMasks",
     "SweepSpec",
     "build_ensemble",
+    "build_round_masks",
     "merge_ensembles",
 ]

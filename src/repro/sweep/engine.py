@@ -36,7 +36,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import make_cpu_mesh
 
-from .grid import ConfigMeta, Ensemble, SweepSpec, build_ensemble
+from .grid import (
+    ConfigMeta,
+    Ensemble,
+    RoundMasks,
+    SweepSpec,
+    build_ensemble,
+    build_round_masks,
+)
 
 __all__ = ["SweepResult", "run_batch", "run_ensemble", "run_sweep", "trace_count"]
 
@@ -51,7 +58,16 @@ def trace_count() -> int:
 
 @functools.partial(jax.jit, static_argnames=("num_iters", "use_kernels", "tiles"))
 def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
-                tiles: tuple[int, int, int] | None = None):
+                tiles: tuple[int, int, int] | None = None, bits=None, eidx=None):
+    """One jitted scan for both the static and the dynamic-topology sweep.
+
+    ``bits``/``eidx`` (None on the static path) carry the compressed
+    (T, G, E) uint8 edge-activity schedule: the scan expands each round's
+    bits into the dense (G, N, N) 0/1 mask *inside* the body — one round's
+    mask lives in registers/VMEM while the per-round effective matrices
+    W_eff(t) = W.*M + diag((W.*(1-M))@1) are never materialized in HBM
+    (``repro.core.dynamics`` has the model).
+    """
     global _TRACE_COUNT
     _TRACE_COUNT += 1  # trace-time side effect: counts compilations
 
@@ -60,6 +76,26 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
     mask = mask.astype(jnp.float32)[:, :, None]
     inv_n = inv_n.astype(jnp.float32)
     coefs = coefs.astype(jnp.float32)
+    dynamic = bits is not None
+
+    if dynamic:
+        n = ws.shape[1]
+        eye = jnp.eye(n, dtype=bool)
+
+        def expand(bits_t):
+            """(G, E) bits -> (G, N, N) dense mask: 1 on live edges + diag.
+
+            Padded edge slots carry index (0, 0); whatever they scatter onto
+            the diagonal is overwritten by the eye fill, so padding is exact.
+            """
+            def one(bg, ig):
+                b = bg.astype(jnp.float32)
+                m0 = jnp.zeros((n, n), jnp.float32)
+                m0 = m0.at[ig[:, 0], ig[:, 1]].set(b)
+                m0 = m0.at[ig[:, 1], ig[:, 0]].set(b)
+                return m0
+
+            return jnp.where(eye, 1.0, jax.vmap(one)(bits_t, eidx))
 
     # per-cell target: the true initial average over real nodes (padding is 0)
     xbar = x0.sum(axis=1, keepdims=True) * inv_n[:, None, None]   # (G, 1, F)
@@ -72,15 +108,34 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
         # thousands of rounds they would dwarf the x_w round-trip the
         # fusion removes).
         from repro.kernels.ops import use_interpret
-        from repro.kernels.gossip_round import gossip_round_batched_pallas
+        from repro.kernels.gossip_round import (
+            gossip_round_batched_pallas,
+            gossip_round_masked_batched_pallas,
+        )
 
         bm, bk, bf = tiles
         interpret = use_interpret()
 
-        def round_fn(x, xp):
-            return gossip_round_batched_pallas(
-                ws, x, xp, coefs, bm=bm, bk=bk, bf=bf, interpret=interpret
+        def round_fn(x, xp, m):
+            if m is None:
+                return gossip_round_batched_pallas(
+                    ws, x, xp, coefs, bm=bm, bk=bk, bf=bf, interpret=interpret
+                )
+            return gossip_round_masked_batched_pallas(
+                ws, m, x, xp, coefs, bm=bm, bk=bk, bf=bf, interpret=interpret
             )
+    elif dynamic:
+        a = coefs[:, 0, None, None]
+        b = coefs[:, 1, None, None]
+        c = coefs[:, 2, None, None]
+
+        def round_fn(x, xp, m):
+            wm = ws * m
+            drop = jnp.sum(ws - wm, axis=2)                       # (G, N)
+            xw = jnp.einsum(
+                "gij,gjf->gif", wm, x, preferred_element_type=jnp.float32
+            ) + drop[:, :, None] * x
+            return a * xw + b * x + c * xp
     else:
         def one_graph_round(w, x, xp, coef):
             xw = jnp.dot(w, x, preferred_element_type=jnp.float32)
@@ -88,19 +143,21 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
 
         vmapped_round = jax.vmap(one_graph_round)
 
-        def round_fn(x, xp):
+        def round_fn(x, xp, m):
             return vmapped_round(ws, x, xp, coefs)
 
     def mse_of(x):
         d = (x - xbar) * mask
         return (d * d).sum(axis=1) * inv_n[:, None]               # (G, F)
 
-    def body(carry, _):
+    def body(carry, bits_t):
         x, xp = carry
-        x_new = round_fn(x, xp)
+        x_new = round_fn(x, xp, expand(bits_t) if dynamic else None)
         return (x_new, x), mse_of(x_new)
 
-    (x_fin, _), mse_tail = jax.lax.scan(body, (x0, x0), None, length=num_iters)
+    (x_fin, _), mse_tail = jax.lax.scan(
+        body, (x0, x0), bits if dynamic else None, length=num_iters
+    )
     mse = jnp.concatenate([mse_of(x0)[None], mse_tail], axis=0)   # (T+1, G, F)
     return x_fin, jnp.moveaxis(mse, 0, 1)                         # (G, T+1, F)
 
@@ -114,6 +171,7 @@ def run_batch(
     num_iters: int,
     backend: str = "jax",
     mesh=None,
+    round_masks: RoundMasks | None = None,
 ):
     """Evaluate ``num_iters`` rounds over a stacked (G, N, N) ensemble.
 
@@ -127,6 +185,10 @@ def run_batch(
       mesh: optional jax Mesh; defaults to the host mesh when more than one
         device is visible. The G axis is sharded over 'data' (padded with
         replicas of cell 0 to divisibility; pad rows are dropped on return).
+      round_masks: optional ``RoundMasks`` (compressed per-round edge-activity
+        bits, see ``repro.sweep.grid.build_round_masks``): routes through the
+        dynamic-topology scan, where each round runs on the mass-preservingly
+        re-normalized masked W of that round.
 
     Returns:
       (x_final (G, N, F), mse (G, T+1, F)) as numpy arrays.
@@ -140,6 +202,20 @@ def run_batch(
     if node_counts is None:
         node_counts = np.full(g, n, dtype=np.int64)
     node_counts = np.asarray(node_counts)
+
+    bits = eidx = None
+    if round_masks is not None:
+        bits = np.asarray(round_masks.bits, dtype=np.uint8)
+        eidx = np.asarray(round_masks.idx, dtype=np.int32)
+        if bits.shape[0] != num_iters or bits.shape[1] != g:
+            raise ValueError(
+                f"round_masks bits {bits.shape} do not cover "
+                f"(num_iters={num_iters}, G={g}) rounds x cells"
+            )
+        if eidx.shape != (g, bits.shape[2], 2):
+            raise ValueError(
+                f"round_masks idx {eidx.shape} inconsistent with bits {bits.shape}"
+            )
 
     n_orig, f_orig = n, f
     tiles = None
@@ -194,6 +270,13 @@ def run_batch(
                 np.concatenate([a, np.repeat(a[:1], g_pad, axis=0)], axis=0)
                 for a in arrays
             )
+            if bits is not None:
+                bits = np.concatenate(
+                    [bits, np.repeat(bits[:, :1], g_pad, axis=1)], axis=1
+                )
+                eidx = np.concatenate(
+                    [eidx, np.repeat(eidx[:1], g_pad, axis=0)], axis=0
+                )
         specs = (
             P("data"),                    # ws
             P("data", None, "model"),     # x0
@@ -205,10 +288,13 @@ def run_batch(
             jax.device_put(a, NamedSharding(mesh, s))
             for a, s in zip(arrays, specs)
         )
+        if bits is not None:
+            bits = jax.device_put(bits, NamedSharding(mesh, P(None, "data")))
+            eidx = jax.device_put(eidx, NamedSharding(mesh, P("data")))
 
     x_fin, mse = _sweep_scan(
         *arrays, num_iters=num_iters, use_kernels=(backend == "pallas"),
-        tiles=tiles,
+        tiles=tiles, bits=bits, eidx=eidx,
     )
     x_fin, mse = np.asarray(x_fin), np.asarray(mse)
     if g_pad:
@@ -263,11 +349,18 @@ def run_ensemble(
     num_iters: int,
     backend: str = "jax",
     mesh=None,
+    round_masks: RoundMasks | None = None,
 ) -> SweepResult:
-    """Evaluate an already-built (possibly merged) grid in one program."""
+    """Evaluate an already-built (possibly merged) grid in one program.
+
+    ``round_masks`` carries per-round edge-failure schedules; pass the result
+    of ``build_round_masks(ens, num_iters)`` (or None for the static path —
+    ``run_sweep`` wires this automatically from ``SweepSpec.dynamics``).
+    """
     x_fin, mse = run_batch(
         ens.ws, ens.x0, ens.coefs, ens.node_counts,
         num_iters=num_iters, backend=backend, mesh=mesh,
+        round_masks=round_masks,
     )
     return SweepResult(ensemble=ens, x_final=x_fin, mse=mse)
 
@@ -279,7 +372,16 @@ def run_sweep(
     backend: str = "jax",
     mesh=None,
 ) -> SweepResult:
-    """Build the grid of ``spec`` and evaluate it in one jitted program."""
+    """Build the grid of ``spec`` and evaluate it in one jitted program.
+
+    When ``spec.dynamics`` contains non-static schedules (e.g.
+    ``dynamics=("static", "bernoulli:0.1")``), the per-round edge-failure
+    bits are sampled host-side (graph-keyed RNG: coupled across failure
+    probabilities and shared across designs) and the whole failure grid runs
+    as one jitted vmapped scan, exactly like every other sweep axis.
+    """
+    ens = build_ensemble(spec)
+    masks = build_round_masks(ens, num_iters, seed=spec.seed)
     return run_ensemble(
-        build_ensemble(spec), num_iters=num_iters, backend=backend, mesh=mesh
+        ens, num_iters=num_iters, backend=backend, mesh=mesh, round_masks=masks
     )

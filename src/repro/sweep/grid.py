@@ -33,14 +33,16 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core import accel, metrics, topology, weights
+from repro.core import accel, dynamics, metrics, topology, weights
 from repro.core.accel import Theta
 
 __all__ = [
     "SweepSpec",
     "ConfigMeta",
     "Ensemble",
+    "RoundMasks",
     "build_ensemble",
+    "build_round_masks",
     "merge_ensembles",
     "THETA_DESIGNS",
 ]
@@ -95,11 +97,14 @@ class SweepSpec:
     num_trials: int = 4                       # F: initial conditions per cell
     init: str = "paper"                       # "paper" (slope+spikes) | "gaussian"
     seed: int = 0
+    dynamics: tuple[str, ...] = ("static",)   # topology schedules (core.dynamics)
 
     def __post_init__(self):
         for d in self.designs:
             if d not in THETA_DESIGNS:
                 raise ValueError(f"unknown design {d!r} (have {sorted(THETA_DESIGNS)})")
+        for s in self.dynamics:
+            dynamics.parse_dynamics(s)        # raises on malformed schedules
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +121,7 @@ class ConfigMeta:
     rho_memoryless: float      # rho(W - J)
     psi: float                 # spectral gap 1 - rho(W - J) (Theorem 2's Psi)
     rho_accel: float           # sqrt(-alpha* theta1) for accelerated cells
+    dynamics: str = "static"   # topology schedule (core.dynamics format)
 
     @property
     def gain_asym(self) -> float:
@@ -245,15 +251,16 @@ def build_ensemble(spec: SweepSpec) -> Ensemble:
                 wp[:n, :n] = w
                 xp0 = np.zeros((n_max, f), dtype=np.float32)
                 xp0[:n] = x0
-                ws.append(wp)
-                x0s.append(xp0)
-                coefs.append((a_w, b_x, c_p))
-                counts.append(n)
-                metas.append(ConfigMeta(
-                    topology=family, n=n, graph_index=gi, design=design,
-                    theta=th, alpha=al, lam2=lam2, rho_memoryless=rho_mem,
-                    psi=1.0 - rho_mem, rho_accel=rho_acc,
-                ))
+                for dyn in spec.dynamics:
+                    ws.append(wp)
+                    x0s.append(xp0)
+                    coefs.append((a_w, b_x, c_p))
+                    counts.append(n)
+                    metas.append(ConfigMeta(
+                        topology=family, n=n, graph_index=gi, design=design,
+                        theta=th, alpha=al, lam2=lam2, rho_memoryless=rho_mem,
+                        psi=1.0 - rho_mem, rho_accel=rho_acc, dynamics=dyn,
+                    ))
 
     return Ensemble(
         ws=np.stack(ws),
@@ -262,3 +269,50 @@ def build_ensemble(spec: SweepSpec) -> Ensemble:
         node_counts=np.asarray(counts, dtype=np.int64),
         configs=tuple(metas),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundMasks:
+    """Compressed per-round edge-activity schedules for a whole grid.
+
+    ``bits[t, g, e]`` = 1 iff edge ``idx[g, e]`` of cell g is up in round t.
+    Cells are padded to the grid's largest edge count with index (0, 0) and
+    bit 1 — the engine's dense expansion overwrites the diagonal with ones,
+    so padded slots are inert. uint8 keeps a (T, G, E) schedule ~32x smaller
+    than the per-round W matrices it replaces.
+    """
+
+    bits: np.ndarray           # (T, G, Emax) uint8, 1 = link up
+    idx: np.ndarray            # (G, Emax, 2) int32 edge endpoints (i < j)
+
+    @property
+    def num_rounds(self) -> int:
+        return self.bits.shape[0]
+
+
+def build_round_masks(ens: Ensemble, num_iters: int, seed: int = 0) -> RoundMasks | None:
+    """Sample every cell's topology schedule for ``num_iters`` rounds.
+
+    Returns None when every cell is static (the engine then takes the static
+    scan, which is cheaper). Sampling is keyed by the *graph*, not the cell
+    (``dynamics.graph_rng``): cells sharing a (family, size, draw) triple —
+    i.e. the same graph crossed with different designs or failure
+    probabilities — consume identical uniforms, so their failure sets are
+    common-random-number coupled and nested across p.
+    """
+    specs = [dynamics.parse_dynamics(c.dynamics) for c in ens.configs]
+    if all(s.is_static for s in specs):
+        return None
+    g = ens.num_configs
+    idx_list = [dynamics.edge_index(ens.ws[i]) for i in range(g)]
+    e_max = max(1, max(len(ix) for ix in idx_list))
+    bits = np.ones((num_iters, g, e_max), dtype=np.uint8)
+    idx = np.zeros((g, e_max, 2), dtype=np.int32)
+    for i, (c, s, ix) in enumerate(zip(ens.configs, specs, idx_list)):
+        e = len(ix)
+        idx[i, :e] = ix
+        if s.is_static:
+            continue                       # bits already all-ones
+        rng = dynamics.graph_rng(seed, (c.topology, c.n, c.graph_index))
+        bits[:, i, :e] = dynamics.sample_edge_bits(s, num_iters, ix, c.n, rng)
+    return RoundMasks(bits=bits, idx=idx)

@@ -1,0 +1,237 @@
+"""Time-varying consensus: schedule semantics, mass preservation, and the
+engine-vs-numpy-reference contract (ISSUE acceptance): a Bernoulli
+link-failure sweep matches the per-round masked-W re-normalized reference to
+1e-6 in f32 across chain/grid2d/rgg, on both jax and pallas backends."""
+import numpy as np
+import pytest
+
+from repro.core import dynamics as dyn
+from repro.core import topology, weights
+from repro.sweep import (
+    SweepSpec,
+    build_ensemble,
+    build_round_masks,
+    run_ensemble,
+    run_sweep,
+)
+
+
+# ---------------------------------------------------------------------------
+# Schedule primitives.
+# ---------------------------------------------------------------------------
+
+def test_parse_dynamics():
+    assert dyn.parse_dynamics("static") == dyn.DynamicsSpec("static")
+    assert dyn.parse_dynamics("bernoulli:0.1") == dyn.DynamicsSpec("bernoulli", p=0.1)
+    assert dyn.parse_dynamics("churn:0.05") == dyn.DynamicsSpec("churn", p=0.05)
+    assert dyn.parse_dynamics("rewire:0.2:50") == dyn.DynamicsSpec(
+        "rewire", p=0.2, period=50)
+    spec = dyn.DynamicsSpec("bernoulli", p=0.3)
+    assert dyn.parse_dynamics(spec) is spec
+    for bad in ("chebyshev:0.1", "bernoulli", "bernoulli:2.0", "rewire:0.1",
+                "rewire:0.1:0", "static:1"):
+        with pytest.raises(ValueError):
+            dyn.parse_dynamics(bad)
+
+
+def test_edge_index_matches_graph():
+    g = topology.grid2d(3, 4)
+    w = weights.metropolis_hastings(g)
+    idx = dyn.edge_index(w)
+    assert len(idx) == g.num_edges
+    assert (idx[:, 0] < idx[:, 1]).all()
+    np.testing.assert_array_equal(idx, g.edge_list())
+
+
+def test_masked_w_stays_doubly_stochastic():
+    rng = np.random.default_rng(0)
+    w = weights.metropolis_hastings(topology.random_geometric(20, rng))
+    idx = dyn.edge_index(w)
+    for _ in range(5):
+        bits = (rng.random(len(idx)) > 0.4).astype(np.uint8)
+        weff = dyn.masked_w(w, bits, idx)
+        np.testing.assert_allclose(weff, weff.T, atol=1e-15)
+        np.testing.assert_allclose(weff.sum(axis=1), 1.0, atol=1e-12)
+        # dropped edges are zeroed, live ones keep the nominal weight
+        i, j = idx[:, 0], idx[:, 1]
+        np.testing.assert_allclose(weff[i, j], w[i, j] * bits, atol=1e-15)
+
+
+def test_masked_w_all_down_is_identity():
+    w = weights.metropolis_hastings(topology.chain(8))
+    idx = dyn.edge_index(w)
+    weff = dyn.masked_w(w, np.zeros(len(idx), np.uint8), idx)
+    np.testing.assert_allclose(weff, np.eye(8), atol=1e-15)
+
+
+def test_rewire_holds_between_redraws():
+    w = weights.metropolis_hastings(topology.ring(12))
+    idx = dyn.edge_index(w)
+    rng = np.random.default_rng(3)
+    bits = dyn.sample_edge_bits("rewire:0.4:10", 35, idx, 12, rng)
+    for t0 in (0, 10, 20, 30):
+        block = bits[t0:t0 + 10]
+        assert (block == block[0]).all()
+    # successive blocks are (generically) different draws
+    assert not (bits[0] == bits[10]).all() or not (bits[10] == bits[20]).all()
+
+
+def test_churn_drops_all_edges_of_down_node():
+    g = topology.star(9)
+    w = weights.metropolis_hastings(g)
+    idx = dyn.edge_index(w)
+    rng = np.random.default_rng(1)
+    bits = dyn.sample_edge_bits("churn:0.3", 50, idx, 9, rng)
+    # reconstruct node-down events: hub is node 0, so a round where every
+    # edge is down must exist at p=0.3 (hub down w.p. 0.3 per round)
+    assert (bits.min(axis=1) == 0).any()
+    # consistency: edges sharing a down endpoint fail together — for the
+    # star, bits of edges (0, j) are independent only through node j when
+    # the hub is up; when the hub is down the whole row is 0
+    hub_down_rows = bits.max(axis=1) == 0
+    assert hub_down_rows.sum() > 0
+
+
+def test_monotone_coupling_across_p():
+    """Failure sets are nested across p for cells sharing a graph."""
+    spec = SweepSpec(topologies=("rgg",), sizes=(18,), designs=("memoryless",),
+                     dynamics=("bernoulli:0.1", "bernoulli:0.4"),
+                     graph_trials=2, num_trials=1, seed=11)
+    ens = build_ensemble(spec)
+    masks = build_round_masks(ens, 40, seed=spec.seed)
+    lo = [i for i, c in enumerate(ens.configs) if c.dynamics == "bernoulli:0.1"]
+    hi = [i for i, c in enumerate(ens.configs) if c.dynamics == "bernoulli:0.4"]
+    for i, j in zip(lo, hi):
+        assert ens.configs[i].graph_index == ens.configs[j].graph_index
+        # an edge up at p=0.4 is necessarily up at p=0.1 (U >= 0.4 => U >= 0.1)
+        assert (masks.bits[:, j] <= masks.bits[:, i]).all()
+        assert masks.bits[:, j].mean() < masks.bits[:, i].mean()
+
+
+# ---------------------------------------------------------------------------
+# Engine contract (acceptance criterion).
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bernoulli_grid():
+    spec = SweepSpec(topologies=("chain", "grid2d", "rgg"), sizes=(12,),
+                     designs=("memoryless", "asymptotic"), num_trials=3,
+                     seed=5, dynamics=("static", "bernoulli:0.2"))
+    ens = build_ensemble(spec)
+    masks = build_round_masks(ens, 60, seed=spec.seed)
+    return spec, ens, masks
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_bernoulli_sweep_matches_numpy_reference(bernoulli_grid, backend):
+    """Engine == per-round masked-W re-normalized reference, 1e-6 in f32."""
+    _, ens, masks = bernoulli_grid
+    res = run_ensemble(ens, num_iters=60, backend=backend, round_masks=masks)
+    for i, c in enumerate(ens.configs):
+        n = c.n
+        e = len(dyn.edge_index(ens.ws[i]))
+        x32, mse32 = dyn.simulate_dynamic_reference(
+            ens.ws[i][:n, :n], ens.x0[i][:n], tuple(ens.coefs[i]),
+            masks.bits[:, i, :e], masks.idx[i, :e], dtype=np.float32,
+        )
+        np.testing.assert_allclose(
+            res.x_final[i][:n], x32, atol=1e-6, rtol=0,
+            err_msg=f"{c.topology}/{c.design}/{c.dynamics} vs f32 reference",
+        )
+        np.testing.assert_allclose(res.mse[i], mse32, atol=1e-6, rtol=0)
+        # float64 semantics agree up to f32 rounding accumulation
+        x64, mse64 = dyn.simulate_dynamic_reference(
+            ens.ws[i][:n, :n], ens.x0[i][:n], tuple(ens.coefs[i]),
+            masks.bits[:, i, :e], masks.idx[i, :e], dtype=np.float64,
+        )
+        np.testing.assert_allclose(res.x_final[i][:n], x64, atol=1e-5, rtol=1e-4)
+        # padded nodes never acquire signal
+        assert np.all(res.x_final[i][n:] == 0.0)
+
+
+def test_static_dynamics_cell_equals_static_engine(bernoulli_grid):
+    """'static' cells inside a dynamic grid == the mask-free scan."""
+    _, ens, masks = bernoulli_grid
+    dyn_res = run_ensemble(ens, num_iters=60, backend="jax", round_masks=masks)
+    static_res = run_ensemble(ens, num_iters=60, backend="jax")
+    for i in dyn_res.cells(dynamics="static"):
+        np.testing.assert_allclose(
+            dyn_res.x_final[i], static_res.x_final[i], atol=1e-6)
+        np.testing.assert_allclose(dyn_res.mse[i], static_res.mse[i], atol=1e-7)
+
+
+def test_failures_conserve_the_average(bernoulli_grid):
+    """Mass preservation: the network mean survives any failure history."""
+    _, ens, masks = bernoulli_grid
+    res = run_ensemble(ens, num_iters=60, backend="jax", round_masks=masks)
+    for i, c in enumerate(ens.configs):
+        n = c.n
+        np.testing.assert_allclose(
+            res.x_final[i][:n].mean(axis=0), ens.x0[i][:n].mean(axis=0),
+            atol=1e-5,
+        )
+
+
+def test_run_sweep_dynamics_axis_end_to_end():
+    """run_sweep wires SweepSpec.dynamics -> masks itself, deterministically."""
+    spec = SweepSpec(topologies=("chain",), sizes=(10,),
+                     designs=("memoryless", "asymptotic"), num_trials=2,
+                     seed=9, dynamics=("static", "bernoulli:0.3"))
+    r1 = run_sweep(spec, num_iters=120, backend="jax")
+    r2 = run_sweep(spec, num_iters=120, backend="jax")
+    np.testing.assert_array_equal(r1.mse, r2.mse)   # host RNG is seeded
+    assert {c.dynamics for c in r1.configs} == {"static", "bernoulli:0.3"}
+    # failures slow convergence: the failed memoryless cell's tail MSE is
+    # (weakly) above its static twin's on the identical graph and inits
+    [i_s] = r1.cells(design="memoryless", dynamics="static")
+    [i_b] = r1.cells(design="memoryless", dynamics="bernoulli:0.3")
+    assert r1.mse[i_b, -1].mean() > r1.mse[i_s, -1].mean()
+
+
+def test_dynamic_grid_shards_across_devices():
+    """The (T, G, E) bit schedule shards over 'data' with the grid, incl.
+    pad-to-divisibility (G=6 on 4 devices). Subprocess: XLA_FLAGS must
+    precede jax init."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    code = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.core import dynamics as dyn
+        from repro.sweep import SweepSpec, build_ensemble, build_round_masks, run_ensemble
+        assert jax.device_count() == 4
+        spec = SweepSpec(topologies=("chain",), sizes=(8, 10, 12),
+                         designs=("memoryless",), num_trials=2, seed=0,
+                         dynamics=("static", "bernoulli:0.25"))
+        ens = build_ensemble(spec)          # G=6, padded to 8
+        masks = build_round_masks(ens, 50, seed=0)
+        res = run_ensemble(ens, num_iters=50, backend="jax", round_masks=masks)
+        assert res.mse.shape == (6, 51, 2)
+        i = res.cells(dynamics="bernoulli:0.25")[1]
+        c = ens.configs[i]; n = c.n
+        e = len(dyn.edge_index(ens.ws[i]))
+        x_ref, mse_ref = dyn.simulate_dynamic_reference(
+            ens.ws[i][:n, :n], ens.x0[i][:n], tuple(ens.coefs[i]),
+            masks.bits[:, i, :e], masks.idx[i, :e], dtype=np.float32)
+        err = max(float(np.abs(res.x_final[i][:n] - x_ref).max()),
+                  float(np.abs(res.mse[i] - mse_ref).max()))
+        assert err < 1e-6, err
+        print("OK sharded dynamics", err)
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300, env=env, cwd=root)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "OK sharded dynamics" in r.stdout
+
+
+def test_spec_rejects_malformed_dynamics():
+    with pytest.raises(ValueError, match="parameter"):
+        SweepSpec(dynamics=("bernoulli",))
+    with pytest.raises(ValueError, match="probability"):
+        SweepSpec(dynamics=("churn:1.5",))

@@ -111,6 +111,131 @@ def test_batched_round_heterogeneous_coefficients(rng):
         )
 
 
+# ---------------------------------------------------------------------------
+# Masked (time-varying topology) variants.
+# ---------------------------------------------------------------------------
+
+def _draw_mask(rng, n, p=0.3):
+    """Symmetric 0/1 activity mask with ones on the diagonal."""
+    u = np.triu(rng.random((n, n)) >= p, 1).astype(np.float64)
+    return u + u.T + np.eye(n)
+
+
+@pytest.mark.parametrize("n,f", [(8, 1), (31, 7), (60, 40), (150, 513)])
+def test_masked_round_matches_masked_w_reference(n, f, rng):
+    """Kernel == dense re-normalized W_eff matmul (the dynamics contract)."""
+    from repro.core import dynamics as dyn
+
+    w, th, alpha = _draw_config(rng, n)
+    m = _draw_mask(rng, n)
+    x = rng.standard_normal((n, f))
+    xp = rng.standard_normal((n, f))
+    a, b, c = _coef(alpha, th)
+
+    idx = dyn.edge_index(w)
+    bits = m[idx[:, 0], idx[:, 1]].astype(np.uint8)
+    weff = dyn.masked_w(w, bits, idx)                        # float64 reference
+    y_np = a * (weff @ x) + b * x + c * xp
+
+    args32 = [jnp.asarray(v, jnp.float32) for v in (w, m, x, xp)]
+    y_ker = ops.gossip_round_masked(*args32, a, b, c)
+    y_ref = ref.gossip_round_masked_ref(*args32, a, b, c)
+    np.testing.assert_allclose(np.asarray(y_ker), y_np, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_round_all_ones_mask_is_unmasked(rng):
+    n, f = 40, 5
+    w, th, alpha = _draw_config(rng, n)
+    a, b, c = _coef(alpha, th)
+    x = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    xp = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    w32 = jnp.asarray(w, jnp.float32)
+    y_m = ops.gossip_round_masked(w32, jnp.ones((n, n), jnp.float32), x, xp, a, b, c)
+    y = ops.gossip_round(w32, x, xp, a, b, c)
+    np.testing.assert_allclose(np.asarray(y_m), np.asarray(y), rtol=1e-6, atol=1e-6)
+
+
+def test_masked_round_all_zeros_mask_freezes_state(rng):
+    """Every edge down => W_eff = I: the matvec term collapses to X."""
+    n, f = 12, 3
+    w, th, alpha = _draw_config(rng, n)
+    a, b, c = _coef(alpha, th)
+    x = rng.standard_normal((n, f))
+    xp = rng.standard_normal((n, f))
+    m = np.eye(n)
+    y = ops.gossip_round_masked(
+        jnp.asarray(w, jnp.float32), jnp.asarray(m, jnp.float32),
+        jnp.asarray(x, jnp.float32), jnp.asarray(xp, jnp.float32), a, b, c)
+    np.testing.assert_allclose(np.asarray(y), (a + b) * x + c * xp,
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("g,n,f", [(1, 16, 3), (4, 40, 5), (7, 33, 130)])
+def test_masked_batched_matches_per_graph(g, n, f, rng):
+    """The masked batched kernel row-for-row equals G masked single calls."""
+    ws, ms, coefs = [], [], []
+    for _ in range(g):
+        w, th, alpha = _draw_config(rng, n)
+        ws.append(w)
+        ms.append(_draw_mask(rng, n))
+        coefs.append(_coef(alpha, th))
+    ws = jnp.asarray(np.stack(ws), jnp.float32)
+    ms = jnp.asarray(np.stack(ms), jnp.float32)
+    coefs = jnp.asarray(np.asarray(coefs), jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((g, n, f)), jnp.float32)
+    xps = jnp.asarray(rng.standard_normal((g, n, f)), jnp.float32)
+
+    y = ops.gossip_round_masked_batched(ws, ms, xs, xps, coefs)
+    y_ref = ref.gossip_round_masked_batched_ref(ws, ms, xs, xps, coefs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    for i in range(g):
+        yi = ops.gossip_round_masked(
+            ws[i], ms[i], xs[i], xps[i], *[coefs[i, k] for k in range(3)])
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(yi),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_masked_batched_heterogeneous_masks(rng):
+    """Each graph must read ITS mask slice (regression for grid mixups)."""
+    g, n, f = 3, 10, 2
+    w = weights.lazy(weights.metropolis_hastings(topology.complete(n)))
+    ws = jnp.asarray(np.stack([w] * g), jnp.float32)
+    coefs = jnp.asarray([[1.0, 0.0, 0.0]] * g, jnp.float32)
+    masks = np.stack([np.eye(n),
+                      np.ones((n, n)),
+                      _draw_mask(np.random.default_rng(4), n)])
+    xs = jnp.asarray(rng.standard_normal((g, n, f)), jnp.float32)
+    xps = jnp.asarray(rng.standard_normal((g, n, f)), jnp.float32)
+    y = ops.gossip_round_masked_batched(
+        ws, jnp.asarray(masks, jnp.float32), xs, xps, coefs)
+    # cell 0: frozen; cell 1: plain W @ x
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(xs[0]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y[1]), w @ np.asarray(xs[1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(2, 80), f=st.integers(1, 20),
+    a=st.floats(-2, 2), b=st.floats(-2, 2), c=st.floats(-2, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_round_property(n, f, a, b, c, seed):
+    """Kernel vs oracle on arbitrary dense W and arbitrary 0/1 masks."""
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.standard_normal((n, n)), jnp.float32)
+    m = jnp.asarray(_draw_mask(r, n, p=0.5), jnp.float32)
+    x = jnp.asarray(r.standard_normal((n, f)), jnp.float32)
+    xp = jnp.asarray(r.standard_normal((n, f)), jnp.float32)
+    y = ops.gossip_round_masked(w, m, x, xp, a, b, c)
+    yr = ref.gossip_round_masked_ref(w, m, x, xp, a, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+
+
 @settings(max_examples=10, deadline=None)
 @given(
     n=st.integers(2, 80), f=st.integers(1, 20),

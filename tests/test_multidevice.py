@@ -128,6 +128,74 @@ def test_accel_gossip_reaches_eps_in_fewer_rounds_p4_ring():
 
 
 @pytest.mark.slow
+def test_masked_gossip_degrades_gracefully_p4():
+    """Per-round dropped-matching masks: the pod mean is conserved under any
+    failure history (mass-preserving re-weighting), an all-ones mask equals
+    the unmasked path bit-for-bit, an all-zeros mask freezes the state, and
+    the in-mesh run matches the host masked-W reference."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import make_fabric, edge_permutations
+        from repro.dist.gossip import accel_gossip, gossip
+        mesh = jax.make_mesh((4,), ("pod",))
+        fab = make_fabric(4, "ring")
+        perms = edge_permutations(fab.w)
+        nm = len(perms)
+        R = 12
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+
+        def run(kind, mask):
+            fn = accel_gossip if kind == "accel" else gossip
+            def body(b):
+                return fn(b[0], "pod", fab, R, drop_mask=mask)[None]
+            f = shard_map(body, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
+                          check_rep=False)
+            return jax.jit(f)(x)
+
+        mask = jnp.asarray((rng.random((R, nm)) >= 0.4), jnp.float32)
+        for kind in ("accel", "mem"):
+            y = run(kind, mask)
+            # pod mean conserved under failures (up to fp roundoff)
+            gap = float(jnp.abs(y.mean(0) - x.mean(0)).max())
+            assert gap < 1e-5, (kind, gap)
+            # ones-mask == unmasked recursion
+            y1 = run(kind, jnp.ones((R, nm), jnp.float32))
+            fn = accel_gossip if kind == "accel" else gossip
+            def plain(b):
+                return fn(b[0], "pod", fab, R)[None]
+            y0 = jax.jit(shard_map(plain, mesh=mesh, in_specs=P("pod"),
+                                   out_specs=P("pod"), check_rep=False))(x)
+            d1 = float(jnp.abs(y1 - y0).max())
+            assert d1 < 1e-6, (kind, d1)
+        # all matchings down every round: W_eff = I, state frozen (up to the
+        # f32 roundoff of re-accumulating (1/3 + 1/3 + 1/3) x per round)
+        yz = run("mem", jnp.zeros((R, nm), jnp.float32))
+        dz = float(jnp.abs(yz - x).max())
+        assert dz < 1e-5, dz
+
+        # host reference: apply the per-round masked (renormalized) W
+        diag = np.diag(fab.w).copy()
+        m_np = np.asarray(mask)
+        xs = np.asarray(x, np.float64)
+        for r in range(R):
+            w_eff = np.diag(diag)
+            for k, (perm, wvec) in enumerate(perms):
+                for s, d in perm:
+                    w_eff[d, s] += m_np[r, k] * wvec[d]
+                    w_eff[d, d] += (1.0 - m_np[r, k]) * wvec[d]
+            xs = w_eff @ xs
+        y_mem = run("mem", mask)
+        dref = float(np.abs(np.asarray(y_mem, np.float64) - xs).max())
+        assert dref < 1e-5, dref
+        print("OK masked gossip", gap, dref)
+    """)
+    assert "OK masked gossip" in out
+
+
+@pytest.mark.slow
 def test_inmesh_doi_matches_theory():
     out = _run("""
         import jax, jax.numpy as jnp
