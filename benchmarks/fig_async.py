@@ -1,0 +1,135 @@
+"""Asynchronous pairwise gossip vs the paper's synchronous methods, tick for tick.
+
+The registry's ``async_pairwise`` algorithm (Boyd-style randomized gossip:
+one edge wakes per engine round and the pair averages) runs in the SAME
+jitted mixed-algorithm sweep as the synchronous memoryless and two-tap
+cells — one program per backend — and this benchmark reads the eps-averaging
+times off the shared MSE trajectories.
+
+Tick-fairness (ROADMAP convention): each engine round is one tick of the
+algorithm's own clock — a full W-multiply for the synchronous family, a
+single pairwise exchange for async. Cross-algorithm comparison normalizes by
+communication: one W-multiply activates every edge once, so E exchanges are
+charged as one synchronous tick (``T_async_ticks = T_async_exch / E``).
+
+Expected shape (the acceptance criterion checks the chain): per edge
+activation the 0.5 pairwise step out-mixes a Metropolis-Hastings synchronous
+round (whose per-edge weights are < 1/2), but a memoryless exchange cannot
+touch the two-tap memory gain — so on sparse topologies the async tick
+counts land strictly BETWEEN the two synchronous curves,
+
+    T_accel  <  T_async_ticks  <  T_memoryless.
+
+On dense graphs (RGG at the connectivity radius) per-edge normalization
+flatters async — E is large while MH weights shrink — and the lower bracket
+can break; the emitted rows record ``bracketed`` per topology either way.
+
+Emits ``BENCH_fig_async.json`` (+ CSV) via ``benchmarks.common.emit``.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+from repro.core import dynamics as dyn
+from repro.sweep import SweepSpec, build_ensemble, build_round_masks, run_ensemble
+
+from .common import emit
+
+QUICK = dict(size=16, graph_trials=2, num_trials=2)
+
+
+def _iter_cap(ens, eps: float) -> int:
+    """Scan length: slowest per-tick contraction in the grid plus slack.
+
+    ``ConfigMeta.rho_accel`` already holds each algorithm's per-tick rate —
+    for async cells the contraction of the expected per-exchange operator
+    I - L/(2E), so the cap is in exchanges there.
+    """
+    worst = 0.0
+    for c in ens.configs:
+        if 0.0 < c.rho_accel < 1.0:
+            worst = max(worst, math.log(eps) / math.log(c.rho_accel))
+    return int(worst * 1.5) + 50
+
+
+def run(topologies=("chain", "grid2d", "rgg"), size=16, graph_trials=1,
+        num_trials=2, eps=1e-3, backend="jax", seed=0, num_iters=None):
+    spec = SweepSpec(
+        topologies=tuple(topologies), sizes=(size,), designs=("asymptotic",),
+        algorithms=("memoryless", "accel", "async_pairwise"),
+        graph_trials=graph_trials, num_trials=num_trials, init="paper",
+        seed=seed,
+    )
+    ens = build_ensemble(spec)
+    cap = num_iters if num_iters is not None else _iter_cap(ens, eps)
+    masks = build_round_masks(ens, cap, seed=seed)
+    res = run_ensemble(ens, num_iters=cap, backend=backend, round_masks=masks)
+    times = res.averaging_times(eps=eps)                          # (G, F)
+
+    rows = []
+    for topo in topologies:
+        mem = res.cells(topology=topo, algorithm="memoryless")
+        acc = res.cells(topology=topo, algorithm="accel")
+        asy = res.cells(topology=topo, algorithm="async_pairwise")
+
+        def agg(cells, per_edge=False):
+            """Mean hitting time over (cell, trial), each async cell's raw
+            exchange count normalized by ITS OWN edge count (random-family
+            draws differ in E) — plus how many (cell, trial) pairs missed
+            the horizon, so a biased mean cannot pass silently."""
+            ts, missed = [], 0
+            for i in cells:
+                e_i = len(dyn.edge_index(ens.ws[i]))
+                for t in times[i]:
+                    if t < 0:
+                        missed += 1
+                    else:
+                        ts.append(t / e_i if per_edge else float(t))
+            mean = sum(ts) / len(ts) if ts else float("nan")
+            return mean, missed
+
+        t_mem, miss_m = agg(mem)
+        t_acc, miss_a = agg(acc)
+        t_exch, miss_x = agg(asy)
+        t_ticks, _ = agg(asy, per_edge=True)
+        missed = miss_m + miss_a + miss_x
+        if missed:
+            print(f"fig_async[{topo}]: {missed} (cell, trial) pair(s) never "
+                  f"reached eps={eps} within {cap} rounds — means are over "
+                  f"the survivors; raise num_iters")
+        e_mean = sum(len(dyn.edge_index(ens.ws[i])) for i in asy) / len(asy)
+        bracketed = t_acc <= t_ticks <= t_mem
+        rows.append({
+            "topology": topo, "n": size, "edges": e_mean,
+            "T_memoryless": t_mem, "T_accel": t_acc,
+            "T_async_exchanges": t_exch, "T_async_ticks": t_ticks,
+            "bracketed": bracketed, "missed": missed,
+        })
+        print(f"fig_async[{topo} n={size} E={e_mean:.0f}]: T_mem={t_mem:.0f} "
+              f"T_accel={t_acc:.0f} T_async={t_exch:.0f}ex = {t_ticks:.1f} "
+              f"ticks -> {'bracketed' if bracketed else 'NOT bracketed'}")
+    emit("fig_async", rows)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: toy sizes, jax backend")
+    ap.add_argument("--backend", default=None, choices=["jax", "pallas"])
+    ap.add_argument("--size", type=int, default=None)
+    ap.add_argument("--trials", type=int, default=None, help="graph draws (rgg)")
+    a = ap.parse_args(argv)
+    kw = dict(QUICK) if a.quick else {}
+    if a.backend is not None:
+        kw["backend"] = a.backend
+    if a.size is not None:
+        kw["size"] = a.size
+    if a.trials is not None:
+        kw["graph_trials"] = a.trials
+    run(**kw)
+
+
+if __name__ == "__main__":
+    main()

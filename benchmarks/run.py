@@ -2,17 +2,80 @@
 extensions. Prints CSV blocks; saves CSV + BENCH_*.json under
 experiments/bench/.
 
-    PYTHONPATH=src python -m benchmarks.run [--full | --quick]
+    PYTHONPATH=src python -m benchmarks.run [--full | --quick | --check]
 
 Default sizes keep a single-core CPU run in minutes; --full uses paper-scale
 trial counts; --quick is the CI smoke tier — kernel microbenches plus the
 sweep engine at toy sizes, a couple of minutes on a shared runner, emitting
 the BENCH_*.json artifacts that the workflow uploads.
+
+--check is the CI perf gate: re-run the kernel microbenches and compare each
+kernel row's us_per_call against the tracked repo-root baseline
+``BENCH_kernel_perf.json`` (the baseline is read BEFORE the fresh run
+overwrites it), exiting non-zero on any >1.5x regression. The ratio is
+overridable via REPRO_PERF_GATE_RATIO for machines much slower than the one
+that stamped the baseline; in CI the committed baseline is stashed before
+the smoke benches rewrite the root JSON.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import sys
 import time
+
+# rows gated by --check: the warmed kernel/engine rows. The simulator_* rows
+# include jit trace+compile time and host eigensolves — tracked, not gated.
+GATE_PREFIXES = ("gossip_round", "sweep_", "ssd_")
+
+
+def _check(baseline_path: str) -> int:
+    try:
+        with open(baseline_path) as f:
+            base_text = f.read()
+        base = json.loads(base_text)
+    except FileNotFoundError:
+        print(f"perf gate: no baseline at {baseline_path} — run "
+              f"`python -m benchmarks.run --quick` and commit the root "
+              f"BENCH_kernel_perf.json to start the trajectory")
+        return 1
+    base_rows = {r["bench"]: float(r["us_per_call"]) for r in base["rows"]}
+
+    from . import kernel_perf
+
+    fresh = kernel_perf.run()
+    # kernel_perf's emit() just rewrote the root BENCH_kernel_perf.json —
+    # which may BE the tracked baseline we gate against. Restore it: a gate
+    # run must never self-ratchet the baseline (two sequential 1.4x
+    # regressions would otherwise each pass against the drifted file) nor
+    # leave the tracked file dirty with machine-local timings. Refreshing
+    # the baseline stays a deliberate act: run --quick and commit.
+    if os.path.exists(baseline_path):
+        with open(baseline_path, "w") as f:
+            f.write(base_text)
+    ratio_max = float(os.environ.get("REPRO_PERF_GATE_RATIO", "1.5"))
+    failures = []
+    print(f"### perf gate (>{ratio_max}x vs {baseline_path})")
+    for r in fresh:
+        name = r["bench"]
+        if not name.startswith(GATE_PREFIXES):
+            continue
+        if name not in base_rows:
+            print(f"{name}: NEW (no baseline row, passes)")
+            continue
+        ratio = float(r["us_per_call"]) / base_rows[name]
+        verdict = "FAIL" if ratio > ratio_max else "ok"
+        print(f"{name}: {base_rows[name]:.0f} -> {r['us_per_call']:.0f} us "
+              f"({ratio:.2f}x) {verdict}")
+        if ratio > ratio_max:
+            failures.append((name, ratio))
+    if failures:
+        print(f"perf gate FAILED: {len(failures)} kernel row(s) regressed "
+              f">{ratio_max}x: " + ", ".join(f"{n} {r:.2f}x" for n, r in failures))
+        return 1
+    print("perf gate passed")
+    return 0
 
 
 def _quick() -> None:
@@ -37,8 +100,19 @@ def main() -> None:
                     help="paper-scale trials (300) instead of CI-scale")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: kernel perf + toy sweep only")
+    ap.add_argument("--check", action="store_true",
+                    help="perf gate: fresh kernel bench vs the tracked baseline")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON for --check (default: repo-root "
+                         "BENCH_kernel_perf.json)")
     args = ap.parse_args()
     full = args.full
+
+    if args.check:
+        from .common import ROOT_DIR
+
+        baseline = args.baseline or os.path.join(ROOT_DIR, "BENCH_kernel_perf.json")
+        sys.exit(_check(baseline))
 
     t0 = time.time()
     if args.quick:

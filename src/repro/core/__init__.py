@@ -6,7 +6,8 @@ weight matrices, the accelerated operator and its optimal mixing parameter
 (Theorem 1), Algorithm-1 decentralized lambda_2 estimation, the comparison
 baselines, convergence metrics, and a vectorized simulation engine.
 """
-from . import accel, baselines, doi, dynamics, metrics, simulator, topology, weights
+from . import accel, algorithms, baselines, doi, dynamics, metrics, simulator, topology, weights
+from .algorithms import ConsensusAlgorithm, get_algorithm, register_algorithm, registered_algorithms
 from .dynamics import DynamicsSpec, masked_w, parse_dynamics
 from .accel import (
     Theta,
@@ -24,6 +25,11 @@ from .weights import lazy, metropolis_hastings
 
 __all__ = [
     "accel",
+    "algorithms",
+    "ConsensusAlgorithm",
+    "get_algorithm",
+    "register_algorithm",
+    "registered_algorithms",
     "baselines",
     "doi",
     "dynamics",

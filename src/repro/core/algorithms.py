@@ -1,0 +1,456 @@
+"""Pluggable consensus-algorithm registry — the seam every layer routes through.
+
+The paper's two-tap recursion is one point in a family of memory-augmented
+consensus algorithms (Yi, Chai & Zhang 2021 generalize the tap structure;
+Olshevsky & Tsitsiklis 2010 lower-bound exactly this short-memory class).
+Before this module each new update rule meant forking four layers — the
+host simulator, the jitted sweep scan, the fused Pallas kernels, and the
+shard_map SPMD path. A :class:`ConsensusAlgorithm` now declares, once:
+
+* its **carry layout** — how many state taps the scan carries (memoryless 1,
+  two-tap 2, polynomial filter 2: display state + Horner accumulator);
+* a **host float64 reference step** (``reference_run``) — the correctness
+  oracle the cross-backend conformance suite checks every engine against;
+* a **jnp round body** (``round_body``) usable inside the sweep engine's one
+  jitted scan. The body is written against a *fused-round primitive*
+  ``prim(x, xp, coef3)`` = ``a*(W_eff@x) + b*x + c*xp`` supplied by the
+  engine, so the same body runs on the jax backend (einsum round) and the
+  pallas backend (fused batched kernel, masked or not) without knowing which;
+* optional **hooks**: ``pallas_round`` overrides the engine's default kernel
+  primitive for algorithms whose tick is not a fused two-tap round, and
+  ``register_dist_variant`` attaches an in-mesh shard_map implementation
+  (``repro.dist.gossip`` registers gossip / accel_gossip / pairwise_gossip).
+
+Seed algorithms:
+
+* ``memoryless``      — x(t+1) = W_eff(t) x(t), one tap.
+* ``accel``           — the paper's two-tap recursion; coefficients
+  (a, b, c) = (1 - alpha + alpha*t3, alpha*t2, alpha*t1) come from the sweep
+  grid's (theta design x alpha) axis (``uses_theta``).
+* ``poly_filter[:k]`` — degree-k polynomial filtering [Kokiopoulou-Frossard,
+  paper ref 14], migrated off the numpy-only island in ``core.baselines``:
+  each super-iteration applies p(W) via Horner, ONE W-multiply per engine
+  tick (k ticks per super-iteration), with the display state held constant
+  inside a super-iteration — the tick-fairness accounting of
+  ``baselines.run_poly_filter``.
+* ``async_pairwise``  — Boyd-style randomized gossip: one edge (i, j) wakes
+  per tick and the pair averages, x_i, x_j <- (x_i + x_j)/2. The edge
+  schedule is sampled host-side (graph-keyed RNG, coupled with the dynamics
+  axis draws) into the same compressed per-tick bit masks the time-varying
+  sweep already scans, and the *pairwise averaging matrix falls out of the
+  mass-preserving masked-W machinery*: with base matrix B (0.5 on every
+  edge, row sums 1) and a one-hot edge mask M(t),
+
+      B .* M(t) + diag((B .* (1 - M(t))) @ 1)
+
+  is exactly the Boyd pairwise matrix — 0.5 on the woken pair, identity
+  elsewhere. One engine, one kernel, zero new scan paths.
+
+Tick-fairness convention (also in ROADMAP): one engine round = one tick of
+the algorithm's own clock — a W-multiply for the synchronous family, a
+single pairwise exchange for ``async_pairwise``. Cross-algorithm comparisons
+normalize by communication: one W-multiply activates every edge once, so
+E pairwise exchanges are charged as one synchronous tick
+(``benchmarks/fig_async.py`` reports both raw exchanges and ticks).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import baselines, dynamics
+
+__all__ = [
+    "ConsensusAlgorithm",
+    "Memoryless",
+    "TwoTapAccel",
+    "PolyFilterAlgorithm",
+    "AsyncPairwise",
+    "register_algorithm",
+    "registered_algorithms",
+    "get_algorithm",
+    "register_dist_variant",
+    "dist_variant",
+    "pairwise_base_matrix",
+]
+
+
+class ConsensusAlgorithm:
+    """One registered consensus update rule (see module docstring).
+
+    Subclasses set the class attributes and implement ``round_body`` (jnp)
+    plus, when the tick is not a degenerate two-tap round, ``reference_run``
+    (host float64/float32 oracle).
+    """
+
+    name: str = "?"            # base registry name
+    spec: str = "?"            # full spec string, e.g. "poly_filter:4"
+    num_taps: int = 1          # scan-carry state slots; slot 0 is displayed
+    num_coefs: int = 0         # width of this algorithm's per-cell param row
+    uses_theta: bool = False   # crossed with the (theta design x alpha) axis?
+    needs_schedule: bool = False  # requires per-tick edge bits even when static
+    pallas_round = None        # optional kernel-primitive override hook
+
+    # -- grid-construction hooks (host, numpy) ------------------------------
+    def base_matrix(self, w: np.ndarray) -> np.ndarray:
+        """The (N, N) matrix stored in the ensemble's ws row for this cell."""
+        return w
+
+    def cell_params(self, w: np.ndarray, eigvals: np.ndarray) -> np.ndarray:
+        """(num_coefs,) static per-cell parameters (non-theta algorithms)."""
+        return np.zeros(0)
+
+    def design_params(self, theta, alpha: float) -> np.ndarray:
+        """Map one (theta, alpha) design cell to this algorithm's param row.
+
+        Only consulted when ``uses_theta`` — the grid crosses such algorithms
+        with the design axis and asks the algorithm (not the grid builder)
+        how a design becomes coefficients.
+        """
+        raise NotImplementedError(
+            f"{self.spec} declares uses_theta but no design_params mapping")
+
+    def tick_rho(self, lam2: float, rho_mem: float, w: np.ndarray,
+                 eigvals: np.ndarray | None = None) -> float:
+        """Per-tick contraction estimate for iteration caps (ConfigMeta.rho_accel)."""
+        return rho_mem
+
+    def schedule_bits(self, dyn_bits: np.ndarray, idx: np.ndarray, n: int,
+                      rng: np.random.Generator) -> np.ndarray:
+        """(T, E) per-tick edge-activity bits; default = the dynamics draw."""
+        return dyn_bits
+
+    # -- engine hooks (jnp, trace time) -------------------------------------
+    def init_carry(self, x0):
+        return (x0,) * self.num_taps
+
+    def round_body(self, prim, params, carry, t):
+        """One tick on this algorithm's grid partition.
+
+        ``prim(x, xp, coef3)`` computes ``a*(W_eff@x) + b*x + c*xp`` with
+        coef3 a traced (Gp, 3) row batch and W_eff this tick's (masked)
+        partition weights; ``params`` is the (Gp, C) static param rows;
+        ``t`` the traced tick index. Returns the new carry tuple; carry[0]
+        is the display state the MSE reduction reads.
+        """
+        raise NotImplementedError
+
+    # -- host reference (the conformance oracle) ----------------------------
+    def ref_coef(self, params: np.ndarray) -> tuple[float, float, float]:
+        """(a, b, c) for algorithms expressible as one fused round per tick."""
+        raise NotImplementedError
+
+    def reference_run(self, w, x0, params, num_iters, bits=None, idx=None,
+                      dtype=np.float64):
+        """Host per-tick masked-W reference; mirrors the engine tick for tick.
+
+        ``w`` is the cell's *base* matrix (``base_matrix``), ``bits``/``idx``
+        the per-tick edge schedule (None = all edges up every tick).
+        Returns (x_final (N, F), mse (T+1, F)) in ``dtype``.
+        """
+        bits, idx = _full_bits(w, num_iters, bits, idx)
+        return dynamics.simulate_dynamic_reference(
+            w, x0, self.ref_coef(params), bits, idx, dtype=dtype)
+
+    def __repr__(self):
+        return f"<ConsensusAlgorithm {self.spec}>"
+
+
+def _full_bits(w, num_iters, bits, idx):
+    if bits is None:
+        idx = dynamics.edge_index(w)
+        bits = np.ones((num_iters, len(idx)), dtype=np.uint8)
+    return np.asarray(bits), np.asarray(idx)
+
+
+def _coef_rows(g, a, b, c):
+    import jax.numpy as jnp
+
+    row = jnp.asarray([a, b, c], jnp.float32)
+    return jnp.broadcast_to(row, (g, 3))
+
+
+# ---------------------------------------------------------------------------
+# Seed algorithms.
+# ---------------------------------------------------------------------------
+
+class Memoryless(ConsensusAlgorithm):
+    """x(t+1) = W_eff(t) x(t) — the paper's baseline as a 1-tap registration."""
+
+    name = spec = "memoryless"
+    num_taps = 1
+
+    def round_body(self, prim, params, carry, t):
+        (x,) = carry
+        return (prim(x, x, _coef_rows(x.shape[0], 1.0, 0.0, 0.0)),)
+
+    def ref_coef(self, params):
+        return (1.0, 0.0, 0.0)
+
+
+class TwoTapAccel(ConsensusAlgorithm):
+    """The paper's two-tap recursion; (a, b, c) rows come from the design axis."""
+
+    name = spec = "accel"
+    num_taps = 2
+    num_coefs = 3
+    uses_theta = True
+
+    def design_params(self, theta, alpha):
+        """(a, b, c) = (1 - alpha + alpha*t3, alpha*t2, alpha*t1) (Eq. 4a-4c);
+        the memoryless design (theta None) is the degenerate (1, 0, 0) row."""
+        if theta is None:
+            return np.asarray([1.0, 0.0, 0.0])
+        return np.asarray([1.0 - alpha + alpha * theta.t3,
+                           alpha * theta.t2, alpha * theta.t1])
+
+    def round_body(self, prim, params, carry, t):
+        x, xp = carry
+        return (prim(x, xp, params[:, :3]), x)
+
+    def ref_coef(self, params):
+        a, b, c = np.asarray(params, np.float64)[:3]
+        return (float(a), float(b), float(c))
+
+
+class PolyFilterAlgorithm(ConsensusAlgorithm):
+    """Degree-k polynomial filtering (paper ref 14) as per-tick Horner steps.
+
+    One engine tick = one W-multiply of the Horner evaluation
+    ``p(W) x = a_k W^k x + ... + a_0 x``; every k ticks the display state
+    (carry slot 0) jumps to the finished super-iteration — inside a
+    super-iteration it is held constant, matching the tick accounting of
+    ``baselines.run_poly_filter``. Carry: (x_display, horner_accumulator).
+    """
+
+    name = "poly_filter"
+    num_taps = 2
+    uses_theta = False
+
+    def __init__(self, degree: int = 3, ridge: float = 0.0):
+        if degree < 1:
+            raise ValueError(f"poly_filter degree must be >= 1, got {degree}")
+        self.degree = int(degree)
+        self.ridge = float(ridge)
+        self.num_coefs = self.degree + 1
+        self.spec = f"poly_filter:{self.degree}"
+
+    def cell_params(self, w, eigvals):
+        # the grid hands us the spectrum it already computed for this graph —
+        # no extra O(N^3) eigensolve per cell
+        filt = baselines.design_poly_filter_from_spectrum(
+            eigvals, self.degree, ridge=self.ridge)
+        return np.asarray(filt.coeffs, np.float64)
+
+    def tick_rho(self, lam2, rho_mem, w, eigvals=None):
+        filt = (baselines.design_poly_filter_from_spectrum(
+                    eigvals, self.degree, ridge=self.ridge)
+                if eigvals is not None else
+                baselines.design_poly_filter(w, self.degree, ridge=self.ridge))
+        return filt.rho_per_tick()
+
+    def round_body(self, prim, params, carry, t):
+        import jax
+        import jax.numpy as jnp
+
+        x_disp, acc = carry
+        k = self.degree
+        g = params.shape[0]
+        p = t % k
+        # phase 0 seeds the Horner accumulator with a_k * x_display; the tick
+        # then contracts once and folds in a_{k-1-p} * x_display via the
+        # primitive's xp tap: y = W_eff @ acc_in + a_j * x_display.
+        acc_in = jnp.where(p == 0, params[:, k:k + 1, None] * x_disp, acc)
+        aj = jax.lax.dynamic_slice_in_dim(params, k - 1 - p, 1, axis=1)
+        coef = jnp.concatenate(
+            [jnp.ones((g, 1), jnp.float32), jnp.zeros((g, 1), jnp.float32),
+             aj.astype(jnp.float32)], axis=1)
+        y = prim(acc_in, x_disp, coef)
+        return (jnp.where(p == k - 1, y, x_disp), y)
+
+    def reference_run(self, w, x0, params, num_iters, bits=None, idx=None,
+                      dtype=np.float64):
+        bits, idx = _full_bits(w, num_iters, bits, idx)
+        a = np.asarray(params, np.float64)[: self.degree + 1]
+        k = self.degree
+        x = np.asarray(x0, dtype=dtype)
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[:, None]
+        acc = x.copy()
+        xbar = x.mean(axis=0, keepdims=True)
+        mse = [((x - xbar) ** 2).mean(axis=0)]
+        wd = np.asarray(w, dtype=dtype)
+        for t in range(bits.shape[0]):
+            weff = dynamics.masked_w(wd, bits[t], idx)
+            p = t % k
+            acc_in = dtype(a[k]) * x if p == 0 else acc
+            acc = (weff @ acc_in + dtype(a[k - 1 - p]) * x).astype(dtype)
+            if p == k - 1:
+                x = acc.copy()
+            mse.append(((x - xbar) ** 2).mean(axis=0))
+        if squeeze:
+            x = x[:, 0]
+        return x, np.stack(mse)
+
+
+def pairwise_base_matrix(w: np.ndarray) -> np.ndarray:
+    """B with 0.5 on every edge of W's support and row sums 1 (diag 1 - deg/2).
+
+    Masking B down to a one-hot edge set under the engine's mass-preserving
+    rule reproduces the Boyd pairwise averaging matrix exactly: the woken
+    pair's rows become (0.5, 0.5), every other row collapses to e_i.
+    """
+    w = np.asarray(w)
+    support = (np.abs(w) > 0).astype(np.float64)
+    np.fill_diagonal(support, 0.0)
+    b = 0.5 * support
+    np.fill_diagonal(b, 1.0 - b.sum(axis=1))
+    return b
+
+
+class AsyncPairwise(ConsensusAlgorithm):
+    """Boyd-style asynchronous randomized pairwise gossip, one edge per tick.
+
+    The host-side schedule samples one edge uniformly per tick (graph-keyed
+    RNG — coupled across designs and failure probabilities like every other
+    schedule) and ANDs it with the cell's dynamics bits: a woken edge that is
+    down this tick simply exchanges nothing (identity round, mean preserved).
+    """
+
+    name = spec = "async_pairwise"
+    num_taps = 1
+    needs_schedule = True
+
+    def base_matrix(self, w):
+        return pairwise_base_matrix(w)
+
+    def tick_rho(self, lam2, rho_mem, w, eigvals=None):
+        """Contraction of the expected per-exchange operator I - L/(2E)."""
+        support = (np.abs(np.asarray(w)) > 0).astype(np.float64)
+        np.fill_diagonal(support, 0.0)
+        e = support.sum() / 2.0
+        if e == 0:
+            return 0.0
+        lap = np.diag(support.sum(axis=1)) - support
+        wbar = np.eye(len(support)) - lap / (2.0 * e)
+        vals = np.sort(np.linalg.eigvalsh(wbar))
+        return float(max(abs(vals[0]), abs(vals[-2])))
+
+    def schedule_bits(self, dyn_bits, idx, n, rng):
+        e = len(idx)
+        if e == 0:
+            return dyn_bits
+        t = dyn_bits.shape[0]
+        choice = rng.integers(0, e, size=t)
+        onehot = np.zeros((t, e), dtype=np.uint8)
+        onehot[np.arange(t), choice] = 1
+        return onehot & dyn_bits
+
+    def round_body(self, prim, params, carry, t):
+        (x,) = carry
+        return (prim(x, x, _coef_rows(x.shape[0], 1.0, 0.0, 0.0)),)
+
+    def ref_coef(self, params):
+        return (1.0, 0.0, 0.0)
+
+    def reference_run(self, w, x0, params, num_iters, bits=None, idx=None,
+                      dtype=np.float64):
+        if bits is None:
+            raise ValueError(
+                "async_pairwise needs a per-tick edge schedule (bits/idx); "
+                "build one via sweep.build_round_masks or schedule_bits()")
+        return super().reference_run(w, x0, params, num_iters, bits, idx, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+_FACTORIES: dict = {}
+_INSTANCES: dict[str, ConsensusAlgorithm] = {}
+_DIST_VARIANTS: dict = {}
+_GENERATION = 0
+
+
+def registry_generation() -> int:
+    """Monotone counter bumped on every (re-)registration.
+
+    The sweep engine threads it through its jit static args: algorithms are
+    identified inside the traced program only by their spec STRINGS, so
+    shadowing a name would otherwise hit the stale cached executable of the
+    previous registration and silently run the old round body.
+    """
+    return _GENERATION
+
+
+def register_algorithm(name: str, factory) -> None:
+    """Register ``factory(*string_args) -> ConsensusAlgorithm`` under ``name``.
+
+    Spec strings are ``name`` or ``name:arg1:arg2`` (args passed as strings,
+    like the dynamics axis). Re-registration replaces (and drops cached
+    instances + invalidates the engine's jit cache via the registry
+    generation) so tests can shadow entries.
+    """
+    global _GENERATION
+    _FACTORIES[name] = factory
+    _GENERATION += 1
+    for k in [k for k in _INSTANCES if k.split(":")[0] == name]:
+        del _INSTANCES[k]
+
+
+def registered_algorithms() -> tuple[str, ...]:
+    """Base names of every registered algorithm, registration order."""
+    return tuple(_FACTORIES)
+
+
+def get_algorithm(spec) -> ConsensusAlgorithm:
+    """Resolve ``"name[:args]"`` (or pass through an instance) via the registry.
+
+    Instances are cached per spec string, so trace-time lookups inside the
+    jitted engine always see the same object.
+    """
+    if isinstance(spec, ConsensusAlgorithm):
+        return spec
+    spec = str(spec)
+    inst = _INSTANCES.get(spec)
+    if inst is None:
+        parts = spec.split(":")
+        factory = _FACTORIES.get(parts[0])
+        if factory is None:
+            raise ValueError(
+                f"unknown consensus algorithm {spec!r} "
+                f"(registered: {sorted(_FACTORIES)})")
+        inst = factory(*parts[1:])
+        if not isinstance(inst, ConsensusAlgorithm):
+            raise TypeError(f"factory for {parts[0]!r} returned {type(inst)}")
+        # record the spec AS LOOKED UP: ConfigMeta.algorithm then round-trips
+        # through SweepResult.cells(algorithm=...) with the exact string the
+        # user put in SweepSpec.algorithms (e.g. "poly_filter", not the
+        # default-expanded "poly_filter:3")
+        inst.spec = spec
+        _INSTANCES[spec] = inst
+    return inst
+
+
+def register_dist_variant(name: str, fn) -> None:
+    """Attach an in-mesh shard_map implementation to a registered algorithm.
+
+    ``repro.dist.gossip`` calls this at import for the seed algorithms; the
+    registry stays importable without jax's distributed machinery.
+    """
+    if name.split(":")[0] not in _FACTORIES:
+        raise ValueError(f"cannot attach dist variant to unknown algorithm {name!r}")
+    _DIST_VARIANTS[name.split(":")[0]] = fn
+
+
+def dist_variant(name: str):
+    """The registered shard_map implementation for ``name`` (None if absent)."""
+    return _DIST_VARIANTS.get(str(name).split(":")[0])
+
+
+register_algorithm("memoryless", Memoryless)
+register_algorithm("accel", TwoTapAccel)
+register_algorithm(
+    "poly_filter", lambda degree="3", ridge="0.0":
+    PolyFilterAlgorithm(degree=int(degree), ridge=float(ridge)))
+register_algorithm("async_pairwise", AsyncPairwise)

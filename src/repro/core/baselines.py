@@ -27,6 +27,7 @@ import numpy as np
 __all__ = [
     "PolyFilter",
     "design_poly_filter",
+    "design_poly_filter_from_spectrum",
     "poly_filter_step",
     "run_poly_filter",
     "distinct_eigenvalues",
@@ -68,13 +69,25 @@ def design_poly_filter(
 ) -> PolyFilter:
     """LS design from ref [14]: minimize sum_i p(lambda_i)^2 s.t. p(1) = 1.
 
+    Eigensolves W and delegates to ``design_poly_filter_from_spectrum`` —
+    call that directly when the spectrum is already in hand (the sweep grid
+    computes it once per graph).
+    """
+    vals = np.linalg.eigvalsh(w)
+    return design_poly_filter_from_spectrum(vals, degree, ridge)
+
+
+def design_poly_filter_from_spectrum(
+    eigvals: np.ndarray, degree: int, ridge: float = 0.0
+) -> PolyFilter:
+    """The ref-[14] LS design from the (full) spectrum of W.
+
     Closed form via the Vandermonde gram G = V^T V (+ ridge I):
     a = G^-1 c / (c^T G^-1 c), c = ones (the powers of z = 1).
     The paper's footnote-2 ill-conditioning is exactly cond(G) blowing up with
     degree; ridge > 0 regularizes (we default to exact LS like the reference).
     """
-    vals = np.linalg.eigvalsh(w)
-    lam = np.sort(vals)[:-1]  # exclude the eigenvalue 1
+    lam = np.sort(np.asarray(eigvals))[:-1]  # exclude the eigenvalue 1
     v = np.vander(lam, degree + 1, increasing=True)  # (N-1, k+1)
     g = v.T @ v + ridge * np.eye(degree + 1)
     c = np.ones(degree + 1)

@@ -80,11 +80,18 @@ def simulate(
 ) -> SimResult:
     """Run ``num_iters`` consensus rounds on an (N,) or (N, F) initial block.
 
-    alpha = 0 (or theta None) gives memoryless consensus; otherwise the
-    two-tap accelerated recursion with mixing parameter alpha.
+    alpha = 0 gives memoryless consensus; otherwise the two-tap accelerated
+    recursion with mixing parameter alpha (theta required: a non-zero alpha
+    without a predictor design is a mis-wired cell, not a baseline).
     """
     if backend not in ("numpy", "jax", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")  # before any array work
+    if theta is None and alpha != 0.0:
+        # refuse to silently decay to the memoryless baseline: a design that
+        # lost its theta would otherwise masquerade as a converged baseline
+        raise ValueError(
+            f"alpha={alpha} with theta=None: the two-tap recursion needs a "
+            f"predictor design (pass theta=, or alpha=0.0 for memoryless)")
     x0 = np.asarray(x0)
     squeeze = x0.ndim == 1
     if squeeze:

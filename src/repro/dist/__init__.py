@@ -18,10 +18,12 @@ from .compression import BF16Wire, Int8Wire
 from .gossip import (
     PodFabric,
     accel_gossip,
+    algorithm_gossip,
     distributed_lambda2,
     edge_permutations,
     fabric_matvec,
     make_fabric,
+    pairwise_gossip,
 )
 from .gossip import gossip as gossip_rounds
 from .sharding import partition_spec
@@ -37,6 +39,8 @@ __all__ = [
     "PodFabric",
     "make_fabric",
     "accel_gossip",
+    "algorithm_gossip",
+    "pairwise_gossip",
     "gossip_rounds",
     "distributed_lambda2",
     "edge_permutations",

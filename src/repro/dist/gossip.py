@@ -37,6 +37,8 @@ __all__ = [
     "make_fabric",
     "gossip",
     "accel_gossip",
+    "pairwise_gossip",
+    "algorithm_gossip",
     "distributed_lambda2",
     "default_doi_iters",
     "edge_permutations",
@@ -326,6 +328,78 @@ def accel_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int, wire=Non
 
     return _wire_rounds(x, axis_name, fabric, num_rounds, wire, step,
                         drop_mask=drop_mask)
+
+
+def pairwise_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int,
+                    schedule=None, seed: int = 0):
+    """Boyd-style asynchronous randomized pairwise gossip, in-mesh.
+
+    One fabric edge wakes per round: the woken pair swaps states over a
+    single two-element ppermute and averages, x_i, x_j <- (x_i + x_j)/2;
+    every other pod holds its value (the in-mesh mirror of the registry's
+    ``async_pairwise`` engine algorithm — one exchange = one round here too).
+
+    ``schedule`` is the host-sampled (num_rounds,) edge-index sequence; None
+    samples it from ``dynamics.graph_rng(seed, ...)`` keyed by the fabric
+    topology, so the lowered program is reproducible across hosts (the edge
+    list, like ``edge_permutations``, is visited in deterministic sorted
+    order). The pod mean is conserved exactly in real arithmetic: every
+    round's effective matrix is symmetric doubly stochastic.
+    """
+    from ..core import dynamics
+
+    w = fabric.w
+    p = w.shape[0]
+    edges = [(i, j) for i in range(p) for j in range(i + 1, p) if w[i, j] != 0.0]
+    if not edges:
+        return x
+    if schedule is None:
+        rng = dynamics.graph_rng(seed, ("pairwise", fabric.topology, p))
+        schedule = rng.integers(0, len(edges), size=num_rounds)
+    schedule = np.asarray(schedule)
+    if schedule.shape != (num_rounds,):
+        raise ValueError(
+            f"schedule shape {schedule.shape} != (num_rounds,) = ({num_rounds},)")
+    idx = jax.lax.axis_index(axis_name)
+    for r in range(num_rounds):
+        i, j = edges[int(schedule[r])]
+        recv = jax.lax.ppermute(x, axis_name, [(i, j), (j, i)])
+        awake = (idx == i) | (idx == j)
+        x = jnp.where(awake, 0.5 * (x + recv), x)
+    return x
+
+
+def algorithm_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int,
+                     algorithm: str = "accel", **kwargs):
+    """Run ``num_rounds`` of a *registered* consensus algorithm in-mesh.
+
+    Dispatches through the ``repro.core.algorithms`` registry's dist-variant
+    hook table — the shard_map mirror of the sweep engine's algorithm axis.
+    This module registers the seed variants at import (memoryless ->
+    ``gossip``, accel -> ``accel_gossip``, async_pairwise ->
+    ``pairwise_gossip``); extra keyword arguments (``wire``, ``drop_mask``,
+    ``schedule``) pass through to the variant.
+    """
+    from ..core.algorithms import dist_variant, get_algorithm
+
+    algo = get_algorithm(algorithm)      # raises on unknown spec
+    fn = dist_variant(algo.name)
+    if fn is None:
+        raise NotImplementedError(
+            f"algorithm {algo.spec!r} has no registered dist variant "
+            f"(register one via core.algorithms.register_dist_variant)")
+    return fn(x, axis_name, fabric, num_rounds, **kwargs)
+
+
+def _register_dist_variants():
+    from ..core.algorithms import register_dist_variant
+
+    register_dist_variant("memoryless", gossip)
+    register_dist_variant("accel", accel_gossip)
+    register_dist_variant("async_pairwise", pairwise_gossip)
+
+
+_register_dist_variants()
 
 
 def default_doi_iters(fab: PodFabric, dtype, tol: float = 1e-4) -> int:

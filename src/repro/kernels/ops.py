@@ -32,6 +32,7 @@ from .ref import ssd_chunk_ref
 from .ssd_chunk import ssd_chunk_pallas
 
 __all__ = [
+    "batched_round_prim",
     "consensus_update",
     "gossip_matvec",
     "gossip_round",
@@ -106,6 +107,35 @@ def gossip_matvec(w, x):
 def _round_tiles(f: int) -> tuple[int, int, int]:
     """(bm, bk, bf) MXU-aligned tiles; narrow trial blocks get narrow bf."""
     return 128, 128, 512 if f > 256 else 128
+
+
+def batched_round_prim(ws, *, bm: int = 128, bk: int = 128, bf: int = 512,
+                       interpret: bool | None = None):
+    """Fused-round primitive over a pre-padded (Gp, N, N) partition slice.
+
+    This is the kernel-layer dispatch point every registry algorithm's
+    ``round_body`` routes through on the pallas backend (an algorithm may
+    override it via its ``pallas_round`` hook): the returned
+
+        prim(x, xp, coef, m=None) -> coef[:,0]*(W_eff@x) + coef[:,1]*x
+                                     + coef[:,2]*xp
+
+    picks the plain or the masked fused batched kernel by whether a per-round
+    (Gp, N, N) activity mask ``m`` is supplied. Operands must already be
+    padded to the (bm, bk, bf) tiles — the sweep engine pads ONCE outside its
+    scan (see ``repro.sweep.engine``).
+    """
+    if interpret is None:
+        interpret = use_interpret()
+
+    def prim(x, xp, coef, m=None):
+        if m is None:
+            return gossip_round_batched_pallas(
+                ws, x, xp, coef, bm=bm, bk=bk, bf=bf, interpret=interpret)
+        return gossip_round_masked_batched_pallas(
+            ws, m, x, xp, coef, bm=bm, bk=bk, bf=bf, interpret=interpret)
+
+    return prim
 
 
 @jax.jit

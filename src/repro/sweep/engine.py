@@ -12,11 +12,14 @@ Axes and their mapping:
 * ``T`` (iterations) — a single ``lax.scan``; the carry is (x, x_prev) only,
   so memory is O(G N F) while the returned MSE trajectory is O(T G F).
 
-The per-round body is the fused two-tap update. ``backend='jax'`` vmaps the
-single-graph round over the stacked graph axis (XLA fuses it into one batched
-matmul); ``backend='pallas'`` drives the batched-grid fused kernel
-``kernels.gossip_round_batched`` directly — matvec accumulation and the FMA
-taps in one kernel launch per round, no intermediate x_w in HBM.
+The per-round body comes from the consensus-algorithm registry
+(``repro.core.algorithms``): the grid is partitioned along G by algorithm
+(``Ensemble.layout``), each partition carries its own tap tuple through the
+scan and applies its registered ``round_body`` against the engine's
+fused-round primitive. ``backend='jax'`` lowers the primitive to a batched
+einsum round; ``backend='pallas'`` drives the batched-grid fused kernel
+(``kernels.ops.batched_round_prim``) — matvec accumulation and the FMA taps
+in one kernel launch per round, no intermediate x_w in HBM.
 
 Everything funnels through one jit entry (``_sweep_scan``): a full sweep —
 and the degenerate G=1 sweep that ``repro.core.simulator.simulate`` routes
@@ -56,20 +59,40 @@ def trace_count() -> int:
     return _TRACE_COUNT
 
 
-@functools.partial(jax.jit, static_argnames=("num_iters", "use_kernels", "tiles"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_iters", "use_kernels", "tiles", "layout", "algo_gen"))
 def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
-                tiles: tuple[int, int, int] | None = None, bits=None, eidx=None):
-    """One jitted scan for both the static and the dynamic-topology sweep.
+                tiles: tuple[int, int, int] | None = None, bits=None, eidx=None,
+                layout: tuple[tuple[str, int, int], ...] | None = None,
+                algo_gen: int = 0):
+    """One jitted scan for the whole (possibly mixed-algorithm) grid.
+
+    ``layout`` is the static tuple of (algorithm spec, start, stop) G
+    partitions (``Ensemble.layout``; None = one two-tap partition). Each
+    partition carries its own registry algorithm's tap tuple through the
+    scan and applies its own ``round_body``, written against the fused-round
+    primitive this function supplies — einsum round on the jax backend, the
+    fused batched Pallas kernel (masked or not) on the pallas backend. The
+    MSE reduction reads every partition's display state (carry slot 0).
 
     ``bits``/``eidx`` (None on the static path) carry the compressed
     (T, G, E) uint8 edge-activity schedule: the scan expands each round's
     bits into the dense (G, N, N) 0/1 mask *inside* the body — one round's
     mask lives in registers/VMEM while the per-round effective matrices
     W_eff(t) = W.*M + diag((W.*(1-M))@1) are never materialized in HBM
-    (``repro.core.dynamics`` has the model).
+    (``repro.core.dynamics`` has the model; ``async_pairwise`` rides the
+    same machinery with one-hot bits over its pairwise base matrix).
+
+    ``algo_gen`` is the registry generation (static): layout names resolve
+    to algorithm OBJECTS only at trace time, so a re-registered name must
+    miss the jit cache rather than silently run the shadowed round body.
     """
+    del algo_gen  # participates only in the jit cache key
     global _TRACE_COUNT
     _TRACE_COUNT += 1  # trace-time side effect: counts compilations
+
+    from repro.core.algorithms import get_algorithm
 
     ws = ws.astype(jnp.float32)
     x0 = x0.astype(jnp.float32)
@@ -77,13 +100,15 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
     inv_n = inv_n.astype(jnp.float32)
     coefs = coefs.astype(jnp.float32)
     dynamic = bits is not None
+    if layout is None:
+        layout = (("accel", 0, ws.shape[0]),)
 
     if dynamic:
         n = ws.shape[1]
         eye = jnp.eye(n, dtype=bool)
 
-        def expand(bits_t):
-            """(G, E) bits -> (G, N, N) dense mask: 1 on live edges + diag.
+        def expand(bits_t, ei):
+            """(Gp, E) bits -> (Gp, N, N) dense mask: 1 on live edges + diag.
 
             Padded edge slots carry index (0, 0); whatever they scatter onto
             the diagonal is overwritten by the eye fill, so padding is exact.
@@ -95,7 +120,7 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
                 m0 = m0.at[ig[:, 1], ig[:, 0]].set(b)
                 return m0
 
-            return jnp.where(eye, 1.0, jax.vmap(one)(bits_t, eidx))
+            return jnp.where(eye, 1.0, jax.vmap(one)(bits_t, ei))
 
     # per-cell target: the true initial average over real nodes (padding is 0)
     xbar = x0.sum(axis=1, keepdims=True) * inv_n[:, None, None]   # (G, 1, F)
@@ -107,57 +132,67 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
         # carry (the wrapper in kernels.ops pays those per call; over
         # thousands of rounds they would dwarf the x_w round-trip the
         # fusion removes).
-        from repro.kernels.ops import use_interpret
-        from repro.kernels.gossip_round import (
-            gossip_round_batched_pallas,
-            gossip_round_masked_batched_pallas,
-        )
+        from repro.kernels.ops import batched_round_prim, use_interpret
 
         bm, bk, bf = tiles
         interpret = use_interpret()
 
-        def round_fn(x, xp, m):
-            if m is None:
-                return gossip_round_batched_pallas(
-                    ws, x, xp, coefs, bm=bm, bk=bk, bf=bf, interpret=interpret
-                )
-            return gossip_round_masked_batched_pallas(
-                ws, m, x, xp, coefs, bm=bm, bk=bk, bf=bf, interpret=interpret
-            )
-    elif dynamic:
-        a = coefs[:, 0, None, None]
-        b = coefs[:, 1, None, None]
-        c = coefs[:, 2, None, None]
-
-        def round_fn(x, xp, m):
-            wm = ws * m
-            drop = jnp.sum(ws - wm, axis=2)                       # (G, N)
-            xw = jnp.einsum(
-                "gij,gjf->gif", wm, x, preferred_element_type=jnp.float32
-            ) + drop[:, :, None] * x
-            return a * xw + b * x + c * xp
+        def make_prim(wsp):
+            return batched_round_prim(
+                wsp, bm=bm, bk=bk, bf=bf, interpret=interpret)
     else:
-        def one_graph_round(w, x, xp, coef):
-            xw = jnp.dot(w, x, preferred_element_type=jnp.float32)
-            return coef[0] * xw + coef[1] * x + coef[2] * xp
+        def make_prim(wsp):
+            def prim(x, xp, coef, m=None):
+                a = coef[:, 0, None, None]
+                b = coef[:, 1, None, None]
+                c = coef[:, 2, None, None]
+                if m is None:
+                    xw = jnp.einsum(
+                        "gij,gjf->gif", wsp, x,
+                        preferred_element_type=jnp.float32)
+                else:
+                    wm = wsp * m
+                    drop = jnp.sum(wsp - wm, axis=2)              # (Gp, N)
+                    xw = jnp.einsum(
+                        "gij,gjf->gif", wm, x,
+                        preferred_element_type=jnp.float32
+                    ) + drop[:, :, None] * x
+                return a * xw + b * x + c * xp
+            return prim
 
-        vmapped_round = jax.vmap(one_graph_round)
-
-        def round_fn(x, xp, m):
-            return vmapped_round(ws, x, xp, coefs)
+    # per-partition algorithm objects and primitives (trace-time python)
+    parts = []
+    for name, s, e in layout:
+        algo = get_algorithm(name)
+        prim = algo.pallas_round(ws[s:e], tiles=tiles) \
+            if (use_kernels and algo.pallas_round is not None) \
+            else make_prim(ws[s:e])
+        parts.append((algo, s, e, prim))
 
     def mse_of(x):
         d = (x - xbar) * mask
         return (d * d).sum(axis=1) * inv_n[:, None]               # (G, F)
 
-    def body(carry, bits_t):
-        x, xp = carry
-        x_new = round_fn(x, xp, expand(bits_t) if dynamic else None)
-        return (x_new, x), mse_of(x_new)
+    def body(carry, xs_t):
+        t, bits_t = xs_t if dynamic else (xs_t, None)
+        new_carry, disp = [], []
+        for (algo, s, e, prim), sub in zip(parts, carry):
+            m = expand(bits_t[s:e], eidx[s:e]) if dynamic else None
+            sub = algo.round_body(
+                lambda x, xp, coef, _p=prim, _m=m: _p(x, xp, coef, _m),
+                coefs[s:e], sub, t)
+            new_carry.append(sub)
+            disp.append(sub[0])
+        x_all = disp[0] if len(disp) == 1 else jnp.concatenate(disp, axis=0)
+        return tuple(new_carry), mse_of(x_all)
 
-    (x_fin, _), mse_tail = jax.lax.scan(
-        body, (x0, x0), bits if dynamic else None, length=num_iters
+    init = tuple(algo.init_carry(x0[s:e]) for algo, s, e, _ in parts)
+    t_idx = jnp.arange(num_iters, dtype=jnp.int32)
+    carry_fin, mse_tail = jax.lax.scan(
+        body, init, (t_idx, bits) if dynamic else t_idx, length=num_iters
     )
+    disp_fin = [sub[0] for sub in carry_fin]
+    x_fin = disp_fin[0] if len(disp_fin) == 1 else jnp.concatenate(disp_fin, axis=0)
     mse = jnp.concatenate([mse_of(x0)[None], mse_tail], axis=0)   # (T+1, G, F)
     return x_fin, jnp.moveaxis(mse, 0, 1)                         # (G, T+1, F)
 
@@ -172,29 +207,39 @@ def run_batch(
     backend: str = "jax",
     mesh=None,
     round_masks: RoundMasks | None = None,
+    algos: tuple[tuple[str, int, int], ...] | None = None,
 ):
     """Evaluate ``num_iters`` rounds over a stacked (G, N, N) ensemble.
 
     Args:
-      ws:    (G, N, N) stacked weight matrices (zero-padded rows/cols OK).
+      ws:    (G, N, N) stacked base matrices (zero-padded rows/cols OK).
       x0:    (G, N, F) initial-condition blocks (zeros on padded nodes).
-      coefs: (G, 3) fused-round coefficients (a, b, c) per cell.
+      coefs: (G, C) per-cell algorithm parameter rows ((a, b, c) for the
+        default two-tap partition).
       node_counts: (G,) real node count per cell; None means no padding.
       num_iters: rounds T.
-      backend: 'jax' (vmapped matmul round) or 'pallas' (fused batched kernel).
+      backend: 'jax' (einsum round) or 'pallas' (fused batched kernel).
       mesh: optional jax Mesh; defaults to the host mesh when more than one
         device is visible. The G axis is sharded over 'data' (padded with
-        replicas of cell 0 to divisibility; pad rows are dropped on return).
+        replicas of the last cell to divisibility; pad rows are dropped on
+        return). Mixed-algorithm grids slice G per partition inside the
+        program — align partition boundaries with the shard grid to avoid
+        resharding (single-algorithm grids always are).
       round_masks: optional ``RoundMasks`` (compressed per-round edge-activity
         bits, see ``repro.sweep.grid.build_round_masks``): routes through the
         dynamic-topology scan, where each round runs on the mass-preservingly
-        re-normalized masked W of that round.
+        re-normalized masked W of that round. Required whenever a partition's
+        algorithm needs a per-tick schedule (``async_pairwise``).
+      algos: static (algorithm spec, start, stop) partition layout along G
+        (``Ensemble.layout``); None = one two-tap ("accel") partition.
 
     Returns:
       (x_final (G, N, F), mse (G, T+1, F)) as numpy arrays.
     """
     if backend not in ("jax", "pallas"):
         raise ValueError(f"unknown backend {backend!r} (sweep runs 'jax' or 'pallas')")
+    from repro.core.algorithms import get_algorithm
+
     ws = np.asarray(ws)
     x0 = np.asarray(x0)
     coefs = np.asarray(coefs)
@@ -202,6 +247,25 @@ def run_batch(
     if node_counts is None:
         node_counts = np.full(g, n, dtype=np.int64)
     node_counts = np.asarray(node_counts)
+    if algos is None:
+        algos = (("accel", 0, g),)
+    if [s for _, s, _ in algos] != [0] + [e for _, _, e in algos][:-1] \
+            or algos[-1][2] != g:
+        raise ValueError(f"algorithm layout {algos} does not tile G={g}")
+    # coalesce adjacent same-algorithm partitions (merged ensembles produce
+    # them) so the scan body keeps one fused round per distinct algorithm
+    merged = [list(algos[0])]
+    for name, s, e in algos[1:]:
+        if name == merged[-1][0]:
+            merged[-1][2] = e
+        else:
+            merged.append([name, s, e])
+    algos = tuple((n_, s_, e_) for n_, s_, e_ in merged)
+    if round_masks is None and any(
+            get_algorithm(name).needs_schedule for name, _, _ in algos):
+        raise ValueError(
+            "this grid contains a schedule-bearing algorithm (async_pairwise): "
+            "pass round_masks=build_round_masks(ens, num_iters)")
 
     bits = eidx = None
     if round_masks is not None:
@@ -266,17 +330,21 @@ def run_batch(
         ndata = mesh.shape["data"]
         g_pad = (-g) % ndata
         if g_pad:
+            # replicate the LAST cell so the pad extends the last algorithm
+            # partition (pad rows are dropped on return either way)
             arrays = tuple(
-                np.concatenate([a, np.repeat(a[:1], g_pad, axis=0)], axis=0)
+                np.concatenate([a, np.repeat(a[-1:], g_pad, axis=0)], axis=0)
                 for a in arrays
             )
             if bits is not None:
                 bits = np.concatenate(
-                    [bits, np.repeat(bits[:, :1], g_pad, axis=1)], axis=1
+                    [bits, np.repeat(bits[:, -1:], g_pad, axis=1)], axis=1
                 )
                 eidx = np.concatenate(
-                    [eidx, np.repeat(eidx[:1], g_pad, axis=0)], axis=0
+                    [eidx, np.repeat(eidx[-1:], g_pad, axis=0)], axis=0
                 )
+            name, s, _ = algos[-1]
+            algos = algos[:-1] + ((name, s, g + g_pad),)
         specs = (
             P("data"),                    # ws
             P("data", None, "model"),     # x0
@@ -292,9 +360,12 @@ def run_batch(
             bits = jax.device_put(bits, NamedSharding(mesh, P(None, "data")))
             eidx = jax.device_put(eidx, NamedSharding(mesh, P("data")))
 
+    from repro.core.algorithms import registry_generation
+
     x_fin, mse = _sweep_scan(
         *arrays, num_iters=num_iters, use_kernels=(backend == "pallas"),
-        tiles=tiles, bits=bits, eidx=eidx,
+        tiles=tiles, bits=bits, eidx=eidx, layout=tuple(algos),
+        algo_gen=registry_generation(),
     )
     x_fin, mse = np.asarray(x_fin), np.asarray(mse)
     if g_pad:
@@ -320,16 +391,24 @@ class SweepResult:
     def num_iters(self) -> int:
         return self.mse.shape[1] - 1
 
-    def averaging_times(self, eps: float = 1e-5) -> np.ndarray:
+    def averaging_times(self, eps: float = 1e-5, sustained: bool = False) -> np.ndarray:
         """(G, F) empirical eps-averaging times (Eq. 16) from the MSE curves.
 
-        First t with ||x(t) - xbar|| <= eps ||x(0) - xbar||, i.e.
-        mse(t) <= eps^2 mse(0); -1 where the cap was never reached.
+        Default (``sustained=False``): first t with
+        ||x(t) - xbar|| <= eps ||x(0) - xbar||, i.e. mse(t) <= eps^2 mse(0)
+        — the paper's first-crossing definition, matching
+        ``metrics.averaging_time``. On non-monotone curves (masked dynamics,
+        randomized pairwise exchanges) first crossing under-reports:
+        ``sustained=True`` instead returns the first t after which the MSE
+        *stays* below the threshold through the end of the horizon. Both
+        return -1 where the criterion is never (or never durably) met.
         """
         thresh = (eps * eps) * self.mse[:, :1, :]                 # (G, 1, F)
         hit = self.mse <= np.maximum(thresh, 0.0)                 # (G, T+1, F)
-        # first hit that STAYS below would be stricter; the paper uses first
-        # crossing, matching metrics.averaging_time
+        if sustained:
+            # suffix-AND along t: stays[t] == all(hit[t:])
+            hit = np.flip(np.logical_and.accumulate(
+                np.flip(hit, axis=1), axis=1), axis=1)
         t = np.argmax(hit, axis=1)
         reached = hit.any(axis=1)
         return np.where(reached, t, -1).astype(np.int64)
@@ -360,7 +439,7 @@ def run_ensemble(
     x_fin, mse = run_batch(
         ens.ws, ens.x0, ens.coefs, ens.node_counts,
         num_iters=num_iters, backend=backend, mesh=mesh,
-        round_masks=round_masks,
+        round_masks=round_masks, algos=ens.layout,
     )
     return SweepResult(ensemble=ens, x_final=x_fin, mse=mse)
 

@@ -33,7 +33,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core import accel, dynamics, metrics, topology, weights
+from repro.core import accel, algorithms, dynamics, metrics, topology, weights
 from repro.core.accel import Theta
 
 __all__ = [
@@ -98,6 +98,7 @@ class SweepSpec:
     init: str = "paper"                       # "paper" (slope+spikes) | "gaussian"
     seed: int = 0
     dynamics: tuple[str, ...] = ("static",)   # topology schedules (core.dynamics)
+    algorithms: tuple[str, ...] = ("accel",)  # registry specs (core.algorithms)
 
     def __post_init__(self):
         for d in self.designs:
@@ -105,6 +106,8 @@ class SweepSpec:
                 raise ValueError(f"unknown design {d!r} (have {sorted(THETA_DESIGNS)})")
         for s in self.dynamics:
             dynamics.parse_dynamics(s)        # raises on malformed schedules
+        for a in self.algorithms:
+            algorithms.get_algorithm(a)       # raises on unknown algorithms
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,8 +123,9 @@ class ConfigMeta:
     lam2: float
     rho_memoryless: float      # rho(W - J)
     psi: float                 # spectral gap 1 - rho(W - J) (Theorem 2's Psi)
-    rho_accel: float           # sqrt(-alpha* theta1) for accelerated cells
+    rho_accel: float           # per-tick contraction of this cell's algorithm
     dynamics: str = "static"   # topology schedule (core.dynamics format)
+    algorithm: str = "accel"   # registry spec (core.algorithms format)
 
     @property
     def gain_asym(self) -> float:
@@ -135,15 +139,28 @@ class ConfigMeta:
 class Ensemble:
     """The stacked grid (see module docstring). Arrays are numpy fp32/fp64."""
 
-    ws: np.ndarray             # (G, Nmax, Nmax)
+    ws: np.ndarray             # (G, Nmax, Nmax) per-cell base matrices
     x0: np.ndarray             # (G, Nmax, F)
-    coefs: np.ndarray          # (G, 3)
+    coefs: np.ndarray          # (G, C) per-cell algorithm parameter rows
     node_counts: np.ndarray    # (G,) int
     configs: tuple[ConfigMeta, ...]
+    algos: tuple[tuple[str, int, int], ...] = ()   # (spec, start, stop) partitions
 
     @property
     def num_configs(self) -> int:
         return self.ws.shape[0]
+
+    @property
+    def layout(self) -> tuple[tuple[str, int, int], ...]:
+        """Algorithm partitions along G; () normalizes to one accel partition.
+
+        Cells are grouped contiguously by algorithm (build_ensemble iterates
+        the algorithm axis outermost) so the engine can give each partition
+        its own carry structure and round body inside ONE jitted scan.
+        """
+        if self.algos:
+            return self.algos
+        return (("accel", 0, self.num_configs),)
 
     @property
     def n_max(self) -> int:
@@ -175,12 +192,21 @@ def merge_ensembles(*ensembles: Ensemble) -> Ensemble:
             pad[ax] = (0, n_max - a.shape[ax])
         return np.pad(a, pad)
 
+    c_max = max(e.coefs.shape[1] for e in ensembles)
+    layout, off = [], 0
+    for e in ensembles:
+        layout.extend((name, s + off, t + off) for name, s, t in e.layout)
+        off += e.num_configs
+
     return Ensemble(
         ws=np.concatenate([grow(e.ws, (1, 2)) for e in ensembles]),
         x0=np.concatenate([grow(e.x0, (1,)) for e in ensembles]),
-        coefs=np.concatenate([e.coefs for e in ensembles]),
+        coefs=np.concatenate(
+            [np.pad(e.coefs, ((0, 0), (0, c_max - e.coefs.shape[1])))
+             for e in ensembles]),
         node_counts=np.concatenate([e.node_counts for e in ensembles]),
         configs=tuple(c for e in ensembles for c in e.configs),
+        algos=tuple(layout),
     )
 
 
@@ -221,53 +247,84 @@ def build_ensemble(spec: SweepSpec) -> Ensemble:
     n_max = max(g.n for _, _, g, *_ in graphs)
     f = spec.num_trials
 
-    ws, x0s, coefs, counts, metas = [], [], [], [], []
-    for family, gi, g, w, vals, lam2, rho_mem in graphs:
-        n = g.n
-        x0 = _init_block(g, f, spec.init, rng)
-        for design in spec.designs:
-            maker = THETA_DESIGNS[design]
-            if maker is None:
-                cells = [(None, 0.0)]
-            else:
-                th = maker()
-                alphas = spec.alphas if spec.alphas is not None else (
-                    accel.alpha_star(lam2, th),
-                )
-                cells = [(th, float(al)) for al in alphas]
-            for th, al in cells:
-                if th is None:
-                    a_w, b_x, c_p = 1.0, 0.0, 0.0
-                    rho_acc = rho_mem
-                else:
-                    a_w = 1.0 - al + al * th.t3
-                    b_x = al * th.t2
-                    c_p = al * th.t1
-                    # exact rho(Phi3[alpha] - J) from the spectrum of W
-                    # (equals sqrt(-alpha theta1) only at alpha = alpha*)
-                    mus = accel.phi3_eigenvalues(np.sort(vals)[:-1], al, th)
-                    rho_acc = float(max(np.abs(mus).max(), abs(al * th.t1)))
-                wp = np.zeros((n_max, n_max), dtype=np.float32)
-                wp[:n, :n] = w
-                xp0 = np.zeros((n_max, f), dtype=np.float32)
-                xp0[:n] = x0
-                for dyn in spec.dynamics:
-                    ws.append(wp)
-                    x0s.append(xp0)
-                    coefs.append((a_w, b_x, c_p))
-                    counts.append(n)
-                    metas.append(ConfigMeta(
-                        topology=family, n=n, graph_index=gi, design=design,
-                        theta=th, alpha=al, lam2=lam2, rho_memoryless=rho_mem,
-                        psi=1.0 - rho_mem, rho_accel=rho_acc, dynamics=dyn,
-                    ))
+    # one init block per graph, drawn in graph order and shared across the
+    # design/algorithm/dynamics cells of that graph (common random numbers)
+    inits = [_init_block(g, f, spec.init, rng) for _, _, g, *_ in graphs]
 
+    ws, x0s, coefs, counts, metas, layout = [], [], [], [], [], []
+
+    def add_cell(base, x0, n, params, meta):
+        wp = np.zeros((n_max, n_max), dtype=np.float32)
+        wp[:n, :n] = base
+        xp0 = np.zeros((n_max, f), dtype=np.float32)
+        xp0[:n] = x0
+        ws.append(wp)
+        x0s.append(xp0)
+        coefs.append(np.asarray(params, dtype=np.float32))
+        counts.append(n)
+        metas.append(meta)
+
+    # algorithm axis OUTERMOST: each algorithm's cells form one contiguous
+    # G partition (Ensemble.layout), which is what lets the engine scan a
+    # mixed-algorithm grid with per-partition carries in one jitted program.
+    for algo_spec in spec.algorithms:
+        algo = algorithms.get_algorithm(algo_spec)
+        start = len(metas)
+        for (family, gi, g, w, vals, lam2, rho_mem), x0 in zip(graphs, inits):
+            n = g.n
+            if algo.uses_theta:
+                base = algo.base_matrix(w)
+                for design in spec.designs:
+                    maker = THETA_DESIGNS[design]
+                    if maker is None:
+                        cells = [(None, 0.0)]
+                    else:
+                        th = maker()
+                        alphas = spec.alphas if spec.alphas is not None else (
+                            accel.alpha_star(lam2, th),
+                        )
+                        cells = [(th, float(al)) for al in alphas]
+                    for th, al in cells:
+                        params = algo.design_params(th, al)
+                        if th is None:
+                            rho_acc = rho_mem
+                        else:
+                            # exact rho(Phi3[alpha] - J) from the spectrum of W
+                            # (equals sqrt(-alpha theta1) only at alpha = alpha*)
+                            mus = accel.phi3_eigenvalues(np.sort(vals)[:-1], al, th)
+                            rho_acc = float(max(np.abs(mus).max(), abs(al * th.t1)))
+                        for dyn in spec.dynamics:
+                            add_cell(base, x0, n, params, ConfigMeta(
+                                topology=family, n=n, graph_index=gi,
+                                design=design, theta=th, alpha=al, lam2=lam2,
+                                rho_memoryless=rho_mem, psi=1.0 - rho_mem,
+                                rho_accel=rho_acc, dynamics=dyn,
+                                algorithm=algo.spec,
+                            ))
+            else:
+                # theta-free algorithms: one cell per (graph, dynamics) —
+                # the design axis does not apply (mirrors how the memoryless
+                # design ignores the alpha grid)
+                base = algo.base_matrix(w)
+                params = algo.cell_params(w, vals)
+                rho_tick = algo.tick_rho(lam2, rho_mem, w, vals)
+                for dyn in spec.dynamics:
+                    add_cell(base, x0, n, params, ConfigMeta(
+                        topology=family, n=n, graph_index=gi, design=algo.spec,
+                        theta=None, alpha=0.0, lam2=lam2,
+                        rho_memoryless=rho_mem, psi=1.0 - rho_mem,
+                        rho_accel=rho_tick, dynamics=dyn, algorithm=algo.spec,
+                    ))
+        layout.append((algo.spec, start, len(metas)))
+
+    c_max = max(1, max(len(c) for c in coefs))
     return Ensemble(
         ws=np.stack(ws),
         x0=np.stack(x0s),
-        coefs=np.asarray(coefs, dtype=np.float32),
+        coefs=np.stack([np.pad(c, (0, c_max - len(c))) for c in coefs]),
         node_counts=np.asarray(counts, dtype=np.int64),
         configs=tuple(metas),
+        algos=tuple(layout),
     )
 
 
@@ -291,28 +348,33 @@ class RoundMasks:
 
 
 def build_round_masks(ens: Ensemble, num_iters: int, seed: int = 0) -> RoundMasks | None:
-    """Sample every cell's topology schedule for ``num_iters`` rounds.
+    """Sample every cell's per-round edge schedule for ``num_iters`` rounds.
 
-    Returns None when every cell is static (the engine then takes the static
-    scan, which is cheaper). Sampling is keyed by the *graph*, not the cell
-    (``dynamics.graph_rng``): cells sharing a (family, size, draw) triple —
-    i.e. the same graph crossed with different designs or failure
-    probabilities — consume identical uniforms, so their failure sets are
-    common-random-number coupled and nested across p.
+    Returns None when every cell is static AND no cell's algorithm needs a
+    schedule (the engine then takes the cheaper mask-free scan). Sampling is
+    keyed by the *graph*, not the cell (``dynamics.graph_rng``): cells
+    sharing a (family, size, draw) triple — the same graph crossed with
+    different designs, algorithms, or failure probabilities — consume
+    identical uniforms, so failure sets are common-random-number coupled and
+    nested across p. Schedule-bearing algorithms (``async_pairwise``) then
+    post-process the dynamics draw through ``schedule_bits`` (the woken-edge
+    one-hot ANDed with the failure bits) using the same stream.
     """
     specs = [dynamics.parse_dynamics(c.dynamics) for c in ens.configs]
-    if all(s.is_static for s in specs):
+    algos = [algorithms.get_algorithm(c.algorithm) for c in ens.configs]
+    if all(s.is_static for s in specs) and not any(a.needs_schedule for a in algos):
         return None
     g = ens.num_configs
     idx_list = [dynamics.edge_index(ens.ws[i]) for i in range(g)]
     e_max = max(1, max(len(ix) for ix in idx_list))
     bits = np.ones((num_iters, g, e_max), dtype=np.uint8)
     idx = np.zeros((g, e_max, 2), dtype=np.int32)
-    for i, (c, s, ix) in enumerate(zip(ens.configs, specs, idx_list)):
+    for i, (c, s, a, ix) in enumerate(zip(ens.configs, specs, algos, idx_list)):
         e = len(ix)
         idx[i, :e] = ix
-        if s.is_static:
+        if s.is_static and not a.needs_schedule:
             continue                       # bits already all-ones
         rng = dynamics.graph_rng(seed, (c.topology, c.n, c.graph_index))
-        bits[:, i, :e] = dynamics.sample_edge_bits(s, num_iters, ix, c.n, rng)
+        cell_bits = dynamics.sample_edge_bits(s, num_iters, ix, c.n, rng)
+        bits[:, i, :e] = a.schedule_bits(cell_bits, ix, c.n, rng)
     return RoundMasks(bits=bits, idx=idx)

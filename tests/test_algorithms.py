@@ -1,0 +1,256 @@
+"""Consensus-algorithm registry: cross-backend conformance (ISSUE acceptance),
+the mixed-algorithm one-compilation contract, the async pairwise machinery,
+and the ~20-line custom-registration seam the ROADMAP quickstart documents.
+
+The conformance suite iterates the registry and asserts, for EVERY registered
+algorithm, mean conservation and agreement with its float64/float32 host
+reference on chain/grid2d/rgg, static and bernoulli:0.1, jax and pallas."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import algorithms as alg
+from repro.core import dynamics as dyn
+from repro.core import baselines, topology, weights
+from repro.sweep import (
+    SweepSpec,
+    build_ensemble,
+    build_round_masks,
+    run_ensemble,
+    run_sweep,
+    trace_count,
+)
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics.
+# ---------------------------------------------------------------------------
+
+def test_registry_resolves_seed_algorithms():
+    names = alg.registered_algorithms()
+    for seed in ("memoryless", "accel", "poly_filter", "async_pairwise"):
+        assert seed in names
+    assert alg.get_algorithm("accel").num_taps == 2
+    assert alg.get_algorithm("memoryless").num_taps == 1
+    assert alg.get_algorithm("async_pairwise").needs_schedule
+    # parameterized specs parse like the dynamics axis
+    p5 = alg.get_algorithm("poly_filter:5")
+    assert p5.degree == 5 and p5.num_coefs == 6
+    # instances are cached per spec string (trace-time identity stability)
+    assert alg.get_algorithm("poly_filter:5") is p5
+
+
+def test_registry_rejects_unknown_algorithm():
+    with pytest.raises(ValueError, match="unknown consensus algorithm"):
+        alg.get_algorithm("chebyshev")
+    with pytest.raises(ValueError, match="algorithm"):
+        SweepSpec(algorithms=("accel", "chebyshev"))
+
+
+def test_pairwise_base_matrix_masks_to_boyd_matrix():
+    """One-hot masking of B under the mass-preserving rule == Boyd's W(i,j)."""
+    w = weights.metropolis_hastings(topology.random_geometric(12, np.random.default_rng(0)))
+    b = alg.pairwise_base_matrix(w)
+    np.testing.assert_allclose(b.sum(axis=1), 1.0, atol=1e-12)
+    idx = dyn.edge_index(w)
+    for e in (0, len(idx) // 2, len(idx) - 1):
+        bits = np.zeros(len(idx), np.uint8)
+        bits[e] = 1
+        weff = dyn.masked_w(b, bits, idx)
+        i, j = idx[e]
+        expect = np.eye(12)
+        expect[i, i] = expect[j, j] = expect[i, j] = expect[j, i] = 0.5
+        np.testing.assert_allclose(weff, expect, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend conformance (acceptance criterion).
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def conformance_grid():
+    """Every registered algorithm x chain/grid2d/rgg x static/bernoulli:0.1."""
+    spec = SweepSpec(
+        topologies=("chain", "grid2d", "rgg"), sizes=(12,),
+        designs=("asymptotic",), algorithms=tuple(alg.registered_algorithms()),
+        num_trials=2, seed=5, dynamics=("static", "bernoulli:0.1"),
+    )
+    ens = build_ensemble(spec)
+    masks = build_round_masks(ens, 45, seed=spec.seed)
+    assert masks is not None          # async_pairwise forces a schedule
+    return ens, masks
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+def test_every_registered_algorithm_matches_host_reference(conformance_grid, backend):
+    """Engine == per-tick host reference (1e-6 in f32) for the whole registry."""
+    ens, masks = conformance_grid
+    res = run_ensemble(ens, num_iters=45, backend=backend, round_masks=masks)
+    seen = set()
+    for i, c in enumerate(ens.configs):
+        a = alg.get_algorithm(c.algorithm)
+        seen.add(a.name)
+        n = c.n
+        e = len(dyn.edge_index(ens.ws[i]))
+        # f32 rounding scales with the round's coefficient mass: ~1 for the
+        # one-matvec family, the l1 coefficient norm for the Horner ticks
+        tol = 1e-6 * max(1.0, float(np.abs(ens.coefs[i]).sum()))
+        x32, mse32 = a.reference_run(
+            ens.ws[i][:n, :n], ens.x0[i][:n], ens.coefs[i], 45,
+            bits=masks.bits[:, i, :e], idx=masks.idx[i, :e], dtype=np.float32,
+        )
+        err_msg = f"{c.algorithm}/{c.topology}/{c.dynamics} vs f32 reference"
+        np.testing.assert_allclose(res.x_final[i][:n], x32, atol=tol, rtol=0,
+                                   err_msg=err_msg)
+        np.testing.assert_allclose(res.mse[i], mse32, atol=tol, rtol=0,
+                                   err_msg=err_msg)
+        # float64 semantics agree up to f32 rounding accumulation
+        x64, _ = a.reference_run(
+            ens.ws[i][:n, :n], ens.x0[i][:n], ens.coefs[i], 45,
+            bits=masks.bits[:, i, :e], idx=masks.idx[i, :e], dtype=np.float64,
+        )
+        np.testing.assert_allclose(res.x_final[i][:n], x64, atol=1e-5, rtol=1e-4)
+        # mean conservation: every algorithm's effective round matrices are
+        # doubly stochastic, whatever the schedule did
+        np.testing.assert_allclose(
+            res.x_final[i][:n].mean(axis=0), ens.x0[i][:n].mean(axis=0),
+            atol=1e-5, err_msg=f"{c.algorithm} lost the network average")
+        # padded nodes never acquire signal
+        assert np.all(res.x_final[i][n:] == 0.0)
+    assert seen == {alg.get_algorithm(nm).name for nm in alg.registered_algorithms()}
+
+
+def test_mixed_algorithm_grid_compiles_once_per_backend():
+    """ISSUE acceptance: the mixed (memoryless, accel, async_pairwise) grid
+    executes as ONE jitted program on each backend."""
+    spec = SweepSpec(
+        topologies=("chain",), sizes=(10,), designs=("asymptotic",),
+        algorithms=("memoryless", "accel", "async_pairwise"),
+        num_trials=2, seed=1,
+    )
+    for backend in ("jax", "pallas"):
+        tc0 = trace_count()
+        res = run_sweep(spec, num_iters=40, backend=backend)
+        assert trace_count() - tc0 == 1, backend
+        assert res.ensemble.layout == (
+            ("memoryless", 0, 1), ("accel", 1, 2), ("async_pairwise", 2, 3))
+        assert {c.algorithm for c in res.configs} == {
+            "memoryless", "accel", "async_pairwise"}
+
+
+def test_pallas_mixed_grid_matches_jax():
+    spec = SweepSpec(
+        topologies=("chain", "rgg"), sizes=(12,), designs=("asymptotic",),
+        algorithms=("accel", "poly_filter:3", "async_pairwise"),
+        num_trials=2, seed=3,
+    )
+    r_jax = run_sweep(spec, num_iters=40, backend="jax")
+    r_pal = run_sweep(spec, num_iters=40, backend="pallas")
+    np.testing.assert_allclose(r_pal.mse, r_jax.mse, rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(r_pal.x_final, r_jax.x_final, rtol=1e-4, atol=1e-6)
+
+
+def test_async_needs_round_masks():
+    """run_batch refuses an async partition without a schedule, loudly."""
+    spec = SweepSpec(topologies=("chain",), sizes=(8,),
+                     algorithms=("async_pairwise",), num_trials=1, seed=0)
+    ens = build_ensemble(spec)
+    from repro.sweep import run_batch
+    with pytest.raises(ValueError, match="round_masks"):
+        run_batch(ens.ws, ens.x0, ens.coefs, ens.node_counts,
+                  num_iters=5, backend="jax", algos=ens.layout)
+
+
+def test_async_schedule_one_edge_per_tick_and_dynamics_coupling():
+    a = alg.get_algorithm("async_pairwise")
+    g = topology.ring(10)
+    w = weights.metropolis_hastings(g)
+    idx = dyn.edge_index(w)
+    rng = dyn.graph_rng(0, ("ring", 10, 0))
+    dyn_bits = dyn.sample_edge_bits("bernoulli:0.3", 200, idx, 10, rng)
+    bits = a.schedule_bits(dyn_bits, idx, 10, rng)
+    # at most one woken edge per tick; zero exactly when the woken edge is down
+    assert bits.sum(axis=1).max() == 1
+    assert (bits <= dyn_bits).all()
+    assert (bits.sum(axis=1) == 0).any()      # some wakes hit a failed link
+    assert bits.sum() > 100                   # but most deliver at p=0.3
+
+
+def test_poly_filter_engine_matches_run_poly_filter_ticks():
+    """The registered poly_filter reproduces baselines.run_poly_filter's
+    super-iteration states on a static graph (tick-fairness accounting)."""
+    spec = SweepSpec(topologies=("chain",), sizes=(10,),
+                     algorithms=("poly_filter:3",), num_trials=1, seed=0,
+                     init="paper")
+    ens = build_ensemble(spec)
+    w = np.asarray(ens.ws[0], np.float64)          # the grid's (possibly lazy) W
+    filt = baselines.design_poly_filter(w, 3)
+    np.testing.assert_allclose(ens.coefs[0][:4], filt.coeffs, atol=1e-6)
+    x_ref = np.asarray(ens.x0[0], np.float64)
+    res = run_ensemble(ens, num_iters=12, backend="jax")
+    for ticks in (3, 6, 9, 12):
+        # display state at tick k*m == the m-th super-iteration output
+        r = run_ensemble(ens, num_iters=ticks, backend="jax")
+        x_ref_t = baselines.run_poly_filter(w, filt, x_ref, ticks)
+        np.testing.assert_allclose(r.x_final[0], x_ref_t, atol=1e-5)
+    # inside a super-iteration the display state holds (mse flat ticks 0..2)
+    np.testing.assert_allclose(res.mse[0][1], res.mse[0][2], atol=1e-7)
+    np.testing.assert_allclose(res.mse[0][0], res.mse[0][1], atol=1e-7)
+
+
+def test_custom_algorithm_registration_quickstart():
+    """The ROADMAP's ~20-line seam: register a new rule, sweep it, verify it."""
+
+    class LazyMix(alg.ConsensusAlgorithm):
+        """x(t+1) = (x + W_eff x) / 2 — a lazy chain, in one registration."""
+
+        name = spec = "lazy_mix"
+        num_taps = 1
+
+        def round_body(self, prim, params, carry, t):
+            (x,) = carry
+            coef = jnp.broadcast_to(
+                jnp.asarray([0.5, 0.5, 0.0], jnp.float32), (x.shape[0], 3))
+            return (prim(x, x, coef),)
+
+        def ref_coef(self, params):
+            return (0.5, 0.5, 0.0)
+
+    alg.register_algorithm("lazy_mix", LazyMix)
+    try:
+        spec = SweepSpec(topologies=("chain",), sizes=(9,),
+                         algorithms=("lazy_mix", "memoryless"), num_trials=2,
+                         seed=2, dynamics=("static", "bernoulli:0.2"))
+        res = run_sweep(spec, num_iters=30, backend="jax")
+        masks = build_round_masks(res.ensemble, 30, seed=spec.seed)
+        for i, c in enumerate(res.configs):
+            if c.algorithm != "lazy_mix":
+                continue
+            e = len(dyn.edge_index(res.ensemble.ws[i]))
+            a = alg.get_algorithm("lazy_mix")
+            x32, mse32 = a.reference_run(
+                res.ensemble.ws[i][:9, :9], res.ensemble.x0[i][:9],
+                res.ensemble.coefs[i], 30,
+                bits=masks.bits[:, i, :e], idx=masks.idx[i, :e],
+                dtype=np.float32)
+            np.testing.assert_allclose(res.x_final[i][:9], x32, atol=1e-6)
+            np.testing.assert_allclose(res.mse[i], mse32, atol=1e-6)
+        # lazy mixing is slower than the plain W round on the same inits
+        [i_l] = res.cells(algorithm="lazy_mix", dynamics="static")
+        [i_m] = res.cells(algorithm="memoryless", dynamics="static")
+        assert res.mse[i_l, -1].mean() > res.mse[i_m, -1].mean()
+    finally:
+        alg.register_algorithm("lazy_mix", LazyMix)  # leave a clean entry
+
+
+def test_fig_async_chain_bracketing():
+    """Acceptance: async pairwise tick-counts sit between the synchronous
+    memoryless and two-tap curves on the chain (tick = E exchanges)."""
+    from benchmarks import fig_async
+
+    rows = fig_async.run(topologies=("chain",), size=12, graph_trials=1,
+                         num_trials=2, eps=1e-3, backend="jax", seed=0)
+    [row] = rows
+    assert row["bracketed"], row
+    assert row["T_accel"] < row["T_async_ticks"] < row["T_memoryless"], row

@@ -128,6 +128,55 @@ def test_accel_gossip_reaches_eps_in_fewer_rounds_p4_ring():
 
 
 @pytest.mark.slow
+def test_pairwise_gossip_p4_ring_matches_host_and_conserves_mean():
+    """The registry's async_pairwise dist variant in-mesh: each round's woken
+    pair averages over one two-element ppermute, every state stays equal to
+    the host pairwise-matrix product, the pod mean is conserved exactly, and
+    the algorithm_gossip registry dispatcher routes to the same program."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import make_fabric
+        from repro.dist.gossip import algorithm_gossip, pairwise_gossip
+        mesh = jax.make_mesh((4,), ("pod",))
+        fab = make_fabric(4, "ring")
+        edges = [(i, j) for i in range(4) for j in range(i + 1, 4)
+                 if fab.w[i, j] != 0.0]
+        rng = np.random.default_rng(7)
+        sched = rng.integers(0, len(edges), size=40)
+        x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+
+        def runner(fn, rounds, **kw):
+            def body(b):
+                return fn(b[0], "pod", fab, rounds, schedule=sched[:rounds],
+                          **kw)[None]
+            return jax.jit(shard_map(body, mesh=mesh, in_specs=P("pod"),
+                                     out_specs=P("pod"), check_rep=False))
+
+        y = runner(pairwise_gossip, 40)(x)
+        # host reference: apply the Boyd matrix of each scheduled edge
+        ref = np.asarray(x, np.float64)
+        for e in sched:
+            i, j = edges[int(e)]
+            avg = 0.5 * (ref[i] + ref[j])
+            ref[i] = ref[j] = avg
+        assert float(jnp.abs(y - ref).max()) < 1e-5
+        # pod mean conserved exactly up to fp rounding
+        assert float(jnp.abs(y.mean(0) - x.mean(0)).max()) < 1e-6
+        # and it contracts toward consensus
+        spread0 = float(jnp.abs(x - x.mean(0)).max())
+        spread = float(jnp.abs(y - y.mean(0)).max())
+        assert spread < 0.5 * spread0, (spread, spread0)
+        # registry dispatch routes to the identical program
+        y2 = runner(algorithm_gossip, 40, algorithm="async_pairwise")(x)
+        assert float(jnp.abs(y - y2).max()) == 0.0
+        print("OK pairwise", spread / spread0)
+    """)
+    assert "OK pairwise" in out
+
+
+@pytest.mark.slow
 def test_masked_gossip_degrades_gracefully_p4():
     """Per-round dropped-matching masks: the pod mean is conserved under any
     failure history (mass-preserving re-weighting), an all-ones mask equals

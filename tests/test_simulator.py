@@ -32,6 +32,18 @@ def test_unknown_backend_rejected_before_array_work():
         simulator.simulate(w, object(), 5, backend="torch")
 
 
+def test_alpha_without_theta_is_an_error(setup):
+    """A non-zero alpha with no predictor design must refuse to run, not
+    silently decay to the memoryless baseline (satellite fix)."""
+    w, _, a, x0 = setup
+    for backend in ("numpy", "jax", "pallas"):
+        with pytest.raises(ValueError, match="theta"):
+            simulator.simulate(w, x0, 5, alpha=a, theta=None, backend=backend)
+    # explicit alpha=0 stays a valid memoryless run, with or without theta
+    r = simulator.simulate(w, x0, 5, alpha=0.0, theta=None, backend="numpy")
+    assert r.num_iters == 5
+
+
 def test_accelerated_beats_memoryless(setup):
     w, th, a, x0 = setup
     r_mem = simulator.simulate(w, x0, 300, backend="numpy")
