@@ -31,6 +31,12 @@ def run():
     rng = np.random.default_rng(0)
     rows = []
 
+    # Execution-mode tag: pallas-driven rows time the interpreter on CPU and
+    # the compiled kernel on TPU — numbers from different modes differ by
+    # orders of magnitude and must never be gate-compared (run.py --check
+    # skips rows whose mode changed vs the baseline).
+    pallas_mode = "pallas-interpret" if ops.use_interpret() else "compiled"
+
     # simulator backends at paper scale (N=200, 300 trials, 100 iters)
     g = topology.random_geometric(200, rng)
     w = weights.metropolis_hastings(g)
@@ -43,6 +49,7 @@ def run():
         rows.append({
             "bench": f"simulator_{backend}_N200xF300x100it",
             "us_per_call": (time.perf_counter() - t0) * 1e6,
+            "mode": pallas_mode if backend == "pallas" else "compiled",
             "derived": "paper-scale trial batch",
         })
 
@@ -59,10 +66,10 @@ def run():
             ops.gossip_matvec(wj, xj), xj, xpj, 1.1, 0.2, -0.3
         )
     rows.append({"bench": "gossip_round_fused_N200xF300",
-                 "us_per_call": _time(f_fused),
+                 "us_per_call": _time(f_fused), "mode": pallas_mode,
                  "derived": "one pallas_call per round"})
     rows.append({"bench": "gossip_round_unfused_pair_N200xF300",
-                 "us_per_call": _time(f_pair),
+                 "us_per_call": _time(f_pair), "mode": pallas_mode,
                  "derived": "matvec + FMA, x_w via HBM"})
 
     # batched sweep engine: a full topology x design grid in one program.
@@ -81,6 +88,7 @@ def run():
         rows.append({
             "bench": f"sweep_{backend}_G{res.ensemble.num_configs}x100it",
             "us_per_call": (time.perf_counter() - t0) * 1e6,
+            "mode": pallas_mode if backend == "pallas" else "compiled",
             "derived": "ensemble grid, single jitted scan (warmed)",
         })
 
@@ -94,9 +102,9 @@ def run():
     f_r = jax.jit(lambda x, a, b, c: ref.ssd_scan_ref(
         x, a, jnp.repeat(b, H // G, 2), jnp.repeat(c, H // G, 2)))
     rows.append({"bench": "ssd_chunked_B1T1024", "us_per_call": _time(f_k, x, aa, bb, cc),
-                 "derived": "chunked dual form"})
+                 "mode": pallas_mode, "derived": "chunked dual form"})
     rows.append({"bench": "ssd_naive_scan_B1T1024", "us_per_call": _time(f_r, x, aa, bb, cc),
-                 "derived": "sequential recurrence"})
+                 "mode": "compiled", "derived": "sequential recurrence"})
 
     emit("kernel_perf", rows)
     return rows

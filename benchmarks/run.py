@@ -15,7 +15,11 @@ kernel row's us_per_call against the tracked repo-root baseline
 overwrites it), exiting non-zero on any >1.5x regression. The ratio is
 overridable via REPRO_PERF_GATE_RATIO for machines much slower than the one
 that stamped the baseline; in CI the committed baseline is stashed before
-the smoke benches rewrite the root JSON.
+the smoke benches rewrite the root JSON. Comparisons are like-for-like
+only: every row carries an execution ``mode`` tag ("compiled" or
+"pallas-interpret") and rows whose mode differs from the baseline's are
+skipped, never ratioed — interpret-vs-compiled timings are different
+experiments.
 """
 from __future__ import annotations
 
@@ -30,6 +34,43 @@ import time
 GATE_PREFIXES = ("gossip_round", "sweep_", "ssd_")
 
 
+def _gate_rows(fresh, base_rows, ratio_max):
+    """Pure comparison core of the perf gate (unit-tested in test_perf_gate).
+
+    ``fresh`` is the list of freshly timed row dicts, ``base_rows`` maps
+    bench name -> baseline row dict. Rows are compared like-for-like only:
+    a row whose execution ``mode`` differs from the baseline's (e.g. the
+    baseline was stamped in pallas-interpret on CPU and this run compiled on
+    a TPU, or vice versa) is SKIPPED — cross-mode timings differ by orders
+    of magnitude and would otherwise hard-fail (or silently ratchet) the
+    gate. Rows missing a mode on either side gate as before (pre-mode-tag
+    baselines stay comparable). Returns (report_lines, failures).
+    """
+    lines, failures = [], []
+    for r in fresh:
+        name = r["bench"]
+        if not name.startswith(GATE_PREFIXES):
+            continue
+        b = base_rows.get(name)
+        if b is None:
+            lines.append(f"{name}: NEW (no baseline row, passes)")
+            continue
+        mode_f, mode_b = r.get("mode"), b.get("mode")
+        if mode_f is not None and mode_b is not None and mode_f != mode_b:
+            lines.append(
+                f"{name}: SKIP (mode {mode_b} -> {mode_f}; cross-mode "
+                f"timings are not comparable)")
+            continue
+        ratio = float(r["us_per_call"]) / float(b["us_per_call"])
+        verdict = "FAIL" if ratio > ratio_max else "ok"
+        lines.append(
+            f"{name}: {float(b['us_per_call']):.0f} -> "
+            f"{float(r['us_per_call']):.0f} us ({ratio:.2f}x) {verdict}")
+        if ratio > ratio_max:
+            failures.append((name, ratio))
+    return lines, failures
+
+
 def _check(baseline_path: str) -> int:
     try:
         with open(baseline_path) as f:
@@ -40,7 +81,7 @@ def _check(baseline_path: str) -> int:
               f"`python -m benchmarks.run --quick` and commit the root "
               f"BENCH_kernel_perf.json to start the trajectory")
         return 1
-    base_rows = {r["bench"]: float(r["us_per_call"]) for r in base["rows"]}
+    base_rows = {r["bench"]: r for r in base["rows"]}
 
     from . import kernel_perf
 
@@ -55,21 +96,10 @@ def _check(baseline_path: str) -> int:
         with open(baseline_path, "w") as f:
             f.write(base_text)
     ratio_max = float(os.environ.get("REPRO_PERF_GATE_RATIO", "1.5"))
-    failures = []
     print(f"### perf gate (>{ratio_max}x vs {baseline_path})")
-    for r in fresh:
-        name = r["bench"]
-        if not name.startswith(GATE_PREFIXES):
-            continue
-        if name not in base_rows:
-            print(f"{name}: NEW (no baseline row, passes)")
-            continue
-        ratio = float(r["us_per_call"]) / base_rows[name]
-        verdict = "FAIL" if ratio > ratio_max else "ok"
-        print(f"{name}: {base_rows[name]:.0f} -> {r['us_per_call']:.0f} us "
-              f"({ratio:.2f}x) {verdict}")
-        if ratio > ratio_max:
-            failures.append((name, ratio))
+    lines, failures = _gate_rows(fresh, base_rows, ratio_max)
+    for line in lines:
+        print(line)
     if failures:
         print(f"perf gate FAILED: {len(failures)} kernel row(s) regressed "
               f">{ratio_max}x: " + ", ".join(f"{n} {r:.2f}x" for n, r in failures))

@@ -1,0 +1,98 @@
+"""Dense vs sparse engine scaling: us/round and peak memory across N.
+
+    PYTHONPATH=src python -m benchmarks.sparse_scaling [--quick]
+
+For each network size the SAME sweep (one BA power-law cell, accel design,
+static topology) runs through the dense (G, N, N) engine and the sparse
+edge-list engine, timing steady-state us/round (compile excluded via an
+untimed warm-up call at every size/layout) and recording the weight-storage
+footprint each layout carries into the scan: O(N^2) f32 for the dense
+stack vs O(E) directed arrays (+ O(N) diagonal) for sparse. The crossover
+where sparse wins on wall clock lands at a few hundred nodes on CPU; above
+``SPARSE_EXACT_SPECTRUM_CUTOFF`` the dense column stops entirely (an
+N=1e5 dense cell would need 40 GB for W alone) while the sparse column
+keeps scaling — the --quick tier caps at N=2e4 to stay CI-sized, the full
+tier pushes to N=2e5.
+
+Emits BENCH_sparse_scaling.json / sparse_scaling.csv via the common
+scaffolding; CI uploads the JSON as a workflow artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.sweep.engine import run_ensemble
+from repro.sweep.grid import (
+    SPARSE_EXACT_SPECTRUM_CUTOFF,
+    SweepSpec,
+    build_ensemble,
+)
+
+from .common import emit
+
+
+def _weight_bytes(ens) -> int:
+    """Bytes of weight-layout state the scan carries (the O(N^2) vs O(E) story)."""
+    if ens.is_sparse:
+        # directed arrays the jax backend builds: src/dst/eid int32 + wdir
+        # f32 (2E each) + the (N,) f32 diagonal
+        e2 = 2 * ens.edges.shape[1]
+        return ens.edges.shape[0] * (4 * 4 * e2 + 4 * ens.n_max)
+    return ens.ws.nbytes
+
+
+def _time_layout(n: int, layout: str, *, trials: int, iters: int,
+                 reps: int) -> tuple[float, int]:
+    """(us_per_round, weight_bytes) for one size/layout, compile excluded."""
+    spec = SweepSpec(
+        topologies=("ba:3",), sizes=(n,), designs=("asymptotic",),
+        alphas=(1.0,), num_trials=trials, seed=0, algorithms=("accel",),
+        layout=layout,
+    )
+    ens = build_ensemble(spec)
+    run_ensemble(ens, num_iters=iters, backend="jax")   # warm-up/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_ensemble(ens, num_iters=iters, backend="jax")
+    us_round = (time.perf_counter() - t0) / (reps * iters) * 1e6
+    return us_round, _weight_bytes(ens)
+
+
+def run(sizes=(64, 256, 1024, 4096, 20_000), *, trials: int = 4,
+        iters: int = 30, reps: int = 3) -> list[dict]:
+    rows = []
+    for n in sizes:
+        row = {"bench": f"sparse_scaling_N{n}", "n": n}
+        if n <= SPARSE_EXACT_SPECTRUM_CUTOFF:
+            us_d, mem_d = _time_layout(
+                n, "dense", trials=trials, iters=iters, reps=reps)
+            row["dense_us_per_round"] = us_d
+            row["dense_weight_mb"] = mem_d / 1e6
+        else:
+            # dense would densify an (N, N) W: skipped, not just slow
+            row["dense_us_per_round"] = float("nan")
+            row["dense_weight_mb"] = float("nan")
+        us_s, mem_s = _time_layout(
+            n, "sparse", trials=trials, iters=iters, reps=reps)
+        row["sparse_us_per_round"] = us_s
+        row["sparse_weight_mb"] = mem_s / 1e6
+        rows.append(row)
+    emit("sparse_scaling", rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI tier: smaller sizes/trials, caps at N=2e4")
+    args = ap.parse_args()
+    if args.quick:
+        run(sizes=(64, 256, 1024, 4096, 20_000), trials=2, iters=20, reps=2)
+    else:
+        run(sizes=(64, 256, 1024, 4096, 20_000, 100_000, 200_000),
+            trials=4, iters=30, reps=3)
+
+
+if __name__ == "__main__":
+    main()

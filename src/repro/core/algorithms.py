@@ -52,12 +52,18 @@ single pairwise exchange for ``async_pairwise``. Cross-algorithm comparisons
 normalize by communication: one W-multiply activates every edge once, so
 E pairwise exchanges are charged as one synchronous tick
 (``benchmarks/fig_async.py`` reports both raw exchanges and ticks).
+
+The full authoring guide — carry layout, the layout-polymorphic
+``prim(x, xp, coef)`` contract (dense einsum, fused Pallas kernel, AND the
+sparse segment-sum path all satisfy it), host-reference requirements, and
+the conformance suite a registration inherits — is in
+``docs/REGISTERING_ALGORITHMS.md``.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from . import baselines, dynamics
+from . import baselines, dynamics, weights
 
 __all__ = [
     "ConsensusAlgorithm",
@@ -95,8 +101,26 @@ class ConsensusAlgorithm:
         """The (N, N) matrix stored in the ensemble's ws row for this cell."""
         return w
 
+    def base_edge_weights(
+        self, edges: np.ndarray, edge_w: np.ndarray, diag_w: np.ndarray, n: int
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Edge-space counterpart of ``base_matrix`` for the sparse layout.
+
+        ``edges`` is the cell's canonical (E, 2) edge list, ``edge_w`` /
+        ``diag_w`` its Metropolis-Hastings weights; return the pair the
+        ensemble actually stores. Only consulted for sparse cells too large
+        to densify — the small-N sparse path extracts edge weights from
+        ``base_matrix`` so both layouts stay bit-identical.
+        """
+        return edge_w, diag_w
+
     def cell_params(self, w: np.ndarray, eigvals: np.ndarray) -> np.ndarray:
-        """(num_coefs,) static per-cell parameters (non-theta algorithms)."""
+        """(num_coefs,) static per-cell parameters (non-theta algorithms).
+
+        In the sparse layout ``w`` is None for cells too large to densify and
+        ``eigvals`` is the surrogate spectrum (power-iteration extremes +
+        linspace fill) — implementations should prefer ``eigvals``.
+        """
         return np.zeros(0)
 
     def design_params(self, theta, alpha: float) -> np.ndarray:
@@ -110,8 +134,16 @@ class ConsensusAlgorithm:
             f"{self.spec} declares uses_theta but no design_params mapping")
 
     def tick_rho(self, lam2: float, rho_mem: float, w: np.ndarray,
-                 eigvals: np.ndarray | None = None) -> float:
-        """Per-tick contraction estimate for iteration caps (ConfigMeta.rho_accel)."""
+                 eigvals: np.ndarray | None = None, *,
+                 edges: np.ndarray | None = None,
+                 num_nodes: int | None = None) -> float:
+        """Per-tick contraction estimate for iteration caps (ConfigMeta.rho_accel).
+
+        Sparse cells too large to densify call this with ``w=None`` and the
+        cell's edge list in the keyword args; overrides that need W itself
+        should handle that case (the grid falls back to the 4-argument call
+        for overrides without the keywords).
+        """
         return rho_mem
 
     def schedule_bits(self, dyn_bits: np.ndarray, idx: np.ndarray, n: int,
@@ -241,7 +273,8 @@ class PolyFilterAlgorithm(ConsensusAlgorithm):
             eigvals, self.degree, ridge=self.ridge)
         return np.asarray(filt.coeffs, np.float64)
 
-    def tick_rho(self, lam2, rho_mem, w, eigvals=None):
+    def tick_rho(self, lam2, rho_mem, w, eigvals=None, *, edges=None,
+                 num_nodes=None):
         filt = (baselines.design_poly_filter_from_spectrum(
                     eigvals, self.degree, ridge=self.ridge)
                 if eigvals is not None else
@@ -324,8 +357,24 @@ class AsyncPairwise(ConsensusAlgorithm):
     def base_matrix(self, w):
         return pairwise_base_matrix(w)
 
-    def tick_rho(self, lam2, rho_mem, w, eigvals=None):
+    def base_edge_weights(self, edges, edge_w, diag_w, n):
+        """0.5 on every edge, diag 1 - deg/2 — pairwise_base_matrix in edge space."""
+        deg = np.bincount(np.asarray(edges).ravel(), minlength=n)
+        return np.full(len(edges), 0.5), 1.0 - 0.5 * deg.astype(np.float64)
+
+    def tick_rho(self, lam2, rho_mem, w, eigvals=None, *, edges=None,
+                 num_nodes=None):
         """Contraction of the expected per-exchange operator I - L/(2E)."""
+        if w is None:
+            # sparse large-N cell: power-iterate I - L/(2E) in edge space
+            if edges is None or num_nodes is None or len(edges) == 0:
+                return rho_mem
+            e = float(len(edges))
+            deg = np.bincount(np.asarray(edges).ravel(), minlength=num_nodes)
+            ew = np.full(len(edges), 1.0 / (2.0 * e))
+            dw = 1.0 - deg.astype(np.float64) / (2.0 * e)
+            l2, ln = weights.lambda_extremes_sparse(np.asarray(edges), ew, dw)
+            return float(max(abs(ln), abs(l2)))
         support = (np.abs(np.asarray(w)) > 0).astype(np.float64)
         np.fill_diagonal(support, 0.0)
         e = support.sum() / 2.0

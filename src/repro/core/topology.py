@@ -5,9 +5,19 @@ connectivity radius sqrt(2 log N / N) (Gupta-Kumar scaling, connected w.h.p.).
 We additionally provide ring / 2-D grid / 2-D torus (the topologies used for the
 pod-level consensus fabric in ``repro.dist``) plus a few classics used in tests.
 
-All functions return a dense symmetric 0/1 adjacency matrix (numpy, float64) with
-zero diagonal. Dense is the right representation here: the paper's experiments are
-N <= a few thousand, and spectral analysis (eigenvalues of W) is dense anyway.
+The classic generators return a dense symmetric 0/1 adjacency matrix (numpy,
+float64) with zero diagonal — the right representation for the paper's own
+experiments (N <= a few thousand, dense spectral analysis anyway).
+
+The *sparse* family (:class:`SparseGraph` + ``sparse_*`` / ``barabasi_albert``
+/ ``random_geometric_sparse``) stores only the canonical undirected edge list
+(i < j, row-major sorted — the exact ordering ``repro.core.dynamics.edge_index``
+produces from a dense matrix, which is what keeps RoundMasks schedules and
+CRN coupling identical across the dense and sparse engine layouts). It is the
+representation the million-node sweep path (``SweepSpec(layout="sparse")``)
+consumes: O(E) memory instead of O(N^2), generators that never materialize a
+distance or adjacency matrix, and union-find connectivity instead of dense
+BFS. See docs/ARCHITECTURE.md for how the two layouts meet in the engine.
 """
 from __future__ import annotations
 
@@ -16,6 +26,7 @@ import numpy as np
 
 __all__ = [
     "Graph",
+    "SparseGraph",
     "chain",
     "ring",
     "grid2d",
@@ -27,6 +38,13 @@ __all__ = [
     "erdos_renyi",
     "is_connected",
     "diameter",
+    "sparse_chain",
+    "sparse_ring",
+    "sparse_grid2d",
+    "sparse_torus2d",
+    "barabasi_albert",
+    "random_geometric_sparse",
+    "edges_are_connected",
 ]
 
 
@@ -191,6 +209,265 @@ def random_geometric(
             return g
     raise RuntimeError(f"could not draw a connected RGG(n={n}, r={r:.4f}) "
                        f"in {max_tries} tries")
+
+
+# ---------------------------------------------------------------------------
+# Sparse (edge-list) graphs: the million-node representation.
+# ---------------------------------------------------------------------------
+
+
+def _canonical_edges(edges: np.ndarray) -> np.ndarray:
+    """Normalize an (E, 2) edge array to the canonical undirected ordering.
+
+    i < j per row, rows sorted lexicographically by (i, j), duplicates and
+    self-loops dropped. This is exactly the ordering
+    ``dynamics.edge_index(dense_w)`` produces (``np.nonzero`` on the upper
+    triangle is row-major), so schedules sampled against either
+    representation of the same graph consume identical RNG draws.
+    """
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    lo = np.minimum(e[:, 0], e[:, 1])
+    hi = np.maximum(e[:, 0], e[:, 1])
+    keep = lo != hi
+    lo, hi = lo[keep], hi[keep]
+    order = np.lexsort((hi, lo))
+    lo, hi = lo[order], hi[order]
+    if len(lo):
+        dup = np.concatenate([[False], (lo[1:] == lo[:-1]) & (hi[1:] == hi[:-1])])
+        lo, hi = lo[~dup], hi[~dup]
+    return np.stack([lo, hi], axis=1).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseGraph:
+    """A symmetric graph stored as its canonical undirected edge list.
+
+    Attributes:
+      n: number of nodes.
+      edges: (E, 2) int32, i < j per row, lexicographically sorted
+        (``_canonical_edges`` invariant).
+      name: topology family name.
+      coords: optional (N, d) node coordinates (geometric families).
+    """
+
+    n: int
+    edges: np.ndarray
+    name: str
+    coords: np.ndarray | None = None
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edges)
+
+    @property
+    def degrees(self) -> np.ndarray:
+        d = np.bincount(self.edges[:, 0], minlength=self.n)
+        d += np.bincount(self.edges[:, 1], minlength=self.n)
+        return d
+
+    @classmethod
+    def from_graph(cls, g: Graph) -> "SparseGraph":
+        return cls(n=g.n, edges=_canonical_edges(g.edge_list()), name=g.name,
+                   coords=g.coords)
+
+    def to_dense(self) -> Graph:
+        """Materialize the (N, N) adjacency — small-N bridging only."""
+        a = np.zeros((self.n, self.n))
+        a[self.edges[:, 0], self.edges[:, 1]] = 1.0
+        return _finalize(a, self.name, self.coords)
+
+
+def edges_are_connected(n: int, edges: np.ndarray) -> bool:
+    """Union-find connectivity over an edge list — O(E alpha(N)), no matrix."""
+    if n <= 1:
+        return True
+    parent = np.arange(n, dtype=np.int64)
+
+    def find(i: int) -> int:
+        root = i
+        while parent[root] != root:
+            root = parent[root]
+        while parent[i] != root:      # path compression
+            parent[i], i = root, parent[i]
+        return root
+
+    components = n
+    for i, j in np.asarray(edges, dtype=np.int64):
+        ri, rj = find(i), find(j)
+        if ri != rj:
+            parent[ri] = rj
+            components -= 1
+            if components == 1:
+                return True
+    return components == 1
+
+
+def sparse_chain(n: int) -> SparseGraph:
+    """Path graph as an edge list — O(N) at any size."""
+    if n < 2:
+        raise ValueError("chain needs n >= 2")
+    idx = np.arange(n - 1, dtype=np.int32)
+    coords = np.stack([np.arange(n) / max(n - 1, 1), np.zeros(n)], axis=1)
+    return SparseGraph(n=n, edges=np.stack([idx, idx + 1], axis=1),
+                       name="chain", coords=coords)
+
+
+def sparse_ring(n: int) -> SparseGraph:
+    if n < 3:
+        raise ValueError("ring needs n >= 3")
+    idx = np.arange(n, dtype=np.int64)
+    edges = _canonical_edges(np.stack([idx, (idx + 1) % n], axis=1))
+    ang = 2 * np.pi * np.arange(n) / n
+    coords = 0.5 + 0.5 * np.stack([np.cos(ang), np.sin(ang)], axis=1)
+    return SparseGraph(n=n, edges=edges, name="ring", coords=coords)
+
+
+def _grid_edges(rows: int, cols: int, wrap: bool) -> np.ndarray:
+    i = np.arange(rows * cols, dtype=np.int64)
+    r, c = np.divmod(i, cols)
+    pairs = []
+    if wrap:
+        pairs.append(np.stack([i, r * cols + (c + 1) % cols], axis=1))
+        pairs.append(np.stack([i, ((r + 1) % rows) * cols + c], axis=1))
+    else:
+        right = i[c < cols - 1]
+        down = i[r < rows - 1]
+        pairs.append(np.stack([right, right + 1], axis=1))
+        pairs.append(np.stack([down, down + cols], axis=1))
+    return _canonical_edges(np.concatenate(pairs))
+
+
+def sparse_grid2d(rows: int, cols: int | None = None) -> SparseGraph:
+    cols = cols if cols is not None else rows
+    n = rows * cols
+    rr, cc = np.divmod(np.arange(n), cols)
+    coords = np.stack([cc / max(cols - 1, 1), rr / max(rows - 1, 1)], axis=1)
+    return SparseGraph(n=n, edges=_grid_edges(rows, cols, wrap=False),
+                       name="grid2d", coords=coords)
+
+
+def sparse_torus2d(rows: int, cols: int | None = None) -> SparseGraph:
+    cols = cols if cols is not None else rows
+    n = rows * cols
+    rr, cc = np.divmod(np.arange(n), cols)
+    coords = np.stack([cc / cols, rr / rows], axis=1)
+    return SparseGraph(n=n, edges=_grid_edges(rows, cols, wrap=True),
+                       name="torus2d", coords=coords)
+
+
+def barabasi_albert(n: int, m: int, rng: np.random.Generator) -> SparseGraph:
+    """Barabási–Albert preferential attachment: power-law degrees, O(E) build.
+
+    Starts from a star on m+1 nodes (connected, so the result is always
+    connected); each subsequent node attaches to ``m`` distinct existing
+    nodes sampled by degree. Sampling uses the standard repeated-endpoint
+    trick — picking a uniform element of the running edge-endpoint list IS
+    degree-proportional sampling — so the build never forms a degree
+    histogram, let alone a matrix. Hub degree grows ~sqrt(N): exactly the
+    heavy-tailed regime the dense (N, N) layout cannot reach and the
+    edge-list engine is for.
+    """
+    if m < 1:
+        raise ValueError(f"barabasi_albert needs m >= 1, got {m}")
+    if n < m + 1:
+        raise ValueError(f"barabasi_albert needs n >= m + 1 = {m + 1}, got {n}")
+    # seed star: node m attached to 0..m-1 keeps early degrees nonuniform-safe
+    src = [np.repeat(np.int64(m), m)]
+    dst = [np.arange(m, dtype=np.int64)]
+    # running endpoint pool; grows by 2m per node — preallocate once
+    pool = np.empty(2 * m * (n - m), dtype=np.int64)
+    pool[: 2 * m : 2] = np.arange(m)
+    pool[1 : 2 * m : 2] = m
+    fill = 2 * m
+    for v in range(m + 1, n):
+        targets = np.empty(m, dtype=np.int64)
+        chosen: set[int] = set()
+        k = 0
+        while k < m:
+            t = int(pool[rng.integers(0, fill)])
+            if t not in chosen:
+                chosen.add(t)
+                targets[k] = t
+                k += 1
+        src.append(np.repeat(np.int64(v), m))
+        dst.append(targets)
+        pool[fill : fill + m] = targets
+        pool[fill + m : fill + 2 * m] = v
+        fill += 2 * m
+    edges = _canonical_edges(
+        np.stack([np.concatenate(src), np.concatenate(dst)], axis=1))
+    return SparseGraph(n=n, edges=edges, name="ba")
+
+
+def random_geometric_sparse(
+    n: int,
+    rng: np.random.Generator,
+    radius: float | None = None,
+    max_tries: int = 200,
+) -> SparseGraph:
+    """RGG with the paper's radius via cell binning — O(N) memory, no (N, N) d2.
+
+    Draws the SAME uniforms as ``random_geometric`` (one (n, 2) block per
+    try), so at sizes where both run they produce the identical graph for the
+    identical rng state — the invariant the dense/sparse engine-equivalence
+    suite leans on. Neighbor search bins points into a grid of cells of side
+    >= r and compares only the 9-cell neighborhoods, which at the
+    connectivity radius sqrt(2 log N / N) costs O(N log N) comparisons
+    instead of O(N^2).
+    """
+    r = radius if radius is not None else float(np.sqrt(2.0 * np.log(n) / n))
+    for _ in range(max_tries):
+        pts = rng.random((n, 2))
+        edges = _rgg_edges_binned(pts, r)
+        if edges_are_connected(n, edges):
+            return SparseGraph(n=n, edges=edges, name="rgg", coords=pts)
+    raise RuntimeError(f"could not draw a connected RGG(n={n}, r={r:.4f}) "
+                       f"in {max_tries} tries")
+
+
+def _rgg_edges_binned(pts: np.ndarray, r: float) -> np.ndarray:
+    """Edges (distance <= r) via 9-neighborhood cell binning on [0,1]^2."""
+    n = len(pts)
+    ncell = max(1, int(1.0 / r)) if r > 0 else 1
+    cell = np.minimum((pts * ncell).astype(np.int64), ncell - 1)
+    cid = cell[:, 0] * ncell + cell[:, 1]
+    order = np.argsort(cid, kind="stable")
+    sorted_cid = cid[order]
+    # bucket boundaries per occupied cell
+    starts = np.searchsorted(sorted_cid, np.arange(ncell * ncell))
+    ends = np.searchsorted(sorted_cid, np.arange(ncell * ncell), side="right")
+    r2 = r * r
+    out = []
+    for cx in range(ncell):
+        for cy in range(ncell):
+            me = cx * ncell + cy
+            mine = order[starts[me]:ends[me]]
+            if len(mine) == 0:
+                continue
+            # same-cell pairs
+            p = pts[mine]
+            if len(mine) > 1:
+                d2 = ((p[:, None, :] - p[None, :, :]) ** 2).sum(-1)
+                ii, jj = np.nonzero(np.triu(d2 <= r2, k=1))
+                if len(ii):
+                    out.append(np.stack([mine[ii], mine[jj]], axis=1))
+            # forward half of the 8-neighborhood (avoid double-visiting)
+            for dx, dy in ((0, 1), (1, -1), (1, 0), (1, 1)):
+                ox, oy = cx + dx, cy + dy
+                if not (0 <= ox < ncell and 0 <= oy < ncell):
+                    continue
+                other = ox * ncell + oy
+                theirs = order[starts[other]:ends[other]]
+                if len(theirs) == 0:
+                    continue
+                q = pts[theirs]
+                d2 = ((p[:, None, :] - q[None, :, :]) ** 2).sum(-1)
+                ii, jj = np.nonzero(d2 <= r2)
+                if len(ii):
+                    out.append(np.stack([mine[ii], theirs[jj]], axis=1))
+    if not out:
+        return np.zeros((0, 2), dtype=np.int32)
+    return _canonical_edges(np.concatenate(out))
 
 
 def is_connected(adjacency: np.ndarray) -> bool:

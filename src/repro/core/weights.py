@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .topology import Graph
+from .topology import Graph, SparseGraph
 
 __all__ = [
     "metropolis_hastings",
@@ -23,6 +23,10 @@ __all__ = [
     "optimal_weights",
     "check_consensus_matrix",
     "averaging_matrix",
+    "metropolis_hastings_edges",
+    "lazy_edges",
+    "sparse_matvec",
+    "lambda_extremes_sparse",
 ]
 
 
@@ -129,6 +133,120 @@ def optimal_weights(
         if verbose and t % 100 == 0:
             print(f"  opt_weights iter {t}: rho={rho:.6f} best={best_rho:.6f}")
     return build(best_w_e)
+
+
+# ---------------------------------------------------------------------------
+# Edge-space constructions for the sparse (million-node) layout.
+# ---------------------------------------------------------------------------
+
+
+def metropolis_hastings_edges(g: SparseGraph) -> tuple[np.ndarray, np.ndarray]:
+    """Metropolis-Hastings weights directly in edge space: O(E), no matrix.
+
+    Returns ``(edge_w, diag_w)`` where ``edge_w[k]`` is the weight on the
+    canonical undirected edge ``g.edges[k]`` and ``diag_w[i] = W_ii``. On
+    graphs small enough to densify this matches ``metropolis_hastings``
+    entry-for-entry (the equivalence suite asserts it).
+    """
+    deg = g.degrees
+    i, j = g.edges[:, 0], g.edges[:, 1]
+    edge_w = 1.0 / (1.0 + np.maximum(deg[i], deg[j]))
+    offdiag_rowsum = np.bincount(i, weights=edge_w, minlength=g.n)
+    offdiag_rowsum += np.bincount(j, weights=edge_w, minlength=g.n)
+    return edge_w, 1.0 - offdiag_rowsum
+
+
+def lazy_edges(edge_w: np.ndarray, diag_w: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Edge-space W -> (I + W)/2: halve edge weights, shift diagonal."""
+    return 0.5 * edge_w, 0.5 * (1.0 + diag_w)
+
+
+def sparse_matvec(
+    edges: np.ndarray,
+    edge_w: np.ndarray,
+    diag_w: np.ndarray,
+    x: np.ndarray,
+) -> np.ndarray:
+    """W @ x from the edge list (host numpy; the jnp path lives in the engine).
+
+    ``x`` may be (N,) or (N, F); each undirected edge contributes its weight in
+    both directions via two bincounts over edge endpoints.
+    """
+    i, j = edges[:, 0], edges[:, 1]
+    n = len(diag_w)
+    if x.ndim == 1:
+        y = diag_w * x
+        y += np.bincount(i, weights=edge_w * x[j], minlength=n)
+        y += np.bincount(j, weights=edge_w * x[i], minlength=n)
+        return y
+    y = diag_w[:, None] * x
+    for f in range(x.shape[1]):
+        y[:, f] += np.bincount(i, weights=edge_w * x[j, f], minlength=n)
+        y[:, f] += np.bincount(j, weights=edge_w * x[i, f], minlength=n)
+    return y
+
+
+def lambda_extremes_sparse(
+    edges: np.ndarray,
+    edge_w: np.ndarray,
+    diag_w: np.ndarray,
+    *,
+    iters: int = 500,
+    tol: float = 1e-12,
+    seed: int = 0,
+) -> tuple[float, float]:
+    """(lambda_2, lambda_N) of a doubly-stochastic W by power iteration, O(E·iters).
+
+    lambda_2 comes from power-iterating the PSD shift ``(I + W)/2`` with the
+    known top eigenvector 1 deflated out (lambda_2 = 2 mu - 1); lambda_N from
+    ``I - W`` whose largest eigenvalue is ``1 - lambda_N``. Both operators are
+    two bincounts per step. Used for the large-N sparse cells where
+    ``eigvalsh`` on a dense (N, N) matrix is out of reach; the resulting
+    extremes feed Theorem 1's alpha*(lambda_2) and the surrogate-spectrum
+    polynomial designs (see sweep/grid.py).
+    """
+    n = len(diag_w)
+    rng = np.random.default_rng(seed)
+
+    def matvec(x: np.ndarray) -> np.ndarray:
+        return sparse_matvec(edges, edge_w, diag_w, x)
+
+    # --- lambda_2 via (I + W)/2 deflated against the all-ones vector ---
+    v = rng.standard_normal(n)
+    mu_prev = np.inf
+    for _ in range(iters):
+        v -= v.mean()                      # deflate eigenvector 1
+        nv = np.linalg.norm(v)
+        if nv < 1e-30:
+            v = rng.standard_normal(n)
+            continue
+        v /= nv
+        v_new = 0.5 * (v + matvec(v))
+        mu = float(v @ v_new)
+        v = v_new
+        if abs(mu - mu_prev) < tol:
+            break
+        mu_prev = mu
+    lam2 = 2.0 * mu - 1.0
+
+    # --- lambda_N via I - W (largest eigenvalue 1 - lambda_N) ---
+    u = rng.standard_normal(n)
+    nu_prev = np.inf
+    for _ in range(iters):
+        u -= u.mean()
+        nu_norm = np.linalg.norm(u)
+        if nu_norm < 1e-30:
+            u = rng.standard_normal(n)
+            continue
+        u /= nu_norm
+        u_new = u - matvec(u)
+        nu = float(u @ u_new)
+        u = u_new
+        if abs(nu - nu_prev) < tol:
+            break
+        nu_prev = nu
+    lam_n = 1.0 - nu
+    return min(lam2, 1.0 - 1e-12), max(lam_n, -1.0)
 
 
 def check_consensus_matrix(

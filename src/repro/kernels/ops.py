@@ -29,16 +29,25 @@ from .gossip_round import (
     gossip_round_pallas,
 )
 from .ref import ssd_chunk_ref
+from .segment_round import (
+    segment_round_batched_pallas,
+    segment_round_masked_batched_pallas,
+    segment_round_masked_pallas,
+    segment_round_pallas,
+)
 from .ssd_chunk import ssd_chunk_pallas
 
 __all__ = [
     "batched_round_prim",
+    "batched_segment_round_prim",
+    "build_ell",
     "consensus_update",
     "gossip_matvec",
     "gossip_round",
     "gossip_round_batched",
     "gossip_round_masked",
     "gossip_round_masked_batched",
+    "segment_round",
     "ssd_scan",
     "use_interpret",
 ]
@@ -227,6 +236,121 @@ def gossip_round_masked_batched(ws, ms, xs, xps, coefs):
         bm=bm, bk=bk, bf=bf, interpret=use_interpret(),
     )
     return y[:, :n, :f]
+
+
+# ---------------------------------------------------------------------------
+# segment_round: fused SPARSE Y = a*(W@X) + b*X + c*Xp from an edge list.
+# ---------------------------------------------------------------------------
+
+
+def _segment_tiles(f: int) -> tuple[int, int, int]:
+    """(bm, bd, bf) tiles for the ELL kernels; bd is the neighbor-slot axis."""
+    return 128, 8, 512 if f > 256 else 128
+
+
+def build_ell(edges, edge_w, diag_w, n: int):
+    """ELLPACK (padded per-row neighbor list) arrays from a canonical edge list.
+
+    Host numpy. ``edges`` (E, 2) i < j canonical, ``edge_w`` (E,) the
+    undirected weights, ``diag_w`` (N,) the diagonal. Each undirected edge
+    becomes two directed slots (one per endpoint row). Returns
+
+        nbr  (N, D) int32, wgt (N, D) f32, slot (N, D) int32, diag (N, 1) f32
+
+    with D = max degree and padding slots wgt = 0 / nbr = 0 / slot = 0 —
+    inert in the kernels whatever their index values. ``slot[i, d]`` is the
+    undirected edge id (the RoundMasks bits column) the slot mirrors, so the
+    masked kernels gather one (E,) bits row instead of an (N, N) mask.
+    """
+    import numpy as np
+
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    e = len(edges)
+    src = np.concatenate([edges[:, 0], edges[:, 1]])
+    dst = np.concatenate([edges[:, 1], edges[:, 0]])
+    wdir = np.concatenate([edge_w, edge_w])
+    eid = np.concatenate([np.arange(e), np.arange(e)])
+    deg = np.bincount(src, minlength=n)
+    d_max = max(1, int(deg.max()) if e else 1)
+    order = np.argsort(src, kind="stable")
+    src_s, dst_s, w_s, eid_s = src[order], dst[order], wdir[order], eid[order]
+    starts = np.concatenate([[0], np.cumsum(deg)[:-1]])
+    pos = np.arange(len(src_s)) - starts[src_s]
+    nbr = np.zeros((n, d_max), dtype=np.int32)
+    wgt = np.zeros((n, d_max), dtype=np.float32)
+    slot = np.zeros((n, d_max), dtype=np.int32)
+    nbr[src_s, pos] = dst_s
+    wgt[src_s, pos] = w_s
+    slot[src_s, pos] = eid_s
+    diag = np.asarray(diag_w, dtype=np.float32).reshape(n, 1)
+    return nbr, wgt, slot, diag
+
+
+@jax.jit
+def segment_round(nbr, wgt, slot, diag, x, xp, a, b, c, bits=None):
+    """One fused sparse round on a single graph, auto-padded to kernel tiles.
+
+    ELL operands from ``build_ell``; X/Xp (N, F); a/b/c scalars; ``bits``
+    an optional (E,) 0/1 activity row for this round (None = all edges up).
+    Padding is exact: padded rows have diag 0 and x 0, padded slots have
+    weight 0, padded bits columns are unreferenced.
+    """
+    n, f = x.shape
+    d = nbr.shape[1]
+    bm, bd, bf = _segment_tiles(f)
+    np_, dp_, fp_ = _round_up(n, bm), _round_up(d, bd), _round_up(f, bf)
+    nbrp = jnp.pad(nbr, ((0, np_ - n), (0, dp_ - d)))
+    wgtp = jnp.pad(wgt.astype(jnp.float32), ((0, np_ - n), (0, dp_ - d)))
+    diagp = jnp.pad(diag.astype(jnp.float32), ((0, np_ - n), (0, 0)))
+    xpad = jnp.pad(x.astype(jnp.float32), ((0, np_ - n), (0, fp_ - f)))
+    xppad = jnp.pad(xp.astype(jnp.float32), ((0, np_ - n), (0, fp_ - f)))
+    coef = jnp.stack(
+        [jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+         jnp.asarray(c, jnp.float32)]
+    ).reshape(1, 3)
+    if bits is None:
+        y = segment_round_pallas(
+            nbrp, wgtp, diagp, xpad, xppad, coef,
+            bm=bm, bd=bd, bf=bf, interpret=use_interpret())
+    else:
+        slotp = jnp.pad(slot, ((0, np_ - n), (0, dp_ - d)))
+        e = bits.shape[0]
+        bitsp = jnp.pad(bits.astype(jnp.float32),
+                        (0, _round_up(max(e, 1), 128) - e)).reshape(1, -1)
+        y = segment_round_masked_pallas(
+            nbrp, wgtp, slotp, diagp, bitsp, xpad, xppad, coef,
+            bm=bm, bd=bd, bf=bf, interpret=use_interpret())
+    return y[:n, :f]
+
+
+def batched_segment_round_prim(nbrs, wgts, slots, diags, *, bm: int = 128,
+                               bd: int = 8, bf: int = 128,
+                               interpret: bool | None = None):
+    """Sparse fused-round primitive over pre-padded (Gp, N, D) ELL slices.
+
+    The sparse-layout counterpart of ``batched_round_prim`` — the returned
+
+        prim(x, xp, coef, m=None)
+
+    satisfies the identical layout-polymorphic contract every registry
+    algorithm's ``round_body`` is written against, with ``m`` this round's
+    (Gp, E) compressed bits rows (NOT an (N, N) mask — the sparse path never
+    builds one). Operands must already be padded to the (bm, bd, bf) tiles;
+    the sweep engine pads ONCE outside its scan.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+
+    def prim(x, xp, coef, m=None):
+        if m is None:
+            return segment_round_batched_pallas(
+                nbrs, wgts, diags, x, xp, coef,
+                bm=bm, bd=bd, bf=bf, interpret=interpret)
+        return segment_round_masked_batched_pallas(
+            nbrs, wgts, slots, diags, m, x, xp, coef,
+            bm=bm, bd=bd, bf=bf, interpret=interpret)
+
+    return prim
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,379 @@
+"""Pallas segment-reduce kernel: one fused SPARSE gossip round.
+
+    Y = a * (W_eff @ X) + b * X + c * Xp
+
+where W is never materialized: each cell stores an ELLPACK (padded per-row
+neighbor list) view of its canonical edge list —
+
+    nbr  (N, D) int32   neighbor node index per row slot
+    wgt  (N, D) f32     edge weight per slot (0 on padding slots)
+    slot (N, D) int32   undirected-edge id per slot (RoundMasks bits column)
+    diag (N, 1) f32     W's diagonal
+
+and one round is a gather + weighted segment reduction:
+
+    y[i] = a * (diag[i] * x[i] + sum_d wgt[i,d] * x[nbr[i,d]]) + b*x[i] + c*xp[i]
+
+Grid layout mirrors ``gossip_round.py`` exactly: (N/bm, F/bf, D/bd) with the
+contraction axis (here the neighbor-slot axis D) innermost — the output index
+map ignores d, so Pallas keeps the (bm, bf) block resident across the
+reduction, initializing at d == 0 and applying the FMA taps (and the
+diagonal term) on the final d step. The masked variants apply this round's
+0/1 edge-activity bits per slot with the mass-preserving rule: a dropped
+slot's weight returns to its row's diagonal, so W_eff stays doubly
+stochastic (identical semantics to the dense masked kernel; the per-cell
+bits row is gathered through ``slot``).
+
+The full (N, F) state block rides into VMEM once per (i, j) tile — the
+gather targets arbitrary rows, so the kernel holds X resident rather than
+streaming K tiles. That caps the single-kernel problem size at VMEM
+(~N * bf * 4 bytes); the engine uses this kernel as the sparse pallas
+correctness/small-N path and routes million-node sweeps through the jnp
+``segment_sum`` primitive, which has no such cap (see repro.sweep.engine).
+
+Padding invariants (``repro.kernels.ops`` pads): padded row slots carry
+wgt = 0 (inert in both the reduction and the dropped-mass sum, whatever
+nbr/slot say), padded rows carry diag = 0 and x = 0, padded bits columns are
+never referenced by a real slot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "segment_round_kernel",
+    "segment_round_pallas",
+    "segment_round_batched_kernel",
+    "segment_round_batched_pallas",
+    "segment_round_masked_kernel",
+    "segment_round_masked_pallas",
+    "segment_round_masked_batched_kernel",
+    "segment_round_masked_batched_pallas",
+]
+
+
+def _gather_rows(xf, nbr):
+    """(Np, bf) x, (bm, bd) indices -> (bm, bd, bf) gathered neighbor states."""
+    bm, bd = nbr.shape
+    return jnp.take(xf, nbr.reshape(-1), axis=0).reshape(bm, bd, -1)
+
+
+def segment_round_kernel(nd: int, coef_ref, nbr_ref, wgt_ref, diag_ref,
+                         xf_ref, xi_ref, xp_ref, y_ref):
+    """Accumulate one bd-slot gather partial; diagonal + FMA on the last step."""
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    gathered = _gather_rows(xf_ref[...], nbr_ref[...])
+    y_ref[...] += jnp.sum(wgt_ref[...][..., None] * gathered, axis=1)
+
+    @pl.when(d == nd - 1)
+    def _fma():
+        a = coef_ref[0, 0]
+        b = coef_ref[0, 1]
+        c = coef_ref[0, 2]
+        xi = xi_ref[...]
+        y_ref[...] = a * (y_ref[...] + diag_ref[...] * xi) + b * xi + c * xp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "interpret"))
+def segment_round_pallas(
+    nbr: jax.Array,
+    wgt: jax.Array,
+    diag: jax.Array,
+    x: jax.Array,
+    xp: jax.Array,
+    coef: jax.Array,
+    *,
+    bm: int = 128,
+    bd: int = 8,
+    bf: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused sparse Y = a*(W@X) + b*X + c*Xp, operands pre-padded.
+
+    nbr/wgt (N, D), diag (N, 1), X/Xp (N, F), coef (1, 3) traced. Shape
+    management lives in ``repro.kernels.ops.segment_round``.
+    """
+    n, dmax = nbr.shape
+    n2, f = x.shape
+    if n != n2 or x.shape != xp.shape or wgt.shape != nbr.shape \
+            or diag.shape != (n, 1):
+        raise ValueError(f"shape mismatch: nbr {nbr.shape}, wgt {wgt.shape}, "
+                         f"diag {diag.shape}, X {x.shape}, Xp {xp.shape}")
+    if n % bm or dmax % bd or f % bf:
+        raise ValueError(
+            f"shapes ({n},{dmax},{f}) not multiples of tiles ({bm},{bd},{bf})")
+    nd = dmax // bd
+    grid = (n // bm, f // bf, nd)
+    return pl.pallas_call(
+        functools.partial(segment_round_kernel, nd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i, j, d: (0, 0)),
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),
+            pl.BlockSpec((bm, 1), lambda i, j, d: (i, 0)),
+            pl.BlockSpec((n, bf), lambda i, j, d: (0, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        interpret=interpret,
+    )(coef, nbr, wgt, diag, x, x, xp)
+
+
+def segment_round_batched_kernel(nd: int, coef_ref, nbr_ref, wgt_ref, diag_ref,
+                                 xf_ref, xi_ref, xp_ref, y_ref):
+    """Batched-grid body: blocks carry a leading length-1 graph dim."""
+    d = pl.program_id(3)
+
+    @pl.when(d == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    gathered = _gather_rows(xf_ref[0], nbr_ref[0])
+    y_ref[0] += jnp.sum(wgt_ref[0][..., None] * gathered, axis=1)
+
+    @pl.when(d == nd - 1)
+    def _fma():
+        a = coef_ref[0, 0]
+        b = coef_ref[0, 1]
+        c = coef_ref[0, 2]
+        xi = xi_ref[...]
+        y_ref[...] = a * (y_ref[...] + diag_ref[...] * xi) + b * xi + c * xp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "interpret"))
+def segment_round_batched_pallas(
+    nbrs: jax.Array,
+    wgts: jax.Array,
+    diags: jax.Array,
+    xs: jax.Array,
+    xps: jax.Array,
+    coefs: jax.Array,
+    *,
+    bm: int = 128,
+    bd: int = 8,
+    bf: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused sparse round over a stacked ensemble.
+
+    nbrs/wgts (G, N, D), diags (G, N, 1), Xs/Xps (G, N, F), coefs (G, 3):
+    grid (G, N/bm, F/bf, D/bd), each graph g reads its own ELL slices and
+    (a, b, c) row — one launch covers the whole sparse sweep grid.
+    """
+    g, n, dmax = nbrs.shape
+    g2, n2, f = xs.shape
+    if g != g2 or n != n2 or xs.shape != xps.shape or coefs.shape != (g, 3) \
+            or wgts.shape != nbrs.shape or diags.shape != (g, n, 1):
+        raise ValueError(
+            f"shape mismatch: nbrs {nbrs.shape}, wgts {wgts.shape}, "
+            f"diags {diags.shape}, Xs {xs.shape}, coefs {coefs.shape}")
+    if n % bm or dmax % bd or f % bf:
+        raise ValueError(
+            f"shapes ({n},{dmax},{f}) not multiples of tiles ({bm},{bd},{bf})")
+    nd = dmax // bd
+    grid = (g, n // bm, f // bf, nd)
+    return pl.pallas_call(
+        functools.partial(segment_round_batched_kernel, nd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda gg, i, j, d: (gg, 0)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, 1), lambda gg, i, j, d: (gg, i, 0)),
+            pl.BlockSpec((1, n, bf), lambda gg, i, j, d: (gg, 0, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, n, f), jnp.float32),
+        interpret=interpret,
+    )(coefs, nbrs, wgts, diags, xs, xs, xps)
+
+
+# ---------------------------------------------------------------------------
+# Masked variants: per-round edge-activity bits applied INSIDE the kernel.
+#
+#     wt[i, d] = wgt[i, d] * bits[slot[i, d]]          (this round's live edges)
+#     drop[i]  = sum_d (wgt[i, d] - wt[i, d])          (mass back to the diagonal)
+#     y[i]     = a*( (diag[i]+drop[i])*x[i] + sum_d wt[i,d]*x[nbr[i,d]] )
+#                + b*x[i] + c*xp[i]
+#
+# Exactly the dense masked kernel's mass-preserving rule, evaluated per slot:
+# the compressed (G, E) bits row replaces the (G, N, N) mask expansion, so
+# the sparse dynamic sweep never materializes a mask matrix at all.
+# ---------------------------------------------------------------------------
+
+
+def segment_round_masked_kernel(nd: int, coef_ref, bits_ref, nbr_ref, wgt_ref,
+                                slot_ref, diag_ref, xf_ref, xi_ref, xp_ref,
+                                y_ref):
+    """Masked gather partial + dropped-mass return per slot tile."""
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    w = wgt_ref[...]
+    sel = jnp.take(bits_ref[0], slot_ref[...].reshape(-1)).reshape(w.shape)
+    wt = w * sel
+    drop = jnp.sum(w - wt, axis=1, keepdims=True)
+    gathered = _gather_rows(xf_ref[...], nbr_ref[...])
+    y_ref[...] += jnp.sum(wt[..., None] * gathered, axis=1) + drop * xi_ref[...]
+
+    @pl.when(d == nd - 1)
+    def _fma():
+        a = coef_ref[0, 0]
+        b = coef_ref[0, 1]
+        c = coef_ref[0, 2]
+        xi = xi_ref[...]
+        y_ref[...] = a * (y_ref[...] + diag_ref[...] * xi) + b * xi + c * xp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "interpret"))
+def segment_round_masked_pallas(
+    nbr: jax.Array,
+    wgt: jax.Array,
+    slot: jax.Array,
+    diag: jax.Array,
+    bits: jax.Array,
+    x: jax.Array,
+    xp: jax.Array,
+    coef: jax.Array,
+    *,
+    bm: int = 128,
+    bd: int = 8,
+    bf: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused masked sparse round, operands pre-padded.
+
+    ``bits`` is this round's (1, E) 0/1 edge-activity row (E = the padded
+    undirected edge count ``slot`` indexes into).
+    """
+    n, dmax = nbr.shape
+    n2, f = x.shape
+    if n != n2 or x.shape != xp.shape or wgt.shape != nbr.shape \
+            or slot.shape != nbr.shape or diag.shape != (n, 1) \
+            or bits.ndim != 2 or bits.shape[0] != 1:
+        raise ValueError(f"shape mismatch: nbr {nbr.shape}, wgt {wgt.shape}, "
+                         f"slot {slot.shape}, diag {diag.shape}, "
+                         f"bits {bits.shape}, X {x.shape}, Xp {xp.shape}")
+    if n % bm or dmax % bd or f % bf:
+        raise ValueError(
+            f"shapes ({n},{dmax},{f}) not multiples of tiles ({bm},{bd},{bf})")
+    nd = dmax // bd
+    e = bits.shape[1]
+    grid = (n // bm, f // bf, nd)
+    return pl.pallas_call(
+        functools.partial(segment_round_masked_kernel, nd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i, j, d: (0, 0)),
+            pl.BlockSpec((1, e), lambda i, j, d: (0, 0)),
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),
+            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),
+            pl.BlockSpec((bm, 1), lambda i, j, d: (i, 0)),
+            pl.BlockSpec((n, bf), lambda i, j, d: (0, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        interpret=interpret,
+    )(coef, bits, nbr, wgt, slot, diag, x, x, xp)
+
+
+def segment_round_masked_batched_kernel(nd: int, coef_ref, bits_ref, nbr_ref,
+                                        wgt_ref, slot_ref, diag_ref, xf_ref,
+                                        xi_ref, xp_ref, y_ref):
+    """Batched-grid masked body: blocks carry a leading length-1 graph dim."""
+    d = pl.program_id(3)
+
+    @pl.when(d == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    w = wgt_ref[0]
+    sel = jnp.take(bits_ref[0], slot_ref[0].reshape(-1)).reshape(w.shape)
+    wt = w * sel
+    drop = jnp.sum(w - wt, axis=1, keepdims=True)
+    gathered = _gather_rows(xf_ref[0], nbr_ref[0])
+    y_ref[0] += jnp.sum(wt[..., None] * gathered, axis=1) + drop * xi_ref[0]
+
+    @pl.when(d == nd - 1)
+    def _fma():
+        a = coef_ref[0, 0]
+        b = coef_ref[0, 1]
+        c = coef_ref[0, 2]
+        xi = xi_ref[...]
+        y_ref[...] = a * (y_ref[...] + diag_ref[...] * xi) + b * xi + c * xp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "interpret"))
+def segment_round_masked_batched_pallas(
+    nbrs: jax.Array,
+    wgts: jax.Array,
+    slots: jax.Array,
+    diags: jax.Array,
+    bits: jax.Array,
+    xs: jax.Array,
+    xps: jax.Array,
+    coefs: jax.Array,
+    *,
+    bm: int = 128,
+    bd: int = 8,
+    bf: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Masked fused sparse round over a stacked ensemble (dynamic sparse sweep).
+
+    nbrs/wgts/slots (G, N, D), diags (G, N, 1), bits (G, E) this round's
+    activity rows, Xs/Xps (G, N, F), coefs (G, 3) -> (G, N, F) fp32.
+    """
+    g, n, dmax = nbrs.shape
+    g2, n2, f = xs.shape
+    if g != g2 or n != n2 or xs.shape != xps.shape or coefs.shape != (g, 3) \
+            or wgts.shape != nbrs.shape or slots.shape != nbrs.shape \
+            or diags.shape != (g, n, 1) or bits.shape[0] != g:
+        raise ValueError(
+            f"shape mismatch: nbrs {nbrs.shape}, wgts {wgts.shape}, "
+            f"slots {slots.shape}, diags {diags.shape}, bits {bits.shape}, "
+            f"Xs {xs.shape}, coefs {coefs.shape}")
+    if n % bm or dmax % bd or f % bf:
+        raise ValueError(
+            f"shapes ({n},{dmax},{f}) not multiples of tiles ({bm},{bd},{bf})")
+    nd = dmax // bd
+    e = bits.shape[1]
+    grid = (g, n // bm, f // bf, nd)
+    return pl.pallas_call(
+        functools.partial(segment_round_masked_batched_kernel, nd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda gg, i, j, d: (gg, 0)),
+            pl.BlockSpec((1, e), lambda gg, i, j, d: (gg, 0)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, 1), lambda gg, i, j, d: (gg, i, 0)),
+            pl.BlockSpec((1, n, bf), lambda gg, i, j, d: (gg, 0, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, n, f), jnp.float32),
+        interpret=interpret,
+    )(coefs, bits, nbrs, wgts, slots, diags, xs, xs, xps)

@@ -21,6 +21,15 @@ einsum round; ``backend='pallas'`` drives the batched-grid fused kernel
 (``kernels.ops.batched_round_prim``) — matvec accumulation and the FMA taps
 in one kernel launch per round, no intermediate x_w in HBM.
 
+The same scan serves both weight layouts: dense feeds (G, N, N) stacked
+matrices to the primitives above, while ``SweepSpec(layout="sparse")``
+(auto-selected for large N) feeds edge-space operands — directed
+gather/segment-sum rounds on the jax backend, batched ELLPACK
+segment-reduce kernels (``kernels.ops.batched_segment_round_prim``) on
+pallas — so W is never materialized and million-node grids cost O(E), not
+O(N^2). ``trial_chunk`` tiles the F axis into independent column blocks
+when even O(G N F) state is too big.
+
 Everything funnels through one jit entry (``_sweep_scan``): a full sweep —
 and the degenerate G=1 sweep that ``repro.core.simulator.simulate`` routes
 through — costs exactly one compilation per (shape, backend) signature.
@@ -61,11 +70,12 @@ def trace_count() -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_iters", "use_kernels", "tiles", "layout", "algo_gen"))
+    static_argnames=("num_iters", "use_kernels", "tiles", "layout", "algo_gen",
+                     "sparse"))
 def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
                 tiles: tuple[int, int, int] | None = None, bits=None, eidx=None,
                 layout: tuple[tuple[str, int, int], ...] | None = None,
-                algo_gen: int = 0):
+                algo_gen: int = 0, sparse: bool = False):
     """One jitted scan for the whole (possibly mixed-algorithm) grid.
 
     ``layout`` is the static tuple of (algorithm spec, start, stop) G
@@ -84,6 +94,13 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
     (``repro.core.dynamics`` has the model; ``async_pairwise`` rides the
     same machinery with one-hot bits over its pairwise base matrix).
 
+    ``sparse`` (static) switches ``ws`` to the edge-space operand pytree:
+    ``(src, dst, wdir, eid, diag)`` directed arrays on the jax backend, or
+    the pre-padded ``(nbrs, wgts, slots, diags)`` ELL stacks on pallas. The
+    dynamic path then feeds each round's raw (Gp, E) bits rows straight to
+    the primitive — the dense (G, N, N) mask expansion never happens, which
+    is what makes N = 1e5–1e6 dynamic-topology sweeps fit in memory.
+
     ``algo_gen`` is the registry generation (static): layout names resolve
     to algorithm OBJECTS only at trace time, so a re-registered name must
     miss the jit cache rather than silently run the shadowed round body.
@@ -94,16 +111,17 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
 
     from repro.core.algorithms import get_algorithm
 
-    ws = ws.astype(jnp.float32)
+    if not sparse:
+        ws = ws.astype(jnp.float32)
     x0 = x0.astype(jnp.float32)
     mask = mask.astype(jnp.float32)[:, :, None]
     inv_n = inv_n.astype(jnp.float32)
     coefs = coefs.astype(jnp.float32)
     dynamic = bits is not None
     if layout is None:
-        layout = (("accel", 0, ws.shape[0]),)
+        layout = (("accel", 0, x0.shape[0]),)
 
-    if dynamic:
+    if dynamic and not sparse:
         n = ws.shape[1]
         eye = jnp.eye(n, dtype=bool)
 
@@ -125,7 +143,61 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
     # per-cell target: the true initial average over real nodes (padding is 0)
     xbar = x0.sum(axis=1, keepdims=True) * inv_n[:, None, None]   # (G, 1, F)
 
-    if use_kernels:
+    if sparse and use_kernels:
+        # Sparse pallas: pre-padded ELL slices drive the batched segment-
+        # reduce kernel; `m` is this round's (Gp, E) bits rows gathered by
+        # undirected edge id inside the kernel — no (N, N) mask anywhere.
+        from repro.kernels.ops import batched_segment_round_prim, use_interpret
+
+        nbrs, wgts, slots, diags = ws
+        bm, bd, bf = tiles
+        interpret = use_interpret()
+
+        def make_prim(s, e):
+            return batched_segment_round_prim(
+                nbrs[s:e], wgts[s:e], slots[s:e], diags[s:e],
+                bm=bm, bd=bd, bf=bf, interpret=interpret)
+    elif sparse:
+        # Sparse jnp: directed-arrays gather/segment_sum round. Each
+        # undirected canonical edge appears as two directed slots; `eid`
+        # maps a slot back to its RoundMasks bits column. Padded slots have
+        # wdir 0 (their src/dst/eid indices are inert), padded rows have
+        # diag 0 and x 0, so padding is exact. Dropped mass from masked-off
+        # edges returns to the source diagonal — W_eff(t) stays stochastic.
+        src, dst, wdir, eid, diag = ws
+        wdir = wdir.astype(jnp.float32)
+        diag = diag.astype(jnp.float32)
+        nn = x0.shape[1]
+
+        def make_prim(s, e):
+            sg, dg, wg = src[s:e], dst[s:e], wdir[s:e]
+            eg, gg = eid[s:e], diag[s:e]
+
+            def prim(x, xp, coef, m=None):
+                a = coef[:, 0, None, None]
+                b = coef[:, 1, None, None]
+                c = coef[:, 2, None, None]
+                if m is None:
+                    def one(s_, d_, w_, g_, x_):
+                        contrib = w_[:, None] * jnp.take(x_, d_, axis=0)
+                        return (jax.ops.segment_sum(
+                            contrib, s_, num_segments=nn)
+                            + g_[:, None] * x_)
+                    xw = jax.vmap(one)(sg, dg, wg, gg, x)
+                else:
+                    def one(s_, d_, w_, e_, g_, m_, x_):
+                        sel = jnp.take(m_, e_)                    # (2E,)
+                        wt = w_ * sel
+                        drop = jax.ops.segment_sum(
+                            w_ - wt, s_, num_segments=nn)
+                        contrib = wt[:, None] * jnp.take(x_, d_, axis=0)
+                        return (jax.ops.segment_sum(
+                            contrib, s_, num_segments=nn)
+                            + (g_ + drop)[:, None] * x_)
+                    xw = jax.vmap(one)(sg, dg, wg, eg, gg, m, x)
+                return a * xw + b * x + c * xp
+            return prim
+    elif use_kernels:
         # run_batch pre-pads the whole batch to the kernel tiles ONCE (and
         # passes those tiles in), so the scan body drives the raw batched
         # kernel directly — no per-round pad/slice materializations on the
@@ -137,11 +209,13 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
         bm, bk, bf = tiles
         interpret = use_interpret()
 
-        def make_prim(wsp):
+        def make_prim(s, e):
             return batched_round_prim(
-                wsp, bm=bm, bk=bk, bf=bf, interpret=interpret)
+                ws[s:e], bm=bm, bk=bk, bf=bf, interpret=interpret)
     else:
-        def make_prim(wsp):
+        def make_prim(s, e):
+            wsp = ws[s:e]
+
             def prim(x, xp, coef, m=None):
                 a = coef[:, 0, None, None]
                 b = coef[:, 1, None, None]
@@ -165,8 +239,8 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
     for name, s, e in layout:
         algo = get_algorithm(name)
         prim = algo.pallas_round(ws[s:e], tiles=tiles) \
-            if (use_kernels and algo.pallas_round is not None) \
-            else make_prim(ws[s:e])
+            if (use_kernels and not sparse and algo.pallas_round is not None) \
+            else make_prim(s, e)
         parts.append((algo, s, e, prim))
 
     def mse_of(x):
@@ -177,7 +251,11 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
         t, bits_t = xs_t if dynamic else (xs_t, None)
         new_carry, disp = [], []
         for (algo, s, e, prim), sub in zip(parts, carry):
-            m = expand(bits_t[s:e], eidx[s:e]) if dynamic else None
+            if dynamic:
+                m = bits_t[s:e].astype(jnp.float32) if sparse \
+                    else expand(bits_t[s:e], eidx[s:e])
+            else:
+                m = None
             sub = algo.round_body(
                 lambda x, xp, coef, _p=prim, _m=m: _p(x, xp, coef, _m),
                 coefs[s:e], sub, t)
@@ -208,11 +286,26 @@ def run_batch(
     mesh=None,
     round_masks: RoundMasks | None = None,
     algos: tuple[tuple[str, int, int], ...] | None = None,
+    edges=None,
+    edge_w=None,
+    diag_w=None,
+    edge_counts=None,
+    trial_chunk: int | None = None,
 ):
     """Evaluate ``num_iters`` rounds over a stacked (G, N, N) ensemble.
 
     Args:
-      ws:    (G, N, N) stacked base matrices (zero-padded rows/cols OK).
+      ws:    (G, N, N) stacked base matrices (zero-padded rows/cols OK), or
+        ``None`` for the SPARSE layout — then ``edges`` (G, Emax, 2) int32
+        canonical i<j edge lists (zero-padded slots), ``edge_w`` (G, Emax)
+        undirected edge weights (0 on padding), ``diag_w`` (G, N) diagonals
+        and optionally ``edge_counts`` (G,) real edge counts carry the
+        weights in O(E) instead of O(N^2). The jax backend runs a
+        gather/segment-sum round over the directed-arrays form; pallas runs
+        the batched ELL segment-reduce kernel (``kernels.ops.build_ell`` +
+        ``batched_segment_round_prim``). Same registry round bodies, same
+        RoundMasks schedules (bits columns are undirected edge ids in both
+        layouts), outputs match the dense layout to f32 roundoff.
       x0:    (G, N, F) initial-condition blocks (zeros on padded nodes).
       coefs: (G, C) per-cell algorithm parameter rows ((a, b, c) for the
         default two-tap partition).
@@ -232,6 +325,12 @@ def run_batch(
         algorithm needs a per-tick schedule (``async_pairwise``).
       algos: static (algorithm spec, start, stop) partition layout along G
         (``Ensemble.layout``); None = one two-tap ("accel") partition.
+      trial_chunk: optional F-axis tile: run the sweep in independent
+        column blocks of this many trials and concatenate — trial columns
+        never interact, so results match the unchunked run to f32 roundoff
+        (only XLA's reduction vectorization differs with F) while peak
+        memory drops from O(G N F) to O(G N chunk). This is what makes
+        N = 1e5–1e6 sparse sweeps with many trials fit on one host.
 
     Returns:
       (x_final (G, N, F), mse (G, T+1, F)) as numpy arrays.
@@ -240,8 +339,32 @@ def run_batch(
         raise ValueError(f"unknown backend {backend!r} (sweep runs 'jax' or 'pallas')")
     from repro.core.algorithms import get_algorithm
 
-    ws = np.asarray(ws)
+    sparse = ws is None
+    if sparse and (edges is None or edge_w is None or diag_w is None):
+        raise ValueError(
+            "sparse mode (ws=None) requires edges, edge_w and diag_w arrays")
+
     x0 = np.asarray(x0)
+    f_total = x0.shape[2]
+    if trial_chunk is not None and 0 < trial_chunk < f_total:
+        outs = [
+            run_batch(
+                ws, x0[:, :, s:s + trial_chunk], coefs, node_counts,
+                num_iters=num_iters, backend=backend, mesh=mesh,
+                round_masks=round_masks, algos=algos, edges=edges,
+                edge_w=edge_w, diag_w=diag_w, edge_counts=edge_counts,
+            )
+            for s in range(0, f_total, trial_chunk)
+        ]
+        return (np.concatenate([o[0] for o in outs], axis=2),
+                np.concatenate([o[1] for o in outs], axis=2))
+
+    if sparse:
+        edges = np.asarray(edges, dtype=np.int32)
+        edge_w = np.asarray(edge_w, dtype=np.float32)
+        diag_w = np.asarray(diag_w, dtype=np.float32)
+    else:
+        ws = np.asarray(ws)
     coefs = np.asarray(coefs)
     g, n, f = x0.shape
     if node_counts is None:
@@ -283,7 +406,48 @@ def run_batch(
 
     n_orig, f_orig = n, f
     tiles = None
-    if backend == "pallas":
+    wpack = None
+    if backend == "pallas" and sparse:
+        # Sparse pallas: build per-cell ELL arrays host-side ONCE (N already
+        # padded to the row tile so build_ell sizes them directly), pad the
+        # neighbor-slot axis to the common tile-rounded max degree, and pad
+        # the bits E axis to the kernel's 128-lane block. Padded slots have
+        # weight 0, padded bits columns are never gathered.
+        from repro.kernels import ops as kops
+
+        tiles = kops._segment_tiles(f)
+        bm, bd, bf = tiles
+        n_pad = kops._round_up(n, bm) - n
+        f_pad = kops._round_up(f, bf) - f
+        if n_pad or f_pad:
+            x0 = np.pad(x0, ((0, 0), (0, n_pad), (0, f_pad)))
+        n, f = n + n_pad, f + f_pad
+        ec = np.full(g, edges.shape[1], dtype=np.int64) \
+            if edge_counts is None else np.asarray(edge_counts, dtype=np.int64)
+        ells = [
+            kops.build_ell(
+                edges[i, :int(ec[i])], edge_w[i, :int(ec[i])],
+                np.pad(diag_w[i], (0, n_pad)), n)
+            for i in range(g)
+        ]
+        d_max = kops._round_up(max(e_[0].shape[1] for e_ in ells), bd)
+
+        def padd(a):
+            return np.pad(a, ((0, 0), (0, d_max - a.shape[1])))
+
+        wpack = (
+            np.stack([padd(e_[0]) for e_ in ells]),   # nbr  (G, N, D)
+            np.stack([padd(e_[1]) for e_ in ells]),   # wgt  (G, N, D)
+            np.stack([padd(e_[2]) for e_ in ells]),   # slot (G, N, D)
+            np.stack([e_[3] for e_ in ells]),         # diag (G, N, 1)
+        )
+        if bits is not None:
+            e_b = bits.shape[2]
+            bits = np.pad(
+                bits,
+                ((0, 0), (0, 0),
+                 (0, kops._round_up(max(e_b, 1), 128) - e_b)))
+    elif backend == "pallas":
         # pad N/F to the kernel's tile multiples ONCE, outside the scan; the
         # node mask (below) keeps padded rows out of the MSE, padded trial
         # columns are sliced off the outputs. The jax backend stays unpadded
@@ -300,6 +464,21 @@ def run_batch(
             ws = np.pad(ws, ((0, 0), (0, n_pad), (0, n_pad)))
             x0 = np.pad(x0, ((0, 0), (0, n_pad), (0, f_pad)))
             n, f = n + n_pad, f + f_pad
+    elif sparse:
+        # Sparse jax: directed-arrays form. Every canonical undirected edge
+        # becomes two directed slots (both orientations); ``eid`` maps a
+        # directed slot back to its undirected RoundMasks bits column.
+        # Padded edge slots carry weight 0, so their indices are inert.
+        e_und = edges.shape[1]
+        wpack = (
+            np.concatenate([edges[:, :, 0], edges[:, :, 1]], axis=1),
+            np.concatenate([edges[:, :, 1], edges[:, :, 0]], axis=1),
+            np.concatenate([edge_w, edge_w], axis=1),
+            np.ascontiguousarray(np.broadcast_to(
+                np.concatenate([np.arange(e_und, dtype=np.int32)] * 2)[None],
+                (g, 2 * e_und))),
+            diag_w,
+        )
 
     mask = (np.arange(n)[None, :] < node_counts[:, None]).astype(np.float32)
     inv_n = (1.0 / node_counts).astype(np.float32)
@@ -325,13 +504,17 @@ def run_batch(
             )
 
     g_pad = 0
-    arrays = (ws, x0, mask, inv_n, coefs)
+    w_arrays = wpack if sparse else (ws,)
+    nw = len(w_arrays)
+    arrays = (*w_arrays, x0, mask, inv_n, coefs)
     if mesh is not None:
         ndata = mesh.shape["data"]
         g_pad = (-g) % ndata
         if g_pad:
             # replicate the LAST cell so the pad extends the last algorithm
-            # partition (pad rows are dropped on return either way)
+            # partition (pad rows are dropped on return either way); every
+            # weight operand (dense ws, sparse directed/ELL stacks alike)
+            # is G-leading so one rule covers both layouts
             arrays = tuple(
                 np.concatenate([a, np.repeat(a[-1:], g_pad, axis=0)], axis=0)
                 for a in arrays
@@ -345,8 +528,7 @@ def run_batch(
                 )
             name, s, _ = algos[-1]
             algos = algos[:-1] + ((name, s, g + g_pad),)
-        specs = (
-            P("data"),                    # ws
+        specs = tuple([P("data")] * nw) + (  # weight operands
             P("data", None, "model"),     # x0
             P("data"),                    # mask
             P("data"),                    # inv_n
@@ -362,10 +544,12 @@ def run_batch(
 
     from repro.core.algorithms import registry_generation
 
+    ws_in = tuple(arrays[:nw]) if sparse else arrays[0]
     x_fin, mse = _sweep_scan(
-        *arrays, num_iters=num_iters, use_kernels=(backend == "pallas"),
+        ws_in, *arrays[nw:], num_iters=num_iters,
+        use_kernels=(backend == "pallas"),
         tiles=tiles, bits=bits, eidx=eidx, layout=tuple(algos),
-        algo_gen=registry_generation(),
+        algo_gen=registry_generation(), sparse=sparse,
     )
     x_fin, mse = np.asarray(x_fin), np.asarray(mse)
     if g_pad:
@@ -429,17 +613,22 @@ def run_ensemble(
     backend: str = "jax",
     mesh=None,
     round_masks: RoundMasks | None = None,
+    trial_chunk: int | None = None,
 ) -> SweepResult:
     """Evaluate an already-built (possibly merged) grid in one program.
 
     ``round_masks`` carries per-round edge-failure schedules; pass the result
     of ``build_round_masks(ens, num_iters)`` (or None for the static path —
     ``run_sweep`` wires this automatically from ``SweepSpec.dynamics``).
+    Sparse-layout ensembles (``ens.is_sparse``) route through the edge-space
+    engine automatically; ``trial_chunk`` tiles the F axis for memory.
     """
     x_fin, mse = run_batch(
         ens.ws, ens.x0, ens.coefs, ens.node_counts,
         num_iters=num_iters, backend=backend, mesh=mesh,
         round_masks=round_masks, algos=ens.layout,
+        edges=ens.edges, edge_w=ens.edge_w, diag_w=ens.diag_w,
+        edge_counts=ens.edge_counts, trial_chunk=trial_chunk,
     )
     return SweepResult(ensemble=ens, x_final=x_fin, mse=mse)
 
@@ -450,6 +639,7 @@ def run_sweep(
     num_iters: int,
     backend: str = "jax",
     mesh=None,
+    trial_chunk: int | None = None,
 ) -> SweepResult:
     """Build the grid of ``spec`` and evaluate it in one jitted program.
 
@@ -458,9 +648,16 @@ def run_sweep(
     bits are sampled host-side (graph-keyed RNG: coupled across failure
     probabilities and shared across designs) and the whole failure grid runs
     as one jitted vmapped scan, exactly like every other sweep axis.
+
+    ``spec.layout`` picks the weight storage: "dense" stacks (G, N, N)
+    matrices, "sparse" keeps per-cell edge lists and runs gather/segment-sum
+    rounds (required for N >> 1e4), "auto" switches to sparse when the
+    largest size exceeds ``grid.SPARSE_EXACT_SPECTRUM_CUTOFF``. Pair large-N
+    sparse sweeps with ``trial_chunk`` to bound peak memory.
     """
     ens = build_ensemble(spec)
     masks = build_round_masks(ens, num_iters, seed=spec.seed)
     return run_ensemble(
-        ens, num_iters=num_iters, backend=backend, mesh=mesh, round_masks=masks
+        ens, num_iters=num_iters, backend=backend, mesh=mesh,
+        round_masks=masks, trial_chunk=trial_chunk,
     )

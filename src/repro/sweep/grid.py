@@ -24,10 +24,22 @@ batched engine consumes in one jitted program:
 
 Graph draws are shared across the theta/alpha cells of the same (family,
 size, draw) triple — gain ratios (Fig. 4) then compare identical ensembles.
+
+**Sparse layout** (``SweepSpec(layout="sparse")``): cells store the canonical
+edge list + edge/diagonal weights instead of ``ws`` — O(E) per cell instead
+of O(N^2) — and the engine runs the segment-sum round primitive, which is
+what makes power-law sweeps at N = 1e5-1e6 fit on one host. Cells with
+n <= ``SPARSE_EXACT_SPECTRUM_CUTOFF`` densify *for metadata only* (exact
+eigvalsh spectrum, identical coefficients to the dense layout — the
+equivalence suite's bit-level anchor); larger cells use power-iteration
+extremes and a surrogate spectrum (``_surrogate_spectrum``) for the alpha*,
+phi3 and polynomial-filter designs. ``layout="auto"`` picks sparse as soon
+as the grid's largest size crosses the cutoff.
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
 from typing import Callable
 
@@ -56,6 +68,12 @@ THETA_DESIGNS: dict[str, Callable[[], Theta] | None] = {
 }
 
 
+# Above this size the sparse layout stops densifying for metadata (no exact
+# eigvalsh) and "auto" stops choosing the dense layout at all.
+SPARSE_EXACT_SPECTRUM_CUTOFF = 1024
+SURROGATE_SPECTRUM_POINTS = 64
+
+
 def _near_square(n: int) -> tuple[int, int]:
     rows = max(int(math.isqrt(n)), 1)
     while n % rows:
@@ -63,18 +81,30 @@ def _near_square(n: int) -> tuple[int, int]:
     return rows, n // rows
 
 
+def _parse_family(family: str) -> tuple[str, list[str]]:
+    """Family specs parse like dynamics specs: ``"ba"`` or ``"ba:5"``."""
+    parts = str(family).split(":")
+    return parts[0], parts[1:]
+
+
 def _build_graph(family: str, n: int, rng: np.random.Generator) -> topology.Graph:
-    if family == "chain":
+    fam, fargs = _parse_family(family)
+    if fam == "chain":
         return topology.chain(n)
-    if family == "ring":
+    if fam == "ring":
         return topology.ring(n)
-    if family == "grid2d":
+    if fam == "grid2d":
         return topology.grid2d(*_near_square(n))
-    if family == "torus2d":
+    if fam == "torus2d":
         return topology.torus2d(*_near_square(n))
-    if family == "rgg":
+    if fam == "rgg":
         return topology.random_geometric(n, rng)
-    if family == "erdos_renyi":
+    if fam == "ba":
+        # densified sparse build: both layouts consume identical rng draws,
+        # so dense<->sparse equivalence holds on power-law graphs too
+        m = int(fargs[0]) if fargs else 3
+        return topology.barabasi_albert(n, m, rng).to_dense()
+    if fam == "erdos_renyi":
         p = min(1.0, 2.0 * math.log(max(n, 2)) / n)
         for _ in range(200):
             g = topology.erdos_renyi(n, p, rng)
@@ -82,7 +112,63 @@ def _build_graph(family: str, n: int, rng: np.random.Generator) -> topology.Grap
                 return g
         raise RuntimeError(f"could not draw a connected G({n}, {p:.3f})")
     raise ValueError(f"unknown topology family {family!r} "
-                     f"(have chain/ring/grid2d/torus2d/rgg/erdos_renyi)")
+                     f"(have chain/ring/grid2d/torus2d/rgg/ba[:m]/erdos_renyi)")
+
+
+def _build_sparse_graph(
+    family: str, n: int, rng: np.random.Generator
+) -> topology.SparseGraph:
+    """Edge-list twin of ``_build_graph``; identical rng consumption per draw."""
+    fam, fargs = _parse_family(family)
+    if fam == "chain":
+        return topology.sparse_chain(n)
+    if fam == "ring":
+        return topology.sparse_ring(n)
+    if fam == "grid2d":
+        return topology.sparse_grid2d(*_near_square(n))
+    if fam == "torus2d":
+        return topology.sparse_torus2d(*_near_square(n))
+    if fam == "rgg":
+        return topology.random_geometric_sparse(n, rng)
+    if fam == "ba":
+        m = int(fargs[0]) if fargs else 3
+        return topology.barabasi_albert(n, m, rng)
+    if fam == "erdos_renyi":
+        if n > SPARSE_EXACT_SPECTRUM_CUTOFF:
+            raise ValueError(
+                "erdos_renyi has no large-N sparse generator (its dense "
+                "sampler draws an (N, N) coin matrix); use 'ba' or 'rgg' "
+                f"above n = {SPARSE_EXACT_SPECTRUM_CUTOFF}")
+        return topology.SparseGraph.from_graph(_build_graph(family, n, rng))
+    raise ValueError(f"unknown topology family {family!r} "
+                     f"(have chain/ring/grid2d/torus2d/rgg/ba[:m]/erdos_renyi)")
+
+
+def _surrogate_spectrum(
+    lam2: float, lam_n: float, k: int = SURROGATE_SPECTRUM_POINTS
+) -> np.ndarray:
+    """Stand-in spectrum for cells too large to eigensolve.
+
+    Power-iteration extremes, a uniform fill between them, and the trivial
+    eigenvalue 1 — sorted ascending like ``eigvalsh``. The consumers
+    (alpha*, ``phi3_eigenvalues`` caps, the polynomial-filter Vandermonde
+    design) only need the support interval [lam_N, lam_2] plus the top
+    eigenvalue, all of which the surrogate carries exactly.
+    """
+    return np.concatenate([np.linspace(lam_n, lam2, k), [1.0]])
+
+
+def _sparse_tick_rho(algo, lam2, rho_mem, vals, edges, n):
+    """tick_rho for a non-densifiable cell; 4-arg fallback for old overrides."""
+    try:
+        params = inspect.signature(algo.tick_rho).parameters.values()
+        takes_edges = any(p.name == "edges" or p.kind is p.VAR_KEYWORD
+                          for p in params)
+    except (TypeError, ValueError):
+        takes_edges = False
+    if takes_edges:
+        return algo.tick_rho(lam2, rho_mem, None, vals, edges=edges, num_nodes=n)
+    return algo.tick_rho(lam2, rho_mem, None, vals)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +185,7 @@ class SweepSpec:
     seed: int = 0
     dynamics: tuple[str, ...] = ("static",)   # topology schedules (core.dynamics)
     algorithms: tuple[str, ...] = ("accel",)  # registry specs (core.algorithms)
+    layout: str = "auto"                      # "dense" | "sparse" | "auto"
 
     def __post_init__(self):
         for d in self.designs:
@@ -108,6 +195,17 @@ class SweepSpec:
             dynamics.parse_dynamics(s)        # raises on malformed schedules
         for a in self.algorithms:
             algorithms.get_algorithm(a)       # raises on unknown algorithms
+        if self.layout not in ("dense", "sparse", "auto"):
+            raise ValueError(
+                f"unknown layout {self.layout!r} (have dense/sparse/auto)")
+
+    @property
+    def resolved_layout(self) -> str:
+        """"auto" -> sparse once any size crosses the dense cutoff."""
+        if self.layout != "auto":
+            return self.layout
+        return ("sparse" if max(self.sizes) > SPARSE_EXACT_SPECTRUM_CUTOFF
+                else "dense")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,18 +235,47 @@ class ConfigMeta:
 
 @dataclasses.dataclass(frozen=True)
 class Ensemble:
-    """The stacked grid (see module docstring). Arrays are numpy fp32/fp64."""
+    """The stacked grid (see module docstring). Arrays are numpy fp32/fp64.
 
-    ws: np.ndarray             # (G, Nmax, Nmax) per-cell base matrices
+    Exactly one of the two weight storages is populated: dense grids carry
+    ``ws``; sparse grids carry ``edges``/``edge_w``/``diag_w``/``edge_counts``
+    (``ws`` is None) — the canonical edge list of every cell padded to the
+    grid's largest edge count. Padded edge slots have weight 0 and endpoints
+    (0, 0), so they are inert under both the round primitive and the
+    mass-preserving mask rule; padded diagonal entries are 0 on nodes whose
+    state is pinned at 0 by the init padding.
+    """
+
+    ws: np.ndarray | None      # (G, Nmax, Nmax) per-cell base matrices (dense)
     x0: np.ndarray             # (G, Nmax, F)
     coefs: np.ndarray          # (G, C) per-cell algorithm parameter rows
     node_counts: np.ndarray    # (G,) int
     configs: tuple[ConfigMeta, ...]
     algos: tuple[tuple[str, int, int], ...] = ()   # (spec, start, stop) partitions
+    edges: np.ndarray | None = None        # (G, Emax, 2) int32, canonical i < j
+    edge_w: np.ndarray | None = None       # (G, Emax) f32 base edge weights
+    diag_w: np.ndarray | None = None       # (G, Nmax) f32 base diagonal
+    edge_counts: np.ndarray | None = None  # (G,) int true edge counts
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.ws is None
 
     @property
     def num_configs(self) -> int:
-        return self.ws.shape[0]
+        return self.x0.shape[0]
+
+    def edge_index(self, i: int) -> np.ndarray:
+        """Cell i's canonical (E_i, 2) edge list, layout-independent.
+
+        Both layouts yield the identical array for the same graph (the sparse
+        builder stores exactly the ordering ``dynamics.edge_index`` recovers
+        from a dense matrix), which is what keeps RoundMasks schedules CRN-
+        coupled across layouts.
+        """
+        if self.is_sparse:
+            return np.asarray(self.edges[i, : int(self.edge_counts[i])])
+        return dynamics.edge_index(self.ws[i])
 
     @property
     def layout(self) -> tuple[tuple[str, int, int], ...]:
@@ -164,7 +291,7 @@ class Ensemble:
 
     @property
     def n_max(self) -> int:
-        return self.ws.shape[1]
+        return self.x0.shape[1]
 
     def mask(self) -> np.ndarray:
         """(G, Nmax) 1.0 on real nodes, 0.0 on padding."""
@@ -184,6 +311,9 @@ def merge_ensembles(*ensembles: Ensemble) -> Ensemble:
     fs = {e.x0.shape[2] for e in ensembles}
     if len(fs) > 1:
         raise ValueError(f"trial-axis mismatch across ensembles: {sorted(fs)}")
+    if len({e.is_sparse for e in ensembles}) > 1:
+        raise ValueError("cannot merge dense and sparse ensembles; rebuild "
+                         "with a single SweepSpec layout")
     n_max = max(e.n_max for e in ensembles)
 
     def grow(a: np.ndarray, axes: tuple[int, ...]) -> np.ndarray:
@@ -198,8 +328,25 @@ def merge_ensembles(*ensembles: Ensemble) -> Ensemble:
         layout.extend((name, s + off, t + off) for name, s, t in e.layout)
         off += e.num_configs
 
+    if ensembles[0].is_sparse:
+        e_max = max(e.edges.shape[1] for e in ensembles)
+
+        def grow_edges(a: np.ndarray) -> np.ndarray:
+            pad = [(0, 0), (0, e_max - a.shape[1])] + [(0, 0)] * (a.ndim - 2)
+            return np.pad(a, pad)
+
+        weight_arrays = dict(
+            ws=None,
+            edges=np.concatenate([grow_edges(e.edges) for e in ensembles]),
+            edge_w=np.concatenate([grow_edges(e.edge_w) for e in ensembles]),
+            diag_w=np.concatenate([grow(e.diag_w, (1,)) for e in ensembles]),
+            edge_counts=np.concatenate([e.edge_counts for e in ensembles]),
+        )
+    else:
+        weight_arrays = dict(
+            ws=np.concatenate([grow(e.ws, (1, 2)) for e in ensembles]))
+
     return Ensemble(
-        ws=np.concatenate([grow(e.ws, (1, 2)) for e in ensembles]),
         x0=np.concatenate([grow(e.x0, (1,)) for e in ensembles]),
         coefs=np.concatenate(
             [np.pad(e.coefs, ((0, 0), (0, c_max - e.coefs.shape[1])))
@@ -207,6 +354,7 @@ def merge_ensembles(*ensembles: Ensemble) -> Ensemble:
         node_counts=np.concatenate([e.node_counts for e in ensembles]),
         configs=tuple(c for e in ensembles for c in e.configs),
         algos=tuple(layout),
+        **weight_arrays,
     )
 
 
@@ -220,45 +368,126 @@ def _init_block(g: topology.Graph, f: int, kind: str, rng: np.random.Generator) 
     return np.stack(cols[:f], axis=1)
 
 
+@dataclasses.dataclass
+class _GraphDraw:
+    """One graph draw: spectra + whichever weight representation(s) exist.
+
+    ``w`` is the dense base weight matrix — present in the dense layout AND
+    for sparse cells small enough to densify for metadata (keeping their
+    spectra/coefficients bit-identical to the dense layout). For larger
+    sparse cells ``w`` is None and ``vals`` is the surrogate spectrum.
+    """
+
+    family: str
+    gi: int
+    g: object                      # Graph | SparseGraph (.n, .coords for inits)
+    w: np.ndarray | None
+    vals: np.ndarray
+    lam2: float
+    rho_mem: float
+    edges: np.ndarray | None = None
+    edge_w: np.ndarray | None = None
+    diag_w: np.ndarray | None = None
+
+
+def _draw_dense(family: str, gi: int, n: int, rng) -> _GraphDraw:
+    g = _build_graph(family, n, rng)
+    w = weights.metropolis_hastings(g)
+    vals = np.linalg.eigvalsh(w)
+    if abs(vals[0]) > vals[-2]:
+        # Theorem 1 needs |lambda_N| <= lambda_2; lazy map fixes it.
+        w = weights.lazy(w)
+        vals = np.linalg.eigvalsh(w)
+    return _GraphDraw(family, gi, g, w, vals,
+                      lam2=float(vals[-2]),
+                      rho_mem=float(max(abs(vals[0]), abs(vals[-2]))))
+
+
+def _draw_sparse(family: str, gi: int, n: int, rng) -> _GraphDraw:
+    sg = _build_sparse_graph(family, n, rng)
+    if sg.n <= SPARSE_EXACT_SPECTRUM_CUTOFF:
+        # densify for METADATA only: the exact spectrum, lazy decision and
+        # edge weights then match the dense layout bit for bit
+        w = weights.metropolis_hastings(sg.to_dense())
+        vals = np.linalg.eigvalsh(w)
+        if abs(vals[0]) > vals[-2]:
+            w = weights.lazy(w)
+            vals = np.linalg.eigvalsh(w)
+        ew = w[sg.edges[:, 0], sg.edges[:, 1]].copy()
+        dw = np.diag(w).copy()
+        return _GraphDraw(family, gi, sg, w, vals,
+                          lam2=float(vals[-2]),
+                          rho_mem=float(max(abs(vals[0]), abs(vals[-2]))),
+                          edges=sg.edges, edge_w=ew, diag_w=dw)
+    ew, dw = weights.metropolis_hastings_edges(sg)
+    lam2, lam_n = weights.lambda_extremes_sparse(sg.edges, ew, dw)
+    if abs(lam_n) > lam2:
+        # lazy map in edge space; eigenvalues transform affinely
+        ew, dw = weights.lazy_edges(ew, dw)
+        lam2, lam_n = 0.5 * (1.0 + lam2), 0.5 * (1.0 + lam_n)
+    vals = _surrogate_spectrum(lam2, lam_n)
+    return _GraphDraw(family, gi, sg, None, vals,
+                      lam2=float(lam2),
+                      rho_mem=float(max(abs(lam_n), abs(lam2))),
+                      edges=sg.edges, edge_w=ew, diag_w=dw)
+
+
+def _base_edge_arrays(algo, d: _GraphDraw) -> tuple[np.ndarray, np.ndarray]:
+    """(edge_w, diag_w) of this algorithm's BASE matrix for a sparse cell."""
+    if d.w is not None:
+        bm = algo.base_matrix(d.w)
+        return bm[d.edges[:, 0], d.edges[:, 1]].copy(), np.diag(bm).copy()
+    return algo.base_edge_weights(d.edges, d.edge_w, d.diag_w, d.g.n)
+
+
 def build_ensemble(spec: SweepSpec) -> Ensemble:
     """Materialize the sweep grid of ``spec`` as stacked padded arrays."""
     rng = np.random.default_rng(spec.seed)
-    random_families = {"rgg", "erdos_renyi"}
+    random_families = {"rgg", "erdos_renyi", "ba"}
+    sparse = spec.resolved_layout == "sparse"
 
-    # (family, graph_index, graph, W, eigvals(W), lambda2, rho(W-J)) per draw
-    graphs = []
+    graphs: list[_GraphDraw] = []
     for family in spec.topologies:
+        fam = _parse_family(family)[0]
         for n in spec.sizes:
-            draws = spec.graph_trials if family in random_families else 1
+            draws = spec.graph_trials if fam in random_families else 1
             for gi in range(draws):
-                g = _build_graph(family, n, rng)
-                w = weights.metropolis_hastings(g)
-                vals = np.linalg.eigvalsh(w)
-                if abs(vals[0]) > vals[-2]:
-                    # Theorem 1 needs |lambda_N| <= lambda_2; lazy map fixes it.
-                    w = weights.lazy(w)
-                    vals = np.linalg.eigvalsh(w)
-                lam2 = float(vals[-2])
-                rho_mem = float(max(abs(vals[0]), abs(lam2)))
-                graphs.append((family, gi, g, w, vals, lam2, rho_mem))
+                graphs.append((_draw_sparse if sparse else _draw_dense)(
+                    family, gi, n, rng))
 
     if not graphs:
         raise ValueError("empty sweep grid")
-    n_max = max(g.n for _, _, g, *_ in graphs)
+    n_max = max(d.g.n for d in graphs)
+    e_max = max(1, max(len(d.edges) for d in graphs)) if sparse else 0
     f = spec.num_trials
 
     # one init block per graph, drawn in graph order and shared across the
     # design/algorithm/dynamics cells of that graph (common random numbers)
-    inits = [_init_block(g, f, spec.init, rng) for _, _, g, *_ in graphs]
+    inits = [_init_block(d.g, f, spec.init, rng) for d in graphs]
 
     ws, x0s, coefs, counts, metas, layout = [], [], [], [], [], []
+    edges_l, edge_w_l, diag_w_l, e_counts = [], [], [], []
 
     def add_cell(base, x0, n, params, meta):
-        wp = np.zeros((n_max, n_max), dtype=np.float32)
-        wp[:n, :n] = base
+        if sparse:
+            base_ew, base_dw, eix = base
+            e = len(eix)
+            ep = np.zeros((e_max, 2), dtype=np.int32)
+            ep[:e] = eix
+            ewp = np.zeros(e_max, dtype=np.float32)
+            ewp[:e] = base_ew
+            dwp = np.zeros(n_max, dtype=np.float32)
+            dwp[:n] = base_dw
+            edges_l.append(ep)
+            edge_w_l.append(ewp)
+            diag_w_l.append(dwp)
+            e_counts.append(e)
+        else:
+            wp = np.zeros((n_max, n_max), dtype=np.float32)
+            wp[:n, :n] = base
+            ws.append(wp)
         xp0 = np.zeros((n_max, f), dtype=np.float32)
         xp0[:n] = x0
-        ws.append(wp)
         x0s.append(xp0)
         coefs.append(np.asarray(params, dtype=np.float32))
         counts.append(n)
@@ -270,10 +499,13 @@ def build_ensemble(spec: SweepSpec) -> Ensemble:
     for algo_spec in spec.algorithms:
         algo = algorithms.get_algorithm(algo_spec)
         start = len(metas)
-        for (family, gi, g, w, vals, lam2, rho_mem), x0 in zip(graphs, inits):
-            n = g.n
+        for d, x0 in zip(graphs, inits):
+            n, vals, lam2, rho_mem = d.g.n, d.vals, d.lam2, d.rho_mem
+            if sparse:
+                base = (*_base_edge_arrays(algo, d), d.edges)
+            else:
+                base = algo.base_matrix(d.w)
             if algo.uses_theta:
-                base = algo.base_matrix(w)
                 for design in spec.designs:
                     maker = THETA_DESIGNS[design]
                     if maker is None:
@@ -295,7 +527,7 @@ def build_ensemble(spec: SweepSpec) -> Ensemble:
                             rho_acc = float(max(np.abs(mus).max(), abs(al * th.t1)))
                         for dyn in spec.dynamics:
                             add_cell(base, x0, n, params, ConfigMeta(
-                                topology=family, n=n, graph_index=gi,
+                                topology=d.family, n=n, graph_index=d.gi,
                                 design=design, theta=th, alpha=al, lam2=lam2,
                                 rho_memoryless=rho_mem, psi=1.0 - rho_mem,
                                 rho_accel=rho_acc, dynamics=dyn,
@@ -305,26 +537,39 @@ def build_ensemble(spec: SweepSpec) -> Ensemble:
                 # theta-free algorithms: one cell per (graph, dynamics) —
                 # the design axis does not apply (mirrors how the memoryless
                 # design ignores the alpha grid)
-                base = algo.base_matrix(w)
-                params = algo.cell_params(w, vals)
-                rho_tick = algo.tick_rho(lam2, rho_mem, w, vals)
+                params = algo.cell_params(d.w, vals)
+                if d.w is None:
+                    rho_tick = _sparse_tick_rho(algo, lam2, rho_mem, vals,
+                                                d.edges, n)
+                else:
+                    rho_tick = algo.tick_rho(lam2, rho_mem, d.w, vals)
                 for dyn in spec.dynamics:
                     add_cell(base, x0, n, params, ConfigMeta(
-                        topology=family, n=n, graph_index=gi, design=algo.spec,
-                        theta=None, alpha=0.0, lam2=lam2,
+                        topology=d.family, n=n, graph_index=d.gi,
+                        design=algo.spec, theta=None, alpha=0.0, lam2=lam2,
                         rho_memoryless=rho_mem, psi=1.0 - rho_mem,
                         rho_accel=rho_tick, dynamics=dyn, algorithm=algo.spec,
                     ))
         layout.append((algo.spec, start, len(metas)))
 
     c_max = max(1, max(len(c) for c in coefs))
+    if sparse:
+        weight_arrays = dict(
+            ws=None,
+            edges=np.stack(edges_l),
+            edge_w=np.stack(edge_w_l),
+            diag_w=np.stack(diag_w_l),
+            edge_counts=np.asarray(e_counts, dtype=np.int64),
+        )
+    else:
+        weight_arrays = dict(ws=np.stack(ws))
     return Ensemble(
-        ws=np.stack(ws),
         x0=np.stack(x0s),
         coefs=np.stack([np.pad(c, (0, c_max - len(c))) for c in coefs]),
         node_counts=np.asarray(counts, dtype=np.int64),
         configs=tuple(metas),
         algos=tuple(layout),
+        **weight_arrays,
     )
 
 
@@ -365,7 +610,7 @@ def build_round_masks(ens: Ensemble, num_iters: int, seed: int = 0) -> RoundMask
     if all(s.is_static for s in specs) and not any(a.needs_schedule for a in algos):
         return None
     g = ens.num_configs
-    idx_list = [dynamics.edge_index(ens.ws[i]) for i in range(g)]
+    idx_list = [ens.edge_index(i) for i in range(g)]
     e_max = max(1, max(len(ix) for ix in idx_list))
     bits = np.ones((num_iters, g, e_max), dtype=np.uint8)
     idx = np.zeros((g, e_max, 2), dtype=np.int32)

@@ -1,0 +1,64 @@
+"""Unit tests for the perf-gate comparison core (``benchmarks.run._gate_rows``).
+
+The gate compares like-for-like only: timings carry an execution ``mode``
+tag ("compiled" vs "pallas-interpret") and rows whose mode changed against
+the baseline are skipped, never ratioed — a baseline stamped in interpret
+mode on CPU must not hard-fail (or silently pass) a compiled TPU run.
+"""
+import benchmarks.run as bench_run
+
+
+def _row(name, us, mode=None):
+    r = {"bench": name, "us_per_call": us}
+    if mode is not None:
+        r["mode"] = mode
+    return r
+
+
+def test_gate_passes_within_ratio():
+    fresh = [_row("sweep_jax_G12", 120.0, "compiled")]
+    base = {"sweep_jax_G12": _row("sweep_jax_G12", 100.0, "compiled")}
+    lines, failures = bench_run._gate_rows(fresh, base, 1.5)
+    assert failures == []
+    assert any("ok" in ln for ln in lines)
+
+
+def test_gate_fails_on_regression():
+    fresh = [_row("sweep_jax_G12", 200.0, "compiled")]
+    base = {"sweep_jax_G12": _row("sweep_jax_G12", 100.0, "compiled")}
+    _, failures = bench_run._gate_rows(fresh, base, 1.5)
+    assert failures == [("sweep_jax_G12", 2.0)]
+
+
+def test_gate_skips_cross_mode_rows():
+    # 1000x "regression" that is really interpret-vs-compiled: must SKIP
+    fresh = [_row("gossip_round_fused", 100000.0, "pallas-interpret")]
+    base = {"gossip_round_fused": _row("gossip_round_fused", 100.0, "compiled")}
+    lines, failures = bench_run._gate_rows(fresh, base, 1.5)
+    assert failures == []
+    assert any("SKIP" in ln and "cross-mode" in ln for ln in lines)
+    # and the reverse direction (baseline interpret, fresh compiled)
+    fresh = [_row("gossip_round_fused", 100.0, "compiled")]
+    base = {"gossip_round_fused": _row(
+        "gossip_round_fused", 100000.0, "pallas-interpret")}
+    _, failures = bench_run._gate_rows(fresh, base, 1.5)
+    assert failures == []
+
+
+def test_gate_untagged_baseline_still_gates():
+    # pre-mode-tag baselines keep gating (no silent skip of real regressions)
+    fresh = [_row("ssd_chunked", 300.0, "compiled")]
+    base = {"ssd_chunked": _row("ssd_chunked", 100.0)}
+    _, failures = bench_run._gate_rows(fresh, base, 1.5)
+    assert failures == [("ssd_chunked", 3.0)]
+
+
+def test_gate_ignores_untracked_and_new_rows():
+    fresh = [
+        _row("simulator_numpy", 999999.0, "compiled"),   # not a gated prefix
+        _row("sweep_sparse_new", 50.0, "compiled"),      # no baseline row
+    ]
+    lines, failures = bench_run._gate_rows(fresh, {}, 1.5)
+    assert failures == []
+    assert any("NEW" in ln for ln in lines)
+    assert not any("simulator_numpy" in ln for ln in lines)
