@@ -1,0 +1,109 @@
+"""Directed & lossy figure: push-sum family vs memoryless on digraphs.
+
+Row-stochastic gossip on a directed graph converges to the Perron-weighted
+mixture of the initial values, not the average — the drift is structural,
+not noise. The push-sum family (``push_sum``, ``ratio_consensus:c``) runs a
+column-stochastic (value, mass) pair and displays their ratio, recovering
+the true average on any strongly connected digraph, and — with the engine's
+sender-side mask re-normalization — under i.i.d. link loss too.
+
+This benchmark runs the three algorithms over the ``directed`` family
+(directed-ring backbone + random extra arcs) under static and Bernoulli
+lossy dynamics as ONE jitted sweep, and reports per-cell final error
+against the true average plus sustained eps-averaging times. A warmed
+whole-grid timing row (``sweep_directed_*``, mode-tagged) keeps the lane
+comparable under the perf gate's like-for-like rules.
+
+Emits ``BENCH_fig_directed.json`` (+ CSV) via ``benchmarks.common.emit``.
+CI runs ``--quick`` on the pallas backend, which exercises the dense
+sender-renorm fallback seam inside the jitted scan end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.kernels import ops
+from repro.sweep import SweepSpec, build_ensemble, build_round_masks, run_ensemble
+
+from .common import emit
+
+ALGORITHMS = ("memoryless", "push_sum", "ratio_consensus:0.5")
+DYNAMICS = ("static", "bernoulli:0.1")
+
+QUICK = dict(size=16, graph_trials=2, num_trials=2, num_iters=300,
+             backend="pallas")
+
+
+def run(size=32, graph_trials=3, num_trials=2, num_iters=800, eps=1e-3,
+        backend="jax", seed=0):
+    spec = SweepSpec(
+        topologies=("directed",), sizes=(size,), designs=("memoryless",),
+        algorithms=ALGORITHMS, dynamics=DYNAMICS,
+        graph_trials=graph_trials, num_trials=num_trials,
+        layout="dense", init="paper", seed=seed,
+    )
+    ens = build_ensemble(spec)
+    masks = build_round_masks(ens, num_iters, seed=seed)
+
+    def _go():
+        return run_ensemble(ens, num_iters=num_iters, backend=backend,
+                            round_masks=masks)
+
+    res = _go()                         # warm: trace + compile
+    t0 = time.perf_counter()
+    res = _go()
+    us = (time.perf_counter() - t0) * 1e6
+    times = res.averaging_times(eps=eps, sustained=True)      # (G, F)
+    err = np.sqrt(np.maximum(res.mse[:, -1, :], 0.0))         # (G, F) rel err
+
+    pallas_mode = "pallas-interpret" if ops.use_interpret() else "compiled"
+    mode = pallas_mode if backend == "pallas" else "compiled"
+    nan = float("nan")
+    rows = []
+    for algo in ALGORITHMS:
+        for d in DYNAMICS:
+            idx = res.cells(algorithm=algo, dynamics=d)
+            e = float(np.mean([err[i, f] for i in idx
+                               for f in range(err.shape[1])]))
+            hits = [times[i, f] for i in idx for f in range(times.shape[1])
+                    if times[i, f] >= 0]
+            frac = len(hits) / (len(idx) * times.shape[1])
+            t_avg = float(np.mean(hits)) if hits else -1.0
+            rows.append({
+                "bench": f"directed_{algo}_{d}", "algorithm": algo,
+                "dynamics": d, "n": size, "err_final": e,
+                "frac_converged": frac, "t_avg": t_avg,
+                "mode": mode, "us_per_call": nan,
+            })
+            print(f"fig_directed[{algo} {d} n={size}]: err={e:.2e} "
+                  f"converged={frac:.0%} t_avg={t_avg:.0f}")
+    rows.append({
+        "bench": f"sweep_directed_{backend}_G{ens.num_configs}x{num_iters}it",
+        "algorithm": "all", "dynamics": "all", "n": size,
+        "err_final": nan, "frac_converged": nan, "t_avg": nan,
+        "mode": mode, "us_per_call": us,
+    })
+    emit("fig_directed", rows)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: toy sizes on the pallas backend")
+    ap.add_argument("--backend", default=None, choices=["jax", "pallas"])
+    ap.add_argument("--size", type=int, default=None)
+    a = ap.parse_args(argv)
+    kw = dict(QUICK) if a.quick else {}
+    if a.backend is not None:
+        kw["backend"] = a.backend
+    if a.size is not None:
+        kw["size"] = a.size
+    run(**kw)
+
+
+if __name__ == "__main__":
+    main()

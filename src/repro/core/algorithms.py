@@ -46,6 +46,18 @@ Seed algorithms:
   is exactly the Boyd pairwise matrix — 0.5 on the woken pair, identity
   elsewhere. One engine, one kernel, zero new scan paths.
 
+* ``push_sum`` / ``ratio_consensus[:c]`` — the directed/lossy family: both
+  carry a two-state (value, mass-counter) tuple against a COLUMN-stochastic
+  base matrix (``weights.push_sum_weights`` / ``ratio_consensus_weights``)
+  and display the ratio s/w, which converges to the true average on strongly
+  connected digraphs where the row-stochastic family converges to a
+  Perron-weighted mixture. Their ``invariant`` is total-mass (not mean)
+  conservation, and their ``mass_renorm = "sender"`` keeps dropped edge mass
+  with the SENDER's diagonal under failure masks — column sums survive every
+  mask, so the ratio still finds the average under packet loss
+  (Kempe-Dobra-Gehrke push-sum; the sigma/rho mass counters of
+  ratio-consensus).
+
 Tick-fairness convention (also in ROADMAP): one engine round = one tick of
 the algorithm's own clock — a W-multiply for the synchronous family, a
 single pairwise exchange for ``async_pairwise``. Cross-algorithm comparisons
@@ -53,11 +65,12 @@ normalize by communication: one W-multiply activates every edge once, so
 E pairwise exchanges are charged as one synchronous tick
 (``benchmarks/fig_async.py`` reports both raw exchanges and ticks).
 
-The full authoring guide — carry layout, the layout-polymorphic
-``prim(x, xp, coef)`` contract (dense einsum, fused Pallas kernel, AND the
-sparse segment-sum path all satisfy it), host-reference requirements, and
-the conformance suite a registration inherits — is in
-``docs/REGISTERING_ALGORITHMS.md``.
+The full authoring guide — carry layout, the ``display`` transform, the
+invariant-class declaration (``invariant`` / ``mass_renorm`` /
+``symmetric_base``), the layout-polymorphic ``prim(x, xp, coef)`` contract
+(dense einsum, fused Pallas kernel, AND the sparse segment-sum path all
+satisfy it), host-reference requirements, and the conformance suite a
+registration inherits — is in ``docs/REGISTERING_ALGORITHMS.md``.
 """
 from __future__ import annotations
 
@@ -71,6 +84,8 @@ __all__ = [
     "TwoTapAccel",
     "PolyFilterAlgorithm",
     "AsyncPairwise",
+    "PushSum",
+    "RatioConsensus",
     "register_algorithm",
     "registered_algorithms",
     "get_algorithm",
@@ -90,11 +105,26 @@ class ConsensusAlgorithm:
 
     name: str = "?"            # base registry name
     spec: str = "?"            # full spec string, e.g. "poly_filter:4"
-    num_taps: int = 1          # scan-carry state slots; slot 0 is displayed
+    num_taps: int = 1          # scan-carry state slots (see ``display``)
     num_coefs: int = 0         # width of this algorithm's per-cell param row
     uses_theta: bool = False   # crossed with the (theta design x alpha) axis?
     needs_schedule: bool = False  # requires per-tick edge bits even when static
     pallas_round = None        # optional kernel-primitive override hook
+    # Which conservation law the conformance suite holds this algorithm to:
+    # "mean" (doubly-stochastic family: the display state's node mean is the
+    # initial mean, round by round) or "mass" (push-sum family: the TOTAL of
+    # every carry tap is conserved; the displayed ratio converges to the
+    # average but its node mean is not itself invariant).
+    invariant: str = "mean"
+    # Where a failure-masked edge's weight returns under the engine's
+    # mass-preserving masking rule: "receiver" adds W_ij to receiver i's
+    # diagonal (row sums survive — right for the row/doubly-stochastic
+    # family), "sender" adds it to sender j's diagonal (column sums survive —
+    # required by the mass-conserving family above).
+    mass_renorm: str = "receiver"
+    # False when base_matrix is asymmetric (column-stochastic family): the
+    # sparse layout then stores both per-direction edge weights.
+    symmetric_base: bool = True
 
     # -- grid-construction hooks (host, numpy) ------------------------------
     def base_matrix(self, w: np.ndarray) -> np.ndarray:
@@ -155,14 +185,26 @@ class ConsensusAlgorithm:
     def init_carry(self, x0):
         return (x0,) * self.num_taps
 
+    def display(self, carry):
+        """User-visible estimate from a carry tuple (jnp, trace time).
+
+        The MSE reduction and ``SweepResult.x_final`` read THIS, every tick.
+        Default: carry slot 0 — the contract every pre-existing registration
+        was written against. Ratio-state algorithms (push-sum family)
+        override it to return the value/mass quotient; overrides must map
+        all-zero carry rows (padded nodes) to exactly 0.0.
+        """
+        return carry[0]
+
     def round_body(self, prim, params, carry, t):
         """One tick on this algorithm's grid partition.
 
         ``prim(x, xp, coef3)`` computes ``a*(W_eff@x) + b*x + c*xp`` with
         coef3 a traced (Gp, 3) row batch and W_eff this tick's (masked)
         partition weights; ``params`` is the (Gp, C) static param rows;
-        ``t`` the traced tick index. Returns the new carry tuple; carry[0]
-        is the display state the MSE reduction reads.
+        ``t`` the traced tick index. Returns the new carry tuple; the
+        engine passes it through ``display`` (default: carry[0]) for the
+        MSE reduction.
         """
         raise NotImplementedError
 
@@ -411,6 +453,124 @@ class AsyncPairwise(ConsensusAlgorithm):
         return super().reference_run(w, x0, params, num_iters, bits, idx, dtype)
 
 
+class _RatioStateAlgorithm(ConsensusAlgorithm):
+    """Shared machinery of the column-stochastic (value, mass) family.
+
+    Carry: ``(s, w)`` — the value state seeded with x0 and the mass counter
+    seeded with 1 at every node. Each tick multiplies BOTH by the same
+    effective matrix (two fused rounds per tick, one shared mask), and the
+    display is the quotient s/w. Because the base matrix is column
+    stochastic and the mask rule is sender-renormalizing, the totals of s
+    and of w survive every failure pattern; the quotient converges to
+    sum(x0)/N on any strongly connected support. Subclasses supply the dense
+    and edge-space weight builders.
+    """
+
+    num_taps = 2
+    invariant = "mass"
+    mass_renorm = "sender"
+    symmetric_base = False
+
+    # tiny mass cutoff for the displayed quotient: below it the node has
+    # received nothing yet (or is padding) and displays 0 instead of 0/0
+    _MASS_FLOOR = 1e-12
+
+    def init_carry(self, x0):
+        import jax.numpy as jnp
+
+        return (x0, jnp.ones_like(x0))
+
+    def display(self, carry):
+        import jax.numpy as jnp
+
+        s, w = carry
+        safe = jnp.abs(w) > self._MASS_FLOOR
+        return jnp.where(safe, s, 0.0) / jnp.where(safe, w, 1.0)
+
+    def round_body(self, prim, params, carry, t):
+        s, w = carry
+        coef = _coef_rows(s.shape[0], 1.0, 0.0, 0.0)
+        return (prim(s, s, coef), prim(w, w, coef))
+
+    def reference_run(self, w, x0, params, num_iters, bits=None, idx=None,
+                      dtype=np.float64):
+        """Two-state host oracle: per-tick sender-renormalized masked P.
+
+        Mirrors the engine tick for tick — P_eff(t) multiplies both the
+        value and the mass state, and the MSE is measured on the displayed
+        quotient against the true initial average.
+        """
+        bits, idx = _full_bits(w, num_iters, bits, idx)
+        s = np.asarray(x0, dtype=dtype)
+        squeeze = s.ndim == 1
+        if squeeze:
+            s = s[:, None]
+        m = np.ones_like(s)
+        xbar = s.mean(axis=0, keepdims=True)
+
+        def disp(sv, mv):
+            safe = np.abs(mv) > self._MASS_FLOOR
+            return np.where(safe, sv, 0.0) / np.where(safe, mv, 1.0)
+
+        mse = [((disp(s, m) - xbar) ** 2).mean(axis=0)]
+        wd = np.asarray(w, dtype=dtype)
+        for t in range(bits.shape[0]):
+            weff = dynamics.masked_w(wd, bits[t], idx, renorm="sender")
+            s = (weff @ s).astype(dtype)
+            m = (weff @ m).astype(dtype)
+            mse.append(((disp(s, m) - xbar) ** 2).mean(axis=0))
+        x = disp(s, m)
+        if squeeze:
+            x = x[:, 0]
+        return x, np.stack(mse)
+
+
+class PushSum(_RatioStateAlgorithm):
+    """Kempe-Dobra-Gehrke push-sum: uniform column-stochastic push weights.
+
+    Node j pushes share 1/(1 + dout_j) of its (value, mass) pair to each
+    out-neighbour and itself; the displayed quotient converges to the true
+    average on strongly connected digraphs where ``memoryless`` lands on the
+    Perron-weighted mixture instead.
+    """
+
+    name = spec = "push_sum"
+
+    def base_matrix(self, w):
+        return weights.push_sum_weights(w)
+
+    def base_edge_weights(self, edges, edge_w, diag_w, n):
+        return weights.push_sum_weights_edges(edges, n)
+
+
+class RatioConsensus(_RatioStateAlgorithm):
+    """Loss-robust ratio consensus (sigma/rho mass counters) with self-mass c.
+
+    ``ratio_consensus[:c]``: node j keeps fraction c of its mass per tick
+    and splits 1 - c uniformly over out-neighbours. Under the sender-renorm
+    mask rule an un-delivered share simply stays in the sender's running
+    totals — the matrix form of the sigma/rho counter scheme, where receivers
+    difference cumulative counters so lost packets delay but never destroy
+    mass. The quotient therefore converges to the true average under i.i.d.
+    AND correlated packet loss.
+    """
+
+    name = "ratio_consensus"
+
+    def __init__(self, c: float = 0.5):
+        if not 0.0 < c < 1.0:
+            raise ValueError(
+                f"ratio_consensus self-mass must be in (0, 1), got {c}")
+        self.c = float(c)
+        self.spec = f"ratio_consensus:{self.c}"
+
+    def base_matrix(self, w):
+        return weights.ratio_consensus_weights(w, self.c)
+
+    def base_edge_weights(self, edges, edge_w, diag_w, n):
+        return weights.ratio_consensus_weights_edges(edges, n, self.c)
+
+
 # ---------------------------------------------------------------------------
 # Registry.
 # ---------------------------------------------------------------------------
@@ -503,3 +663,6 @@ register_algorithm(
     "poly_filter", lambda degree="3", ridge="0.0":
     PolyFilterAlgorithm(degree=int(degree), ridge=float(ridge)))
 register_algorithm("async_pairwise", AsyncPairwise)
+register_algorithm("push_sum", PushSum)
+register_algorithm("ratio_consensus",
+                   lambda c="0.5": RatioConsensus(c=float(c)))

@@ -31,6 +31,16 @@ Schedules (all produce per-round edge bits; 1 = link up):
   edge is live iff both endpoints are up. A down node keeps its value
   (mass-preserving re-weighting above), so returning nodes rejoin without
   biasing the average.
+* ``correlated:p[:blocks[:period]]`` — correlated/adversarial regional
+  outages: nodes are partitioned into ``blocks`` contiguous index blocks
+  (contiguous indices ARE geographic blocks on the lattice families — chain
+  and grid2d number nodes in spatial row-major order), each block goes down
+  w.p. p per ``period``-round window and stays down for the whole window,
+  and an edge is dead iff EITHER endpoint's block is down. Unlike bernoulli,
+  failures arrive in large simultaneous slabs — partition events when two or
+  more blocks drop at once — which is the loss pattern that separates
+  mass-conserving (push-sum-style) registrations from ones that merely
+  tolerate i.i.d. erasures.
 * ``static``       — all edges up every round (the paper's regime).
 
 Schedules are sampled on the host with a numpy RNG keyed by the *graph*
@@ -68,20 +78,24 @@ __all__ = [
 class DynamicsSpec:
     """One parsed topology schedule (see module docstring for the kinds)."""
 
-    kind: str          # "static" | "bernoulli" | "rewire" | "churn"
-    p: float = 0.0     # failure probability (per-edge or per-node, by kind)
-    period: int = 1    # rewire: rounds between redraws of the failure set
+    kind: str          # "static" | "bernoulli" | "rewire" | "churn" | "correlated"
+    p: float = 0.0     # failure probability (per-edge, per-node or per-block)
+    period: int = 1    # rewire/correlated: rounds between redraws
+    blocks: int = 4    # correlated: number of contiguous geographic blocks
 
     def __post_init__(self):
-        if self.kind not in ("static", "bernoulli", "rewire", "churn"):
+        if self.kind not in ("static", "bernoulli", "rewire", "churn",
+                             "correlated"):
             raise ValueError(
                 f"unknown dynamics kind {self.kind!r} "
-                f"(have static/bernoulli/rewire/churn)"
+                f"(have static/bernoulli/rewire/churn/correlated)"
             )
         if not 0.0 <= self.p <= 1.0:
             raise ValueError(f"failure probability must be in [0, 1], got {self.p}")
         if self.period < 1:
             raise ValueError(f"rewire period must be >= 1, got {self.period}")
+        if self.blocks < 1:
+            raise ValueError(f"correlated needs >= 1 block, got {self.blocks}")
 
     @property
     def is_static(self) -> bool:
@@ -106,8 +120,16 @@ def parse_dynamics(spec: str | DynamicsSpec) -> DynamicsSpec:
         if len(parts) != 3:
             raise ValueError(f"rewire needs 'rewire:p:period', got {spec!r}")
         return DynamicsSpec(kind, p=float(parts[1]), period=int(parts[2]))
+    if kind == "correlated":
+        if not 2 <= len(parts) <= 4:
+            raise ValueError(
+                f"correlated needs 'correlated:p[:blocks[:period]]', got {spec!r}")
+        return DynamicsSpec(
+            kind, p=float(parts[1]),
+            blocks=int(parts[2]) if len(parts) > 2 else 4,
+            period=int(parts[3]) if len(parts) > 3 else 1)
     raise ValueError(f"unknown dynamics kind {kind!r} in {spec!r} "
-                     f"(have static/bernoulli/rewire/churn)")
+                     f"(have static/bernoulli/rewire/churn/correlated)")
 
 
 def edge_index(w: np.ndarray) -> np.ndarray:
@@ -115,9 +137,14 @@ def edge_index(w: np.ndarray) -> np.ndarray:
 
     Deterministic row-major order, so two cells built from the same graph get
     identical edge orderings — the invariant the coupled-RNG sampling relies
-    on. Zero-padded rows/cols contribute no edges.
+    on. Zero-padded rows/cols contribute no edges. The support is symmetrized
+    (|W| + |W|^T) before the triangle is read, so an asymmetric
+    (column-stochastic / directed) W yields one undirected mask slot per node
+    PAIR — masking a pair kills whichever arcs exist — and a symmetric W is
+    unchanged.
     """
-    i, j = np.nonzero(np.triu(np.abs(np.asarray(w)), k=1))
+    a = np.abs(np.asarray(w))
+    i, j = np.nonzero(np.triu(a + a.T, k=1))
     return np.stack([i, j], axis=1).astype(np.int32)
 
 
@@ -143,7 +170,10 @@ def sample_edge_bits(
     Always consumes the same uniforms from ``rng`` in the same order —
     (R, E) edge uniforms then (R, N) node uniforms — regardless of kind, so
     different specs sampled from clones of one graph-keyed stream stay
-    coupled (bits at p' >= p are a subset of bits at p).
+    coupled (bits at p' >= p are a subset of bits at p). ``correlated`` draws
+    its (R, blocks) block uniforms AFTER the two standard arrays, preserving
+    the consumption prefix every pre-existing kind relies on while keeping
+    correlated outages themselves nested across p.
     """
     spec = parse_dynamics(spec)
     e = len(idx)
@@ -156,25 +186,51 @@ def sample_edge_bits(
     if spec.kind == "rewire":
         held = (np.arange(num_rounds) // spec.period) * spec.period
         return (u_edges[held] >= spec.p).astype(np.uint8)
+    if spec.kind == "correlated":
+        # contiguous index blocks == geographic blocks on the lattice
+        # families; a block outage is held for a whole period window and an
+        # edge dies with EITHER endpoint's block (partition events included)
+        u_blocks = rng.random((num_rounds, spec.blocks))
+        held = (np.arange(num_rounds) // spec.period) * spec.period
+        block_up = u_blocks[held] >= spec.p                    # (R, B)
+        blk = np.minimum(
+            (idx.astype(np.int64) * spec.blocks) // max(num_nodes, 1),
+            spec.blocks - 1)                                   # (E, 2)
+        return (block_up[:, blk[:, 0]] & block_up[:, blk[:, 1]]).astype(np.uint8)
     # churn: edge live iff both endpoints are up this round
     up = u_nodes >= spec.p
     return (up[:, idx[:, 0]] & up[:, idx[:, 1]]).astype(np.uint8)
 
 
-def masked_w(w: np.ndarray, bits: np.ndarray, idx: np.ndarray) -> np.ndarray:
+def masked_w(w: np.ndarray, bits: np.ndarray, idx: np.ndarray,
+             renorm: str = "receiver") -> np.ndarray:
     """One round's re-normalized effective matrix W_eff (numpy reference).
 
     ``bits`` is the (E,) activity row for this round, ``idx`` the (E, 2)
-    edge list. Dropped weight returns to both endpoint diagonals, keeping
-    W_eff symmetric doubly stochastic (module docstring).
+    edge list. ``renorm`` picks where a dropped entry W_ij goes:
+
+    * ``"receiver"`` (default) — W_ij returns to RECEIVER i's diagonal
+      (row-sum-preserving). On a symmetric doubly-stochastic W this is also
+      the sender's diagonal, so W_eff stays symmetric doubly stochastic
+      (module docstring) and the mean is conserved.
+    * ``"sender"`` — W_ij returns to SENDER j's diagonal
+      (column-sum-preserving): the un-delivered share of node j's mass stays
+      with node j instead of inflating the receiver's self-weight. This is
+      the loss model of push-sum / ratio-consensus, where the masked W_eff
+      must remain column stochastic for total mass to be conserved — the
+      symmetric diagonal rule would silently break exactly the invariant
+      those algorithms exist to keep.
     """
+    if renorm not in ("receiver", "sender"):
+        raise ValueError(f"unknown mask renorm {renorm!r} (receiver/sender)")
     w = np.asarray(w)
     m = np.ones_like(w)
     b = np.asarray(bits, dtype=w.dtype)
     m[idx[:, 0], idx[:, 1]] = b
     m[idx[:, 1], idx[:, 0]] = b
     weff = w * m
-    drop = (w * (1.0 - m)).sum(axis=1)
+    dropped = w * (1.0 - m)
+    drop = dropped.sum(axis=1) if renorm == "receiver" else dropped.sum(axis=0)
     np.fill_diagonal(weff, weff.diagonal() + drop)
     return weff
 

@@ -26,6 +26,7 @@ import numpy as np
 
 __all__ = [
     "Graph",
+    "DiGraph",
     "SparseGraph",
     "chain",
     "ring",
@@ -36,7 +37,10 @@ __all__ = [
     "star",
     "hypercube",
     "erdos_renyi",
+    "erdos_renyi_sparse",
+    "random_digraph",
     "is_connected",
+    "is_strongly_connected",
     "diameter",
     "sparse_chain",
     "sparse_ring",
@@ -183,6 +187,118 @@ def erdos_renyi(n: int, p: float, rng: np.random.Generator) -> Graph:
     # every draw degenerates to (nearly) complete with doubled entries.
     a = np.triu(u < p, 1).astype(np.float64)
     return _finalize(a + a.T, "erdos_renyi")
+
+
+def erdos_renyi_sparse(
+    n: int,
+    p: float,
+    rng: np.random.Generator,
+    max_tries: int = 200,
+) -> SparseGraph:
+    """G(n, p) as an edge list in O(E) — the large-N twin of ``erdos_renyi``.
+
+    Uses Batagelj-Brandes geometric-skip sampling over the lexicographic
+    upper-triangular pair order: instead of flipping all n(n-1)/2 coins, draw
+    geometric gaps between successes, so work and memory are O(E + tries).
+    The resulting edge list is canonical (i < j, lexsorted) by construction.
+
+    NOTE on coupling: this sampler consumes the rng *differently* from the
+    dense ``erdos_renyi`` (which draws an (n, n) uniform block), so the two
+    do NOT produce the same graph for the same rng state. The grid therefore
+    keeps densifying below ``SPARSE_EXACT_SPECTRUM_CUTOFF`` (preserving the
+    dense<->sparse CRN anchor) and uses this sampler only above it, where the
+    dense twin cannot run at all. Resamples until connected, like ``rgg``.
+    """
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"erdos_renyi_sparse needs p in (0, 1], got {p}")
+    total = n * (n - 1) // 2
+    log1mp = np.log1p(-p) if p < 1.0 else None
+    # row starts in the flattened i<j pair order: pair k of row i is (i, i+1+k)
+    row_start = np.concatenate([[0], np.cumsum(np.arange(n - 1, 0, -1))])
+    for _ in range(max_tries):
+        if p >= 1.0:
+            picks = np.arange(total, dtype=np.int64)
+        else:
+            # expected E + O(sqrt(E)) geometric gaps, drawn in chunks
+            chunks, pos = [], -1
+            est = int(total * p + 10 * np.sqrt(total * p + 1)) + 16
+            while pos < total:
+                u = rng.random(est)
+                gaps = 1 + np.floor(np.log1p(-u) / log1mp).astype(np.int64)
+                idx = pos + np.cumsum(gaps)
+                chunks.append(idx)
+                pos = int(idx[-1])
+            picks = np.concatenate(chunks)
+            picks = picks[picks < total]
+        i = np.searchsorted(row_start, picks, side="right") - 1
+        j = picks - row_start[i] + i + 1
+        edges = np.stack([i, j], axis=1).astype(np.int32)
+        if edges_are_connected(n, edges):
+            return SparseGraph(n=n, edges=edges, name="erdos_renyi")
+    raise RuntimeError(f"could not draw a connected sparse G({n}, {p:.4f}) "
+                       f"in {max_tries} tries")
+
+
+@dataclasses.dataclass(frozen=True)
+class DiGraph:
+    """A directed communication graph in receiver convention.
+
+    ``adjacency[i, j] = 1`` iff node i can RECEIVE from node j (arc j -> i) —
+    the same orientation as a weight matrix entry W_ij in the engine's
+    ``x <- W x`` rounds. Zero diagonal.
+    """
+
+    adjacency: np.ndarray
+    name: str
+    coords: np.ndarray | None = None
+
+    @property
+    def n(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def in_degrees(self) -> np.ndarray:
+        """Arcs INTO each node (row sums): how many neighbours it hears."""
+        return self.adjacency.sum(axis=1)
+
+    @property
+    def out_degrees(self) -> np.ndarray:
+        """Arcs OUT of each node (column sums): how many neighbours hear it."""
+        return self.adjacency.sum(axis=0)
+
+    @property
+    def num_arcs(self) -> int:
+        return int(self.adjacency.sum())
+
+
+def random_digraph(
+    n: int, rng: np.random.Generator, p_extra: float = 0.15
+) -> DiGraph:
+    """Strongly connected random digraph: directed ring + extra random arcs.
+
+    The directed ring backbone (arc i -> i+1 mod n) guarantees strong
+    connectivity for every draw — no rejection loop — and each remaining
+    ordered pair gains an arc independently w.p. ``p_extra``. This is the
+    regime where row-stochastic averaging converges to a *non-uniform*
+    Perron-weighted mixture instead of the true average, i.e. the testbed
+    for push-sum / ratio-consensus corrections.
+    """
+    if n < 2:
+        raise ValueError("random_digraph needs n >= 2")
+    u = rng.random((n, n))
+    a = (u < p_extra).astype(np.float64)
+    np.fill_diagonal(a, 0.0)
+    idx = np.arange(n)
+    a[(idx + 1) % n, idx] = 1.0      # receiver convention: row i+1 hears i
+    ang = 2 * np.pi * np.arange(n) / n
+    coords = 0.5 + 0.5 * np.stack([np.cos(ang), np.sin(ang)], axis=1)
+    return DiGraph(adjacency=a, name="directed", coords=coords)
+
+
+def is_strongly_connected(adjacency: np.ndarray) -> bool:
+    """Every node reaches every node along arcs: BFS on A and on A^T."""
+    a = np.asarray(adjacency)
+    return is_connected(a) and is_connected(a.T)
 
 
 def random_geometric(

@@ -22,12 +22,26 @@ __all__ = [
     "best_constant",
     "optimal_weights",
     "check_consensus_matrix",
+    "check_column_stochastic",
     "averaging_matrix",
     "metropolis_hastings_edges",
     "lazy_edges",
     "sparse_matvec",
     "lambda_extremes_sparse",
+    "receiver_weights",
+    "push_sum_weights",
+    "ratio_consensus_weights",
+    "push_sum_weights_edges",
+    "ratio_consensus_weights_edges",
 ]
+
+
+def _support(adjacency) -> np.ndarray:
+    """Off-diagonal 0/1 support of a Graph/DiGraph/raw matrix (receiver conv.)."""
+    a = getattr(adjacency, "adjacency", adjacency)
+    s = (np.abs(np.asarray(a, dtype=np.float64)) > 0).astype(np.float64)
+    np.fill_diagonal(s, 0.0)
+    return s
 
 
 def averaging_matrix(n: int) -> np.ndarray:
@@ -133,6 +147,114 @@ def optimal_weights(
         if verbose and t % 100 == 0:
             print(f"  opt_weights iter {t}: rho={rho:.6f} best={best_rho:.6f}")
     return build(best_w_e)
+
+
+# ---------------------------------------------------------------------------
+# Directed / column-stochastic constructions (push-sum family).
+#
+# Receiver convention throughout: W_ij is the weight node i puts on node j's
+# state in x <- W x, so "column j sums to 1" means node j's MASS is split
+# exactly among its listeners — the invariant push-sum / ratio-consensus
+# need (total mass conserved), dual to the row-sum-1 invariant the
+# doubly-stochastic family relies on (consensus fixed points).
+# ---------------------------------------------------------------------------
+
+
+def receiver_weights(adjacency) -> np.ndarray:
+    """Naive row-stochastic weights on a digraph: W_ij = 1/(1 + din_i).
+
+    Each node averages what it HEARS, uniformly over in-neighbours + itself.
+    Row sums are 1 (so it reaches consensus on a strongly connected digraph),
+    but column sums are not — the limit is the Perron-weighted mixture
+    v^T x(0), NOT the average, unless the digraph happens to be balanced.
+    This is the "naive masked path" baseline the directed benchmarks show
+    drifting; ``push_sum_weights`` is the correction.
+    """
+    s = _support(adjacency)
+    din = s.sum(axis=1)
+    w = s / (1.0 + din)[:, None]
+    np.fill_diagonal(w, 1.0 / (1.0 + din))
+    return w
+
+
+def push_sum_weights(adjacency) -> np.ndarray:
+    """Column-stochastic push-sum weights: P_ij = P_jj = 1/(1 + dout_j).
+
+    Node j pushes an equal share of its (value, mass) pair to every
+    out-neighbour and itself. Columns sum to exactly 1, so total mass is
+    conserved and the ratio state s/w converges to the true average on any
+    strongly connected digraph (Kempe-Dobra-Gehrke); rows need not sum to 1.
+    On an undirected graph dout is the degree and P is the classic uniform
+    push matrix.
+    """
+    s = _support(adjacency)
+    dout = s.sum(axis=0)
+    p = s / (1.0 + dout)[None, :]
+    np.fill_diagonal(p, 1.0 / (1.0 + dout))
+    return p
+
+
+def ratio_consensus_weights(adjacency, c: float = 0.5) -> np.ndarray:
+    """Column-stochastic ratio-consensus weights with self-mass c.
+
+    P_jj = c and P_ij = (1 - c)/dout_j on arcs j -> i: node j keeps fraction
+    ``c`` of its mass and splits the rest uniformly over out-neighbours (the
+    sigma/rho mass-counter scheme). Larger ``c`` is lazier but more robust to
+    bursty loss; c = 1/2 is the usual default.
+    """
+    if not 0.0 < c < 1.0:
+        raise ValueError(f"ratio_consensus self-mass must be in (0, 1), got {c}")
+    s = _support(adjacency)
+    dout = s.sum(axis=0)
+    safe = np.maximum(dout, 1.0)
+    p = s * ((1.0 - c) / safe)[None, :]
+    # an isolated column (no listeners) keeps all of its mass on itself
+    np.fill_diagonal(p, np.where(dout > 0, c, 1.0))
+    return p
+
+
+def push_sum_weights_edges(
+    edges: np.ndarray, n: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Edge-space twin of ``push_sum_weights`` on an undirected edge list.
+
+    Returns ``(fwd, rev, diag)``: for canonical edge k = (i, j) with i < j,
+    ``fwd[k] = P_ij`` (i's weight on j) and ``rev[k] = P_ji`` (j's weight on
+    i) — the two directions differ whenever deg_i != deg_j, which is why the
+    symmetric (edge_w, diag_w) pair cannot carry this family.
+    """
+    edges = np.asarray(edges)
+    deg = np.bincount(edges.ravel(), minlength=n).astype(np.float64)
+    i, j = edges[:, 0], edges[:, 1]
+    fwd = 1.0 / (1.0 + deg[j])
+    rev = 1.0 / (1.0 + deg[i])
+    return fwd, rev, 1.0 / (1.0 + deg)
+
+
+def ratio_consensus_weights_edges(
+    edges: np.ndarray, n: int, c: float = 0.5
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Edge-space twin of ``ratio_consensus_weights`` (see above for layout)."""
+    if not 0.0 < c < 1.0:
+        raise ValueError(f"ratio_consensus self-mass must be in (0, 1), got {c}")
+    edges = np.asarray(edges)
+    deg = np.bincount(edges.ravel(), minlength=n).astype(np.float64)
+    safe = np.maximum(deg, 1.0)
+    i, j = edges[:, 0], edges[:, 1]
+    fwd = (1.0 - c) / safe[j]
+    rev = (1.0 - c) / safe[i]
+    return fwd, rev, np.where(deg > 0, c, 1.0)
+
+
+def check_column_stochastic(w: np.ndarray, atol: float = 1e-8) -> None:
+    """Assert column sums 1 and nonnegativity — the mass-conservation analog
+    of ``check_consensus_matrix``. Raises on violation."""
+    w = np.asarray(w)
+    one = np.ones(w.shape[0])
+    if not np.allclose(one @ w, one, atol=atol):
+        raise ValueError("1^T W != 1^T (column sums): total mass not conserved")
+    if np.min(w) < -atol:
+        raise ValueError("negative weight entries in a push-sum-style matrix")
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,7 @@ __all__ = [
     "gossip",
     "accel_gossip",
     "pairwise_gossip",
+    "push_sum_gossip",
     "algorithm_gossip",
     "distributed_lambda2",
     "default_doi_iters",
@@ -369,6 +370,59 @@ def pairwise_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int,
     return x
 
 
+def push_sum_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int,
+                    drop_mask=None):
+    """Kempe-Dobra-Gehrke push-sum over the fabric's support, in-mesh.
+
+    Each pod carries a (value, mass) pair — the value seeded with its block,
+    the mass with 1 — and per round both ride the SAME exchanges under the
+    column-stochastic push matrix ``weights.push_sum_weights`` built on the
+    fabric's support. The returned estimate is the quotient value/mass.
+
+    ``drop_mask`` (num_rounds, num_matchings), 1 = delivered, uses SENDER
+    renormalization: a failed matching's share stays in the sending pod's
+    own pair (column sums — total value and total mass — survive every
+    failure pattern), unlike ``gossip``'s receiver rule which preserves row
+    sums. The quotient therefore still converges to the true mean under
+    sustained loss, where the memoryless receiver rule drifts.
+    """
+    pm = weights.push_sum_weights(fabric.w)
+    idx = jax.lax.axis_index(axis_name)
+    diag = jnp.asarray(np.diag(pm), x.dtype)
+    packs = []
+    for perm, wvec in edge_permutations(pm):
+        svec = np.zeros(pm.shape[0], dtype=pm.dtype)
+        for s, d in perm:
+            svec[s] = pm[d, s]           # the share s fails to deliver to d
+        packs.append((perm, jnp.asarray(wvec, x.dtype),
+                      jnp.asarray(svec, x.dtype)))
+    if drop_mask is not None:
+        drop_mask = jnp.asarray(drop_mask, x.dtype)
+        if drop_mask.shape != (num_rounds, len(packs)):
+            raise ValueError(
+                f"drop_mask shape {drop_mask.shape} != (num_rounds, "
+                f"num_matchings) = ({num_rounds}, {len(packs)})"
+            )
+
+    def tick(v, live):
+        out = diag[idx] * v
+        for k, (perm, wvec, svec) in enumerate(packs):
+            recv = jax.lax.ppermute(v, axis_name, perm)
+            if live is None:
+                out = out + wvec[idx] * recv
+            else:
+                out = (out + wvec[idx] * live[k] * recv
+                       + svec[idx] * (1.0 - live[k]) * v)
+        return out
+
+    m = jnp.ones_like(x)
+    for r in range(num_rounds):
+        live = None if drop_mask is None else drop_mask[r]
+        x, m = tick(x, live), tick(m, live)
+    safe = jnp.abs(m) > 1e-12
+    return jnp.where(safe, x, 0.0) / jnp.where(safe, m, 1.0)
+
+
 def algorithm_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int,
                      algorithm: str = "accel", **kwargs):
     """Run ``num_rounds`` of a *registered* consensus algorithm in-mesh.
@@ -397,6 +451,7 @@ def _register_dist_variants():
     register_dist_variant("memoryless", gossip)
     register_dist_variant("accel", accel_gossip)
     register_dist_variant("async_pairwise", pairwise_gossip)
+    register_dist_variant("push_sum", push_sum_gossip)
 
 
 _register_dist_variants()

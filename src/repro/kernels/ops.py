@@ -248,12 +248,16 @@ def _segment_tiles(f: int) -> tuple[int, int, int]:
     return 128, 8, 512 if f > 256 else 128
 
 
-def build_ell(edges, edge_w, diag_w, n: int):
+def build_ell(edges, edge_w, diag_w, n: int, edge_w_rev=None):
     """ELLPACK (padded per-row neighbor list) arrays from a canonical edge list.
 
     Host numpy. ``edges`` (E, 2) i < j canonical, ``edge_w`` (E,) the
     undirected weights, ``diag_w`` (N,) the diagonal. Each undirected edge
-    becomes two directed slots (one per endpoint row). Returns
+    becomes two directed slots (one per endpoint row); ``edge_w_rev`` (E,)
+    optionally carries the reverse-orientation weight W[j, i] per canonical
+    (i, j) for asymmetric bases (push-sum family) — row i's slot then keeps
+    ``edge_w`` = W[i, j] while row j's slot gets W[j, i]. None means the
+    base is symmetric and ``edge_w`` serves both orientations. Returns
 
         nbr  (N, D) int32, wgt (N, D) f32, slot (N, D) int32, diag (N, 1) f32
 
@@ -268,7 +272,8 @@ def build_ell(edges, edge_w, diag_w, n: int):
     e = len(edges)
     src = np.concatenate([edges[:, 0], edges[:, 1]])
     dst = np.concatenate([edges[:, 1], edges[:, 0]])
-    wdir = np.concatenate([edge_w, edge_w])
+    wdir = np.concatenate(
+        [edge_w, edge_w if edge_w_rev is None else edge_w_rev])
     eid = np.concatenate([np.arange(e), np.arange(e)])
     deg = np.bincount(src, minlength=n)
     d_max = max(1, int(deg.max()) if e else 1)

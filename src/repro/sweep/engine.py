@@ -68,6 +68,81 @@ def trace_count() -> int:
     return _TRACE_COUNT
 
 
+def _dense_round_prim(wsp, renorm: str):
+    """Batched dense einsum round over one G partition's (Gp, N, N) slice.
+
+    ``renorm`` picks where a masked-off entry W_ij returns: "receiver" sums
+    the dropped weights per ROW (row sums survive — the doubly-stochastic
+    family's rule), "sender" per COLUMN (column sums survive — the
+    mass-conserving push-sum family). Also serves as the pallas backend's
+    fallback for masked sender-renorm partitions, which the fused masked
+    kernel (receiver-renorm only) cannot run.
+    """
+    axis = 2 if renorm == "receiver" else 1
+
+    def prim(x, xp, coef, m=None):
+        a = coef[:, 0, None, None]
+        b = coef[:, 1, None, None]
+        c = coef[:, 2, None, None]
+        if m is None:
+            xw = jnp.einsum(
+                "gij,gjf->gif", wsp, x,
+                preferred_element_type=jnp.float32)
+        else:
+            wm = wsp * m
+            drop = jnp.sum(wsp - wm, axis=axis)                   # (Gp, N)
+            xw = jnp.einsum(
+                "gij,gjf->gif", wm, x,
+                preferred_element_type=jnp.float32
+            ) + drop[:, :, None] * x
+        return a * xw + b * x + c * xp
+    return prim
+
+
+def _sparse_round_prim(pack, s: int, e: int, nn: int, renorm: str):
+    """Directed-arrays gather/segment_sum round over one G partition.
+
+    Each undirected canonical edge appears as two directed slots (forward
+    weight W_ij then reverse W_ji — equal for symmetric bases); ``eid`` maps
+    a slot back to its RoundMasks bits column. Padded slots have weight 0
+    (their src/dst/eid indices are inert), padded rows have diag 0 and x 0,
+    so padding is exact. Dropped mass from masked-off edges returns to the
+    RECEIVING row's diagonal under "receiver" renorm or to the SENDING
+    neighbour's diagonal under "sender" renorm — the latter keeps column
+    sums (total mass) intact for the push-sum family.
+    """
+    src, dst, wdir, eid, diag = pack
+    sg, dg = src[s:e], dst[s:e]
+    wg = wdir[s:e].astype(jnp.float32)
+    eg, gg = eid[s:e], diag[s:e].astype(jnp.float32)
+    receiver = renorm == "receiver"
+
+    def prim(x, xp, coef, m=None):
+        a = coef[:, 0, None, None]
+        b = coef[:, 1, None, None]
+        c = coef[:, 2, None, None]
+        if m is None:
+            def one(s_, d_, w_, g_, x_):
+                contrib = w_[:, None] * jnp.take(x_, d_, axis=0)
+                return (jax.ops.segment_sum(
+                    contrib, s_, num_segments=nn)
+                    + g_[:, None] * x_)
+            xw = jax.vmap(one)(sg, dg, wg, gg, x)
+        else:
+            def one(s_, d_, w_, e_, g_, m_, x_):
+                sel = jnp.take(m_, e_)                    # (2E,)
+                wt = w_ * sel
+                drop = jax.ops.segment_sum(
+                    w_ - wt, s_ if receiver else d_, num_segments=nn)
+                contrib = wt[:, None] * jnp.take(x_, d_, axis=0)
+                return (jax.ops.segment_sum(
+                    contrib, s_, num_segments=nn)
+                    + (g_ + drop)[:, None] * x_)
+            xw = jax.vmap(one)(sg, dg, wg, eg, gg, m, x)
+        return a * xw + b * x + c * xp
+    return prim
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("num_iters", "use_kernels", "tiles", "layout", "algo_gen",
@@ -84,7 +159,13 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
     scan and applies its own ``round_body``, written against the fused-round
     primitive this function supplies — einsum round on the jax backend, the
     fused batched Pallas kernel (masked or not) on the pallas backend. The
-    MSE reduction reads every partition's display state (carry slot 0).
+    MSE reduction reads every partition's display state via the algorithm's
+    ``display`` hook (carry slot 0 by default; a ratio of taps for the
+    push-sum family). Masked-round renormalization follows each partition's
+    ``mass_renorm`` ("receiver" keeps row sums, "sender" keeps column sums);
+    the fused masked kernels implement receiver renorm only, so dynamic
+    sender-renorm partitions run the matching jnp fallback primitive inside
+    the same jitted scan.
 
     ``bits``/``eidx`` (None on the static path) carry the compressed
     (T, G, E) uint8 edge-activity schedule: the scan expands each round's
@@ -147,92 +228,55 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
         # Sparse pallas: pre-padded ELL slices drive the batched segment-
         # reduce kernel; `m` is this round's (Gp, E) bits rows gathered by
         # undirected edge id inside the kernel — no (N, N) mask anywhere.
+        # The masked kernel implements receiver renorm only: a dynamic
+        # sender-renorm partition (push-sum family) falls back to the
+        # directed-arrays jnp round, whose operands run_batch appends to the
+        # pack (positions 4..8) exactly when such a partition exists.
         from repro.kernels.ops import batched_segment_round_prim, use_interpret
 
-        nbrs, wgts, slots, diags = ws
+        nbrs, wgts, slots, diags = ws[:4]
+        directed = ws[4:]
         bm, bd, bf = tiles
         interpret = use_interpret()
+        nn = x0.shape[1]
 
-        def make_prim(s, e):
+        def make_prim(s, e, renorm):
+            if dynamic and renorm != "receiver":
+                if not directed:
+                    raise ValueError(
+                        "sparse pallas pack is missing the directed-arrays "
+                        "fallback operands for a sender-renorm partition")
+                return _sparse_round_prim(directed, s, e, nn, renorm)
             return batched_segment_round_prim(
                 nbrs[s:e], wgts[s:e], slots[s:e], diags[s:e],
                 bm=bm, bd=bd, bf=bf, interpret=interpret)
     elif sparse:
-        # Sparse jnp: directed-arrays gather/segment_sum round. Each
-        # undirected canonical edge appears as two directed slots; `eid`
-        # maps a slot back to its RoundMasks bits column. Padded slots have
-        # wdir 0 (their src/dst/eid indices are inert), padded rows have
-        # diag 0 and x 0, so padding is exact. Dropped mass from masked-off
-        # edges returns to the source diagonal — W_eff(t) stays stochastic.
-        src, dst, wdir, eid, diag = ws
-        wdir = wdir.astype(jnp.float32)
-        diag = diag.astype(jnp.float32)
         nn = x0.shape[1]
 
-        def make_prim(s, e):
-            sg, dg, wg = src[s:e], dst[s:e], wdir[s:e]
-            eg, gg = eid[s:e], diag[s:e]
-
-            def prim(x, xp, coef, m=None):
-                a = coef[:, 0, None, None]
-                b = coef[:, 1, None, None]
-                c = coef[:, 2, None, None]
-                if m is None:
-                    def one(s_, d_, w_, g_, x_):
-                        contrib = w_[:, None] * jnp.take(x_, d_, axis=0)
-                        return (jax.ops.segment_sum(
-                            contrib, s_, num_segments=nn)
-                            + g_[:, None] * x_)
-                    xw = jax.vmap(one)(sg, dg, wg, gg, x)
-                else:
-                    def one(s_, d_, w_, e_, g_, m_, x_):
-                        sel = jnp.take(m_, e_)                    # (2E,)
-                        wt = w_ * sel
-                        drop = jax.ops.segment_sum(
-                            w_ - wt, s_, num_segments=nn)
-                        contrib = wt[:, None] * jnp.take(x_, d_, axis=0)
-                        return (jax.ops.segment_sum(
-                            contrib, s_, num_segments=nn)
-                            + (g_ + drop)[:, None] * x_)
-                    xw = jax.vmap(one)(sg, dg, wg, eg, gg, m, x)
-                return a * xw + b * x + c * xp
-            return prim
+        def make_prim(s, e, renorm):
+            return _sparse_round_prim(ws, s, e, nn, renorm)
     elif use_kernels:
         # run_batch pre-pads the whole batch to the kernel tiles ONCE (and
         # passes those tiles in), so the scan body drives the raw batched
         # kernel directly — no per-round pad/slice materializations on the
         # carry (the wrapper in kernels.ops pays those per call; over
         # thousands of rounds they would dwarf the x_w round-trip the
-        # fusion removes).
+        # fusion removes). The masked kernel is receiver-renorm only; a
+        # dynamic sender-renorm partition runs the einsum fallback on the
+        # same tile-padded ws inside the same jitted scan.
         from repro.kernels.ops import batched_round_prim, use_interpret
 
         bm, bk, bf = tiles
         interpret = use_interpret()
 
-        def make_prim(s, e):
+        def make_prim(s, e, renorm):
+            if dynamic and renorm != "receiver":
+                return _dense_round_prim(ws[s:e], renorm)
             return batched_round_prim(
                 ws[s:e], bm=bm, bk=bk, bf=bf, interpret=interpret)
     else:
-        def make_prim(s, e):
-            wsp = ws[s:e]
-
-            def prim(x, xp, coef, m=None):
-                a = coef[:, 0, None, None]
-                b = coef[:, 1, None, None]
-                c = coef[:, 2, None, None]
-                if m is None:
-                    xw = jnp.einsum(
-                        "gij,gjf->gif", wsp, x,
-                        preferred_element_type=jnp.float32)
-                else:
-                    wm = wsp * m
-                    drop = jnp.sum(wsp - wm, axis=2)              # (Gp, N)
-                    xw = jnp.einsum(
-                        "gij,gjf->gif", wm, x,
-                        preferred_element_type=jnp.float32
-                    ) + drop[:, :, None] * x
-                return a * xw + b * x + c * xp
-            return prim
+        def make_prim(s, e, renorm):
+            return _dense_round_prim(ws[s:e], renorm)
 
     # per-partition algorithm objects and primitives (trace-time python)
     parts = []
@@ -240,7 +284,7 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
         algo = get_algorithm(name)
         prim = algo.pallas_round(ws[s:e], tiles=tiles) \
             if (use_kernels and not sparse and algo.pallas_round is not None) \
-            else make_prim(s, e)
+            else make_prim(s, e, algo.mass_renorm)
         parts.append((algo, s, e, prim))
 
     def mse_of(x):
@@ -260,7 +304,7 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
                 lambda x, xp, coef, _p=prim, _m=m: _p(x, xp, coef, _m),
                 coefs[s:e], sub, t)
             new_carry.append(sub)
-            disp.append(sub[0])
+            disp.append(algo.display(sub))
         x_all = disp[0] if len(disp) == 1 else jnp.concatenate(disp, axis=0)
         return tuple(new_carry), mse_of(x_all)
 
@@ -269,10 +313,11 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
     carry_fin, mse_tail = jax.lax.scan(
         body, init, (t_idx, bits) if dynamic else t_idx, length=num_iters
     )
-    disp_fin = [sub[0] for sub in carry_fin]
+    disp_fin = [algo.display(sub)
+                for (algo, _, _, _), sub in zip(parts, carry_fin)]
     x_fin = disp_fin[0] if len(disp_fin) == 1 else jnp.concatenate(disp_fin, axis=0)
     mse = jnp.concatenate([mse_of(x0)[None], mse_tail], axis=0)   # (T+1, G, F)
-    return x_fin, jnp.moveaxis(mse, 0, 1)                         # (G, T+1, F)
+    return x_fin, jnp.moveaxis(mse, 0, 1), carry_fin              # (G, T+1, F)
 
 
 def run_batch(
@@ -290,7 +335,9 @@ def run_batch(
     edge_w=None,
     diag_w=None,
     edge_counts=None,
+    edge_w_rev=None,
     trial_chunk: int | None = None,
+    return_taps: bool = False,
 ):
     """Evaluate ``num_iters`` rounds over a stacked (G, N, N) ensemble.
 
@@ -306,6 +353,10 @@ def run_batch(
         ``batched_segment_round_prim``). Same registry round bodies, same
         RoundMasks schedules (bits columns are undirected edge ids in both
         layouts), outputs match the dense layout to f32 roundoff.
+        ``edge_w_rev`` (G, Emax) optionally carries the reverse-orientation
+        weight W[j, i] per canonical edge (i, j) for asymmetric bases
+        (push-sum family); None means W is symmetric and ``edge_w`` serves
+        both orientations.
       x0:    (G, N, F) initial-condition blocks (zeros on padded nodes).
       coefs: (G, C) per-cell algorithm parameter rows ((a, b, c) for the
         default two-tap partition).
@@ -331,9 +382,17 @@ def run_batch(
         (only XLA's reduction vectorization differs with F) while peak
         memory drops from O(G N F) to O(G N chunk). This is what makes
         N = 1e5–1e6 sparse sweeps with many trials fit on one host.
+      return_taps: when True, additionally return the final carry taps per
+        merged algorithm partition as a tuple of
+        ``(spec, start, stop, (tap0, tap1, ...))`` entries, each tap a
+        (stop - start, N, F) numpy array. This exposes the raw two-state
+        (value, mass) taps of the push-sum family so conformance tests can
+        assert total-mass conservation directly, not just the displayed
+        ratio.
 
     Returns:
-      (x_final (G, N, F), mse (G, T+1, F)) as numpy arrays.
+      (x_final (G, N, F), mse (G, T+1, F)) as numpy arrays, plus the taps
+      tuple when ``return_taps``.
     """
     if backend not in ("jax", "pallas"):
         raise ValueError(f"unknown backend {backend!r} (sweep runs 'jax' or 'pallas')")
@@ -353,16 +412,28 @@ def run_batch(
                 num_iters=num_iters, backend=backend, mesh=mesh,
                 round_masks=round_masks, algos=algos, edges=edges,
                 edge_w=edge_w, diag_w=diag_w, edge_counts=edge_counts,
+                edge_w_rev=edge_w_rev, return_taps=return_taps,
             )
             for s in range(0, f_total, trial_chunk)
         ]
-        return (np.concatenate([o[0] for o in outs], axis=2),
-                np.concatenate([o[1] for o in outs], axis=2))
+        x_cat = np.concatenate([o[0] for o in outs], axis=2)
+        m_cat = np.concatenate([o[1] for o in outs], axis=2)
+        if not return_taps:
+            return x_cat, m_cat
+        taps = tuple(
+            (name, s_, e_, tuple(
+                np.concatenate([o[2][k][3][j] for o in outs], axis=2)
+                for j in range(len(sub))))
+            for k, (name, s_, e_, sub) in enumerate(outs[0][2])
+        )
+        return x_cat, m_cat, taps
 
     if sparse:
         edges = np.asarray(edges, dtype=np.int32)
         edge_w = np.asarray(edge_w, dtype=np.float32)
         diag_w = np.asarray(diag_w, dtype=np.float32)
+        if edge_w_rev is not None:
+            edge_w_rev = np.asarray(edge_w_rev, dtype=np.float32)
     else:
         ws = np.asarray(ws)
     coefs = np.asarray(coefs)
@@ -384,6 +455,7 @@ def run_batch(
         else:
             merged.append([name, s, e])
     algos = tuple((n_, s_, e_) for n_, s_, e_ in merged)
+    parts_out = algos  # pre-G-padding layout; frames the returned taps
     if round_masks is None and any(
             get_algorithm(name).needs_schedule for name, _, _ in algos):
         raise ValueError(
@@ -427,7 +499,9 @@ def run_batch(
         ells = [
             kops.build_ell(
                 edges[i, :int(ec[i])], edge_w[i, :int(ec[i])],
-                np.pad(diag_w[i], (0, n_pad)), n)
+                np.pad(diag_w[i], (0, n_pad)), n,
+                edge_w_rev=None if edge_w_rev is None
+                else edge_w_rev[i, :int(ec[i])])
             for i in range(g)
         ]
         d_max = kops._round_up(max(e_[0].shape[1] for e_ in ells), bd)
@@ -441,6 +515,25 @@ def run_batch(
             np.stack([padd(e_[2]) for e_ in ells]),   # slot (G, N, D)
             np.stack([e_[3] for e_ in ells]),         # diag (G, N, 1)
         )
+        if bits is not None and any(
+                get_algorithm(name).mass_renorm != "receiver"
+                for name, _, _ in algos):
+            # The masked ELL kernel renormalizes receiver-side only; append
+            # the directed-arrays operands so the scan can run the jnp
+            # sender-renorm fallback for those partitions (pack positions
+            # 4..8 mirror the sparse-jax layout, diag padded to the tiled N).
+            e_und = edges.shape[1]
+            rev = edge_w if edge_w_rev is None else edge_w_rev
+            wpack = wpack + (
+                np.concatenate([edges[:, :, 0], edges[:, :, 1]], axis=1),
+                np.concatenate([edges[:, :, 1], edges[:, :, 0]], axis=1),
+                np.concatenate([edge_w, rev], axis=1),
+                np.ascontiguousarray(np.broadcast_to(
+                    np.concatenate(
+                        [np.arange(e_und, dtype=np.int32)] * 2)[None],
+                    (g, 2 * e_und))),
+                np.pad(diag_w, ((0, 0), (0, n_pad))),
+            )
         if bits is not None:
             e_b = bits.shape[2]
             bits = np.pad(
@@ -473,7 +566,9 @@ def run_batch(
         wpack = (
             np.concatenate([edges[:, :, 0], edges[:, :, 1]], axis=1),
             np.concatenate([edges[:, :, 1], edges[:, :, 0]], axis=1),
-            np.concatenate([edge_w, edge_w], axis=1),
+            np.concatenate(
+                [edge_w, edge_w if edge_w_rev is None else edge_w_rev],
+                axis=1),
             np.ascontiguousarray(np.broadcast_to(
                 np.concatenate([np.arange(e_und, dtype=np.int32)] * 2)[None],
                 (g, 2 * e_und))),
@@ -545,7 +640,7 @@ def run_batch(
     from repro.core.algorithms import registry_generation
 
     ws_in = tuple(arrays[:nw]) if sparse else arrays[0]
-    x_fin, mse = _sweep_scan(
+    x_fin, mse, carry_fin = _sweep_scan(
         ws_in, *arrays[nw:], num_iters=num_iters,
         use_kernels=(backend == "pallas"),
         tiles=tiles, bits=bits, eidx=eidx, layout=tuple(algos),
@@ -556,7 +651,16 @@ def run_batch(
         x_fin, mse = x_fin[:g], mse[:g]
     if n != n_orig or f != f_orig:
         x_fin, mse = x_fin[:, :n_orig, :f_orig], mse[:, :, :f_orig]
-    return x_fin, mse
+    if not return_taps:
+        return x_fin, mse
+    # G-padding only ever extends the LAST partition, so slicing each
+    # partition's taps to its pre-padding span drops exactly the pad rows.
+    taps = tuple(
+        (name, s_p, e_p, tuple(
+            np.asarray(t)[:e_p - s_p, :n_orig, :f_orig] for t in sub))
+        for (name, s_p, e_p), sub in zip(parts_out, carry_fin)
+    )
+    return x_fin, mse, taps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -566,6 +670,12 @@ class SweepResult:
     ensemble: Ensemble
     x_final: np.ndarray        # (G, N, F)
     mse: np.ndarray            # (G, T+1, F)
+    # Final carry taps per merged algorithm partition, populated only when
+    # the run asked for them (``run_ensemble(..., return_taps=True)``):
+    # ((spec, start, stop, (tap0, tap1, ...)), ...). Lets tests inspect the
+    # raw (value, mass) pair of push-sum-family cells behind the displayed
+    # ratio.
+    taps: tuple | None = None
 
     @property
     def configs(self) -> tuple[ConfigMeta, ...]:
@@ -614,6 +724,7 @@ def run_ensemble(
     mesh=None,
     round_masks: RoundMasks | None = None,
     trial_chunk: int | None = None,
+    return_taps: bool = False,
 ) -> SweepResult:
     """Evaluate an already-built (possibly merged) grid in one program.
 
@@ -621,16 +732,21 @@ def run_ensemble(
     of ``build_round_masks(ens, num_iters)`` (or None for the static path —
     ``run_sweep`` wires this automatically from ``SweepSpec.dynamics``).
     Sparse-layout ensembles (``ens.is_sparse``) route through the edge-space
-    engine automatically; ``trial_chunk`` tiles the F axis for memory.
+    engine automatically; ``trial_chunk`` tiles the F axis for memory;
+    ``return_taps`` populates ``SweepResult.taps`` with each partition's
+    final carry taps (the push-sum family's raw (value, mass) pair).
     """
-    x_fin, mse = run_batch(
+    out = run_batch(
         ens.ws, ens.x0, ens.coefs, ens.node_counts,
         num_iters=num_iters, backend=backend, mesh=mesh,
         round_masks=round_masks, algos=ens.layout,
         edges=ens.edges, edge_w=ens.edge_w, diag_w=ens.diag_w,
-        edge_counts=ens.edge_counts, trial_chunk=trial_chunk,
+        edge_counts=ens.edge_counts, edge_w_rev=ens.edge_w_rev,
+        trial_chunk=trial_chunk, return_taps=return_taps,
     )
-    return SweepResult(ensemble=ens, x_final=x_fin, mse=mse)
+    x_fin, mse = out[0], out[1]
+    taps = out[2] if return_taps else None
+    return SweepResult(ensemble=ens, x_final=x_fin, mse=mse, taps=taps)
 
 
 def run_sweep(

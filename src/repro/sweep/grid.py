@@ -111,8 +111,12 @@ def _build_graph(family: str, n: int, rng: np.random.Generator) -> topology.Grap
             if topology.is_connected(g.adjacency):
                 return g
         raise RuntimeError(f"could not draw a connected G({n}, {p:.3f})")
-    raise ValueError(f"unknown topology family {family!r} "
-                     f"(have chain/ring/grid2d/torus2d/rgg/ba[:m]/erdos_renyi)")
+    if fam == "directed":
+        p_extra = float(fargs[0]) if fargs else 0.15
+        return topology.random_digraph(n, rng, p_extra=p_extra)
+    raise ValueError(
+        f"unknown topology family {family!r} (have chain/ring/grid2d/"
+        f"torus2d/rgg/ba[:m]/erdos_renyi/directed[:p_extra])")
 
 
 def _build_sparse_graph(
@@ -135,13 +139,21 @@ def _build_sparse_graph(
         return topology.barabasi_albert(n, m, rng)
     if fam == "erdos_renyi":
         if n > SPARSE_EXACT_SPECTRUM_CUTOFF:
-            raise ValueError(
-                "erdos_renyi has no large-N sparse generator (its dense "
-                "sampler draws an (N, N) coin matrix); use 'ba' or 'rgg' "
-                f"above n = {SPARSE_EXACT_SPECTRUM_CUTOFF}")
+            # O(E) geometric-skip sampler (never touches an (N, N) coin
+            # matrix). Its rng consumption differs from the dense sampler's,
+            # so CRN coupling across layouts holds only below the cutoff —
+            # where this branch densifies anyway.
+            p = min(1.0, 2.0 * math.log(max(n, 2)) / n)
+            return topology.erdos_renyi_sparse(n, p, rng)
         return topology.SparseGraph.from_graph(_build_graph(family, n, rng))
-    raise ValueError(f"unknown topology family {family!r} "
-                     f"(have chain/ring/grid2d/torus2d/rgg/ba[:m]/erdos_renyi)")
+    if fam == "directed":
+        raise ValueError(
+            "the 'directed' family is dense-only (its receiver/push weight "
+            "builders and complex spectrum metadata need the full matrix); "
+            "use layout='dense'")
+    raise ValueError(
+        f"unknown topology family {family!r} (have chain/ring/grid2d/"
+        f"torus2d/rgg/ba[:m]/erdos_renyi/directed[:p_extra])")
 
 
 def _surrogate_spectrum(
@@ -256,6 +268,10 @@ class Ensemble:
     edge_w: np.ndarray | None = None       # (G, Emax) f32 base edge weights
     diag_w: np.ndarray | None = None       # (G, Nmax) f32 base diagonal
     edge_counts: np.ndarray | None = None  # (G,) int true edge counts
+    # (G, Emax) reverse-orientation weights W[j, i] per canonical (i, j);
+    # None when every cell's base is symmetric (push-sum-family cells make
+    # it real, symmetric cells then carry a copy of edge_w)
+    edge_w_rev: np.ndarray | None = None
 
     @property
     def is_sparse(self) -> bool:
@@ -335,12 +351,20 @@ def merge_ensembles(*ensembles: Ensemble) -> Ensemble:
             pad = [(0, 0), (0, e_max - a.shape[1])] + [(0, 0)] * (a.ndim - 2)
             return np.pad(a, pad)
 
+        if any(e.edge_w_rev is not None for e in ensembles):
+            rev_cat = np.concatenate([
+                grow_edges(e.edge_w if e.edge_w_rev is None else e.edge_w_rev)
+                for e in ensembles
+            ])
+        else:
+            rev_cat = None
         weight_arrays = dict(
             ws=None,
             edges=np.concatenate([grow_edges(e.edges) for e in ensembles]),
             edge_w=np.concatenate([grow_edges(e.edge_w) for e in ensembles]),
             diag_w=np.concatenate([grow(e.diag_w, (1,)) for e in ensembles]),
             edge_counts=np.concatenate([e.edge_counts for e in ensembles]),
+            edge_w_rev=rev_cat,
         )
     else:
         weight_arrays = dict(
@@ -392,6 +416,20 @@ class _GraphDraw:
 
 def _draw_dense(family: str, gi: int, n: int, rng) -> _GraphDraw:
     g = _build_graph(family, n, rng)
+    if isinstance(g, topology.DiGraph):
+        # Directed cells: the stored base is the naive row-stochastic
+        # receiver matrix (what ``memoryless`` iterates — and provably
+        # drifts to the Perron-weighted mixture on). Its spectrum is
+        # complex, so the contraction metadata uses the second-largest
+        # eigenvalue MODULUS and a surrogate real spectrum on that
+        # interval; the push-sum family rebuilds its own column-stochastic
+        # base from the same support via ``base_matrix``.
+        w = weights.receiver_weights(g)
+        ev = np.sort(np.abs(np.linalg.eigvals(w)))
+        rho_mem = float(ev[-2])
+        vals = _surrogate_spectrum(rho_mem, -rho_mem)
+        return _GraphDraw(family, gi, g, w, vals,
+                          lam2=rho_mem, rho_mem=rho_mem)
     w = weights.metropolis_hastings(g)
     vals = np.linalg.eigvalsh(w)
     if abs(vals[0]) > vals[-2]:
@@ -432,18 +470,32 @@ def _draw_sparse(family: str, gi: int, n: int, rng) -> _GraphDraw:
                       edges=sg.edges, edge_w=ew, diag_w=dw)
 
 
-def _base_edge_arrays(algo, d: _GraphDraw) -> tuple[np.ndarray, np.ndarray]:
-    """(edge_w, diag_w) of this algorithm's BASE matrix for a sparse cell."""
+def _base_edge_arrays(
+    algo, d: _GraphDraw
+) -> tuple[np.ndarray, np.ndarray | None, np.ndarray]:
+    """(edge_w, edge_w_rev, diag_w) of this algorithm's BASE matrix, sparse.
+
+    ``edge_w_rev`` is None for symmetric bases (one weight serves both
+    orientations of a canonical edge); asymmetric bases (``symmetric_base``
+    False — the column-stochastic push-sum family) carry W[j, i] per
+    canonical (i, j) so the engine's directed-arrays round sees both.
+    """
     if d.w is not None:
         bm = algo.base_matrix(d.w)
-        return bm[d.edges[:, 0], d.edges[:, 1]].copy(), np.diag(bm).copy()
-    return algo.base_edge_weights(d.edges, d.edge_w, d.diag_w, d.g.n)
+        fwd = bm[d.edges[:, 0], d.edges[:, 1]].copy()
+        rev = None if algo.symmetric_base \
+            else bm[d.edges[:, 1], d.edges[:, 0]].copy()
+        return fwd, rev, np.diag(bm).copy()
+    out = algo.base_edge_weights(d.edges, d.edge_w, d.diag_w, d.g.n)
+    if len(out) == 2:                      # symmetric-base (edge_w, diag_w)
+        return out[0], None, out[1]
+    return out                             # (fwd, rev, diag)
 
 
 def build_ensemble(spec: SweepSpec) -> Ensemble:
     """Materialize the sweep grid of ``spec`` as stacked padded arrays."""
     rng = np.random.default_rng(spec.seed)
-    random_families = {"rgg", "erdos_renyi", "ba"}
+    random_families = {"rgg", "erdos_renyi", "ba", "directed"}
     sparse = spec.resolved_layout == "sparse"
 
     graphs: list[_GraphDraw] = []
@@ -467,10 +519,11 @@ def build_ensemble(spec: SweepSpec) -> Ensemble:
 
     ws, x0s, coefs, counts, metas, layout = [], [], [], [], [], []
     edges_l, edge_w_l, diag_w_l, e_counts = [], [], [], []
+    edge_w_rev_l: list[np.ndarray | None] = []
 
     def add_cell(base, x0, n, params, meta):
         if sparse:
-            base_ew, base_dw, eix = base
+            base_ew, base_rev, base_dw, eix = base
             e = len(eix)
             ep = np.zeros((e_max, 2), dtype=np.int32)
             ep[:e] = eix
@@ -482,6 +535,12 @@ def build_ensemble(spec: SweepSpec) -> Ensemble:
             edge_w_l.append(ewp)
             diag_w_l.append(dwp)
             e_counts.append(e)
+            if base_rev is None:
+                edge_w_rev_l.append(None)
+            else:
+                rvp = np.zeros(e_max, dtype=np.float32)
+                rvp[:e] = base_rev
+                edge_w_rev_l.append(rvp)
         else:
             wp = np.zeros((n_max, n_max), dtype=np.float32)
             wp[:n, :n] = base
@@ -554,12 +613,23 @@ def build_ensemble(spec: SweepSpec) -> Ensemble:
 
     c_max = max(1, max(len(c) for c in coefs))
     if sparse:
+        # edge_w_rev stacks only when some cell's base is asymmetric; cells
+        # of symmetric-base algorithms then reuse their forward weights so
+        # one (G, Emax) array serves the whole grid.
+        if any(r is not None for r in edge_w_rev_l):
+            rev_stack = np.stack([
+                r if r is not None else f
+                for r, f in zip(edge_w_rev_l, edge_w_l)
+            ])
+        else:
+            rev_stack = None
         weight_arrays = dict(
             ws=None,
             edges=np.stack(edges_l),
             edge_w=np.stack(edge_w_l),
             diag_w=np.stack(diag_w_l),
             edge_counts=np.asarray(e_counts, dtype=np.int64),
+            edge_w_rev=rev_stack,
         )
     else:
         weight_arrays = dict(ws=np.stack(ws))

@@ -3,8 +3,11 @@ the mixed-algorithm one-compilation contract, the async pairwise machinery,
 and the ~20-line custom-registration seam the ROADMAP quickstart documents.
 
 The conformance suite iterates the registry and asserts, for EVERY registered
-algorithm, mean conservation and agreement with its float64/float32 host
-reference on chain/grid2d/rgg, static and bernoulli:0.1, jax and pallas."""
+algorithm, its declared conservation law — mean conservation for the
+doubly-stochastic family, total-(value, mass) conservation for the push-sum
+family — and agreement with its float64/float32 host reference on
+chain/grid2d/rgg, static / bernoulli:0.1 / correlated dynamics, jax and
+pallas."""
 import numpy as np
 import pytest
 
@@ -29,7 +32,8 @@ from repro.sweep import (
 
 def test_registry_resolves_seed_algorithms():
     names = alg.registered_algorithms()
-    for seed in ("memoryless", "accel", "poly_filter", "async_pairwise"):
+    for seed in ("memoryless", "accel", "poly_filter", "async_pairwise",
+                 "push_sum", "ratio_consensus"):
         assert seed in names
     assert alg.get_algorithm("accel").num_taps == 2
     assert alg.get_algorithm("memoryless").num_taps == 1
@@ -39,6 +43,20 @@ def test_registry_resolves_seed_algorithms():
     assert p5.degree == 5 and p5.num_coefs == 6
     # instances are cached per spec string (trace-time identity stability)
     assert alg.get_algorithm("poly_filter:5") is p5
+    # the push-sum family declares its invariant class and renorm rule
+    ps = alg.get_algorithm("push_sum")
+    rc = alg.get_algorithm("ratio_consensus:0.3")
+    for a in (ps, rc):
+        assert a.num_taps == 2
+        assert a.invariant == "mass"
+        assert a.mass_renorm == "sender"
+        assert not a.symmetric_base
+    assert rc.c == 0.3
+    with pytest.raises(ValueError, match="self-mass"):
+        alg.get_algorithm("ratio_consensus:1.5")
+    # the pre-existing family keeps the default declarations
+    assert alg.get_algorithm("accel").invariant == "mean"
+    assert alg.get_algorithm("accel").mass_renorm == "receiver"
 
 
 def test_registry_rejects_unknown_algorithm():
@@ -70,11 +88,12 @@ def test_pairwise_base_matrix_masks_to_boyd_matrix():
 
 @pytest.fixture(scope="module")
 def conformance_grid():
-    """Every registered algorithm x chain/grid2d/rgg x static/bernoulli:0.1."""
+    """Every registered algorithm x chain/grid2d/rgg x three dynamics classes."""
     spec = SweepSpec(
         topologies=("chain", "grid2d", "rgg"), sizes=(12,),
         designs=("asymptotic",), algorithms=tuple(alg.registered_algorithms()),
-        num_trials=2, seed=5, dynamics=("static", "bernoulli:0.1"),
+        num_trials=2, seed=5,
+        dynamics=("static", "bernoulli:0.1", "correlated:0.25:3:5"),
     )
     ens = build_ensemble(spec)
     masks = build_round_masks(ens, 45, seed=spec.seed)
@@ -84,9 +103,17 @@ def conformance_grid():
 
 @pytest.mark.parametrize("backend", ["jax", "pallas"])
 def test_every_registered_algorithm_matches_host_reference(conformance_grid, backend):
-    """Engine == per-tick host reference (1e-6 in f32) for the whole registry."""
+    """Engine == per-tick host reference (1e-6 in f32) for the whole registry,
+    plus each algorithm's declared invariant class: mean conservation for the
+    doubly-stochastic family, total value/mass conservation (checked on the
+    raw carry taps) for the push-sum family."""
     ens, masks = conformance_grid
-    res = run_ensemble(ens, num_iters=45, backend=backend, round_masks=masks)
+    res = run_ensemble(ens, num_iters=45, backend=backend, round_masks=masks,
+                       return_taps=True)
+    part_of = {}
+    for name, s, e, taps in res.taps:
+        for i in range(s, e):
+            part_of[i] = (s, taps)
     seen = set()
     for i, c in enumerate(ens.configs):
         a = alg.get_algorithm(c.algorithm)
@@ -94,8 +121,12 @@ def test_every_registered_algorithm_matches_host_reference(conformance_grid, bac
         n = c.n
         e = len(dyn.edge_index(ens.ws[i]))
         # f32 rounding scales with the round's coefficient mass: ~1 for the
-        # one-matvec family, the l1 coefficient norm for the Horner ticks
+        # one-matvec family, the l1 coefficient norm for the Horner ticks;
+        # the ratio family's displayed quotient compounds the rounding of
+        # two states, hence the extra factor
         tol = 1e-6 * max(1.0, float(np.abs(ens.coefs[i]).sum()))
+        if a.invariant == "mass":
+            tol *= 4.0
         x32, mse32 = a.reference_run(
             ens.ws[i][:n, :n], ens.x0[i][:n], ens.coefs[i], 45,
             bits=masks.bits[:, i, :e], idx=masks.idx[i, :e], dtype=np.float32,
@@ -111,11 +142,24 @@ def test_every_registered_algorithm_matches_host_reference(conformance_grid, bac
             bits=masks.bits[:, i, :e], idx=masks.idx[i, :e], dtype=np.float64,
         )
         np.testing.assert_allclose(res.x_final[i][:n], x64, atol=1e-5, rtol=1e-4)
-        # mean conservation: every algorithm's effective round matrices are
-        # doubly stochastic, whatever the schedule did
-        np.testing.assert_allclose(
-            res.x_final[i][:n].mean(axis=0), ens.x0[i][:n].mean(axis=0),
-            atol=1e-5, err_msg=f"{c.algorithm} lost the network average")
+        if a.invariant == "mass":
+            # push-sum family: the displayed ratio's node mean is NOT
+            # invariant, but the TOTAL of each carry tap is — the value tap
+            # keeps sum(x0), the mass tap keeps n, under every schedule
+            s0, taps = part_of[i]
+            sv, mv = taps
+            np.testing.assert_allclose(
+                sv[i - s0][:n].sum(axis=0), ens.x0[i][:n].sum(axis=0),
+                atol=1e-4 * n, err_msg=f"{c.algorithm} lost total value")
+            np.testing.assert_allclose(
+                mv[i - s0][:n].sum(axis=0), float(n),
+                atol=1e-4 * n, err_msg=f"{c.algorithm} lost total mass")
+        else:
+            # doubly-stochastic family: every effective round matrix keeps
+            # the network average, whatever the schedule did
+            np.testing.assert_allclose(
+                res.x_final[i][:n].mean(axis=0), ens.x0[i][:n].mean(axis=0),
+                atol=1e-5, err_msg=f"{c.algorithm} lost the network average")
         # padded nodes never acquire signal
         assert np.all(res.x_final[i][n:] == 0.0)
     assert seen == {alg.get_algorithm(nm).name for nm in alg.registered_algorithms()}
@@ -242,6 +286,31 @@ def test_custom_algorithm_registration_quickstart():
         assert res.mse[i_l, -1].mean() > res.mse[i_m, -1].mean()
     finally:
         alg.register_algorithm("lazy_mix", LazyMix)  # leave a clean entry
+
+
+def test_directed_lossy_cell_ratio_converges_where_memoryless_drifts():
+    """Acceptance: on a strongly connected digraph under 10% i.i.d. packet
+    loss the naive masked memoryless iteration reaches consensus on a
+    Perron-weighted mixture — NOT the average (its sustained averaging time
+    never fires) — while push_sum and ratio_consensus converge to the true
+    average through the sender-renormalized lossy rounds."""
+    spec = SweepSpec(
+        topologies=("directed",), sizes=(16,), designs=("memoryless",),
+        algorithms=("memoryless", "push_sum", "ratio_consensus:0.5"),
+        dynamics=("bernoulli:0.1",), num_trials=3, layout="dense", seed=11)
+    ens = build_ensemble(spec)
+    masks = build_round_masks(ens, 300, seed=spec.seed)
+    res = run_ensemble(ens, num_iters=300, round_masks=masks)
+    times = res.averaging_times(eps=1e-3, sustained=True)
+    xbar = ens.x0.sum(axis=1) / np.asarray(ens.node_counts)[:, None]
+    for i, c in enumerate(ens.configs):
+        err = np.abs(res.x_final[i, :16] - xbar[i]).max()
+        if c.algorithm == "memoryless":
+            assert (times[i] == -1).all(), (c.algorithm, times[i])
+            assert err > 1e-3, err        # visibly off the true average
+        else:
+            assert (times[i] >= 0).all(), (c.algorithm, times[i])
+            assert err < 1e-3, (c.algorithm, err)
 
 
 def test_fig_async_chain_bracketing():

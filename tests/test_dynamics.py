@@ -26,12 +26,64 @@ def test_parse_dynamics():
     assert dyn.parse_dynamics("churn:0.05") == dyn.DynamicsSpec("churn", p=0.05)
     assert dyn.parse_dynamics("rewire:0.2:50") == dyn.DynamicsSpec(
         "rewire", p=0.2, period=50)
+    assert dyn.parse_dynamics("correlated:0.2") == dyn.DynamicsSpec(
+        "correlated", p=0.2)
+    assert dyn.parse_dynamics("correlated:0.2:3:10") == dyn.DynamicsSpec(
+        "correlated", p=0.2, blocks=3, period=10)
     spec = dyn.DynamicsSpec("bernoulli", p=0.3)
     assert dyn.parse_dynamics(spec) is spec
     for bad in ("chebyshev:0.1", "bernoulli", "bernoulli:2.0", "rewire:0.1",
-                "rewire:0.1:0", "static:1"):
+                "rewire:0.1:0", "static:1", "correlated", "correlated:0.2:0",
+                "correlated:2.0"):
         with pytest.raises(ValueError):
             dyn.parse_dynamics(bad)
+
+
+def test_correlated_bits_are_blockwise_and_held():
+    """Correlated outages: bits depend on nodes only through their block,
+    whole blocks go down together, and the pattern holds for ``period``
+    rounds between redraws."""
+    g = topology.chain(24)
+    w = weights.metropolis_hastings(g)
+    idx = dyn.edge_index(w)
+    spec = dyn.parse_dynamics("correlated:0.4:4:5")
+    bits = dyn.sample_edge_bits(spec, 60, idx, 24, np.random.default_rng(0))
+    blk = (idx * 4) // 24                     # (E, 2) endpoint blocks
+    for t in range(60):
+        # a round's pattern is a pure function of endpoint block states:
+        # within a block interior (both endpoints same block) all edges agree
+        for b in range(4):
+            inner = (blk[:, 0] == b) & (blk[:, 1] == b)
+            assert len(set(bits[t][inner].tolist())) <= 1
+        # an edge is up iff BOTH endpoint blocks are up this window
+        up = {b: bits[t][(blk[:, 0] == b) & (blk[:, 1] == b)][0]
+              for b in range(4)}
+        np.testing.assert_array_equal(
+            bits[t], (np.vectorize(up.get)(blk[:, 0])
+                      & np.vectorize(up.get)(blk[:, 1])).astype(np.uint8))
+    # held per window: identical bits within each period-5 window
+    for w0 in range(0, 60, 5):
+        np.testing.assert_array_equal(
+            bits[w0:w0 + 5], np.broadcast_to(bits[w0], (5, len(idx))))
+    # some full-block outages actually happen at p=0.4
+    assert (bits == 0).any() and (bits == 1).any()
+
+
+def test_masked_w_sender_renorm_preserves_column_sums():
+    """Sender renorm: dropped weight returns to the SENDER's diagonal, so
+    column sums (total mass) survive where receiver renorm keeps row sums."""
+    rng = np.random.default_rng(1)
+    g = topology.random_geometric(16, rng)
+    w = weights.push_sum_weights(g)           # column-stochastic, asymmetric
+    idx = dyn.edge_index(w)
+    for _ in range(5):
+        bits = (rng.random(len(idx)) > 0.4).astype(np.uint8)
+        ws = dyn.masked_w(w, bits, idx, renorm="sender")
+        np.testing.assert_allclose(ws.sum(axis=0), 1.0, atol=1e-12)
+        wr = dyn.masked_w(w, bits, idx, renorm="receiver")
+        np.testing.assert_allclose(wr.sum(axis=1), w.sum(axis=1), atol=1e-12)
+    with pytest.raises(ValueError, match="renorm"):
+        dyn.masked_w(w, bits, idx, renorm="midway")
 
 
 def test_edge_index_matches_graph():

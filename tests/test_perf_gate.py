@@ -53,6 +53,25 @@ def test_gate_untagged_baseline_still_gates():
     assert failures == [("ssd_chunked", 3.0)]
 
 
+def test_gate_covers_directed_lane_rows():
+    # fig_directed's whole-grid timing row is sweep_-prefixed so it gates;
+    # its per-cell accuracy rows (directed_*) are tracked, never gated.
+    fresh = [
+        _row("sweep_directed_pallas_G12x300it", 220.0, "pallas-interpret"),
+        _row("directed_push_sum_static", 999999.0, "pallas-interpret"),
+    ]
+    base = {"sweep_directed_pallas_G12x300it": _row(
+        "sweep_directed_pallas_G12x300it", 100.0, "pallas-interpret")}
+    lines, failures = bench_run._gate_rows(fresh, base, 1.5)
+    assert failures == [("sweep_directed_pallas_G12x300it", 2.2)]
+    assert not any("directed_push_sum" in ln for ln in lines)
+    # like-for-like only: the same lane re-stamped compiled must skip
+    fresh = [_row("sweep_directed_pallas_G12x300it", 220.0, "compiled")]
+    lines, failures = bench_run._gate_rows(fresh, base, 1.5)
+    assert failures == []
+    assert any("SKIP" in ln for ln in lines)
+
+
 def test_gate_ignores_untracked_and_new_rows():
     fresh = [
         _row("simulator_numpy", 999999.0, "compiled"),   # not a gated prefix

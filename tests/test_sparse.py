@@ -75,6 +75,42 @@ def test_sparse_mh_weights_doubly_stochastic(n, seed):
         w, weights.metropolis_hastings(g.to_dense()), atol=1e-12)
 
 
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(min_value=20, max_value=250),
+       seed=st.integers(0, 2**31 - 1))
+def test_erdos_renyi_sparse_properties(n, seed):
+    """The O(E) geometric-skip sampler yields canonical, connected draws."""
+    p = min(1.0, 2.5 * np.log(n) / n)
+    g = topology.erdos_renyi_sparse(n, p, np.random.default_rng(seed))
+    _assert_canonical(g.edges)
+    assert g.n == n
+    assert topology.edges_are_connected(g.n, g.edges)
+
+
+def test_erdos_renyi_sparse_grid_dispatch_above_cutoff():
+    """The grid no longer rejects erdos_renyi in the sparse layout: above the
+    densify cutoff it routes to the O(E) sampler and the sweep runs."""
+    spec = SweepSpec(topologies=("erdos_renyi",), sizes=(2000,),
+                     designs=("asymptotic",), alphas=(1.0,),
+                     algorithms=("accel",), num_trials=2, layout="auto",
+                     seed=0)
+    assert spec.resolved_layout == "sparse"
+    res = run_sweep(spec, num_iters=10, trial_chunk=1)
+    assert res.ensemble.is_sparse
+    assert np.all(np.isfinite(res.mse))
+    x0, xf = res.ensemble.x0[0], res.x_final[0]
+    assert np.abs(xf.sum(axis=0) - x0.sum(axis=0)).max() / 2000 < 1e-3
+    assert np.all(res.mse[0, -1] < res.mse[0, 0])
+
+
+def test_directed_family_is_dense_only():
+    spec = SweepSpec(topologies=("directed",), sizes=(12,),
+                     designs=("memoryless",), algorithms=("push_sum",),
+                     num_trials=1, layout="sparse")
+    with pytest.raises(ValueError, match="dense-only"):
+        build_ensemble(spec)
+
+
 def test_deterministic_sparse_families_match_dense():
     pairs = [
         (topology.sparse_chain(9), topology.chain(9)),
@@ -148,7 +184,8 @@ def _run_both(algos, dynamics, backend, num_trials=3, iters=40):
 
 
 @pytest.mark.parametrize("algo", ["memoryless", "accel", "poly_filter:4",
-                                  "async_pairwise"])
+                                  "async_pairwise", "push_sum",
+                                  "ratio_consensus:0.5"])
 @pytest.mark.parametrize("dyn", ["static", "bernoulli:0.1"])
 def test_sparse_matches_dense_jax(algo, dyn):
     r_d, r_s = _run_both((algo,), ("static", dyn), "jax")
@@ -161,11 +198,39 @@ def test_sparse_matches_dense_jax(algo, dyn):
 @pytest.mark.parametrize("algos,dyn", [
     (("memoryless", "accel"), ("static",)),
     (("accel", "async_pairwise"), ("static", "bernoulli:0.1")),
+    # asymmetric-base family: static rides the ELL kernel with per-direction
+    # weights; the lossy cells exercise the sender-renorm jnp fallback
+    # inside the same jitted scan
+    (("push_sum", "ratio_consensus:0.5"), ("static", "bernoulli:0.1")),
 ])
 def test_sparse_matches_dense_pallas(algos, dyn):
     r_d, r_s = _run_both(algos, dyn, "pallas", iters=25)
     np.testing.assert_allclose(r_s.x_final, r_d.x_final, rtol=1e-4, atol=1e-6)
     np.testing.assert_allclose(r_s.mse, r_d.mse, rtol=1e-4, atol=1e-8)
+
+
+def test_sparse_ratio_family_mass_conserved_under_correlated_loss():
+    """Sparse-layout ratio family: total value and total mass survive i.i.d.
+    AND correlated (block-outage) packet loss, and the displayed quotient
+    still lands on the true average."""
+    spec = SweepSpec(topologies=("grid2d",), sizes=(20,),
+                     designs=("memoryless",),
+                     algorithms=("push_sum", "ratio_consensus:0.5"),
+                     dynamics=("bernoulli:0.1", "correlated:0.25:4:5"),
+                     num_trials=3, seed=9, layout="sparse")
+    ens = build_ensemble(spec)
+    masks = build_round_masks(ens, 240, seed=9)
+    res = run_ensemble(ens, num_iters=240, round_masks=masks,
+                       return_taps=True)
+    for name, s, e, (sv, mv) in res.taps:
+        np.testing.assert_allclose(
+            sv.sum(axis=1), ens.x0[s:e].sum(axis=1), atol=2e-3,
+            err_msg=f"{name} lost total value")
+        np.testing.assert_allclose(
+            mv.sum(axis=1), 20.0, atol=2e-3,
+            err_msg=f"{name} lost total mass")
+    xbar = ens.x0.sum(axis=1, keepdims=True) / 20.0
+    assert np.abs(res.x_final - xbar).max() < 1e-3
 
 
 def test_trial_chunk_matches_unchunked():
