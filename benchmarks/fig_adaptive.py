@@ -1,0 +1,337 @@
+"""Adaptive figure: in-scan lambda_2 re-estimation + the M-tap frontier.
+
+Two questions, one jitted sweep:
+
+1. **Does adaptation recover the failure-induced mistuning?** The nominal
+   two-tap design solves Theorem 1 for the intact graph's lambda_2; under
+   link failures the effective operator's lambda_2 rises, and the nominal
+   alpha* is too aggressive. ``accel_adapt`` re-solves alpha* every tick
+   from its in-scan deflated power iteration (floored at nominal — see
+   ``core.algorithms.AdaptiveTwoTap``). The yardstick is a **matched oracle**:
+   plain ``accel`` cells whose alpha was pre-solved from the mean masked
+   operator's lambda_2 (the tuning a genie who knew the failure schedule's
+   average would pick), CRN-coupled to the same per-round failure draws.
+
+2. **What does each extra tap buy?** ``accel_m:M`` cells on the static chain
+   report design rho, measured tail rho, sustained times, and the Chebyshev
+   minimax lower bound over the true spectral interval
+   (``accel.averaging_time_lower_bound``). M = 2 reduces exactly to
+   Theorem 1; M >= 3 admits lambda_N (true interval) — a better asymptotic
+   rate paid for with a larger transient hump, and flat in M beyond 3
+   (Golub-Varga saturation, see ``accel.m_tap_weights``).
+
+All cells — adaptive grid, oracle minis, M-tap column — are merged into ONE
+ensemble and one compiled scan per backend; a warmed mode-tagged timing row
+(``sweep_adaptive_*``) keeps the lane under the perf gate's like-for-like
+rules. Emits ``BENCH_fig_adaptive.json`` (+ CSV) via ``benchmarks.common``.
+CI runs ``--quick`` on the pallas backend.
+
+Measurement notes (from the design experiments behind this figure):
+
+* iid Bernoulli mistuning on the chain is mild (the random-product average
+  forgives a detuned alpha far more than the deterministic-rate arithmetic
+  predicts); grid2d separates cleanly at p = 0.1, and bursty schedules
+  (``correlated:p:blocks:period``) separate on the chain. The acceptance
+  asserts are anchored on the oracle ratio bound and the nominal-vs-adaptive
+  AGGREGATE over all failure rows — paired by CRN, so small margins are
+  stable, not noise.
+* under heavy loss (p >= 0.2 iid, or deep bursts) the mean-operator model
+  itself over-corrects on the chain: the random product forgives the nominal
+  tuning far more than the averaged-rate arithmetic predicts, so the
+  matched oracle — and the estimator faithfully tracking it — lands above
+  nominal. Those rows are reported, never asserted against; the aggregate
+  assert covers rows with p <= ``AGG_MAX_P``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import accel, dynamics
+from repro.kernels import ops
+from repro.sweep import (SweepSpec, build_ensemble, build_round_masks,
+                         merge_ensembles, run_ensemble)
+
+from .common import emit
+
+TOPOLOGIES = ("chain", "grid2d")
+ALGORITHMS = ("accel", "accel_adapt")
+MTAP_ALGOS = ("accel", "accel_m:2", "accel_m:3", "accel_m:4")
+DYNAMICS = ("static", "bernoulli:0.05", "bernoulli:0.1", "bernoulli:0.2",
+            "correlated:0.1:3:5")
+
+QUICK = dict(num_trials=2, num_iters=800, backend="pallas",
+             dynamics_grid=("static", "bernoulli:0.1"))
+
+# Failure rate above which the mean-operator tuning model stops being
+# predictive on the chain (see module docstring); heavier rows are reported
+# but excluded from the nominal-vs-adaptive aggregate assert.
+AGG_MAX_P = 0.1
+
+
+def _mean_masked_lambda2(w: np.ndarray, ix: np.ndarray, dyn: str, n: int,
+                         topo: str, num_iters: int, seed: int) -> float:
+    """lambda_2 of the schedule's MEAN effective operator, exactly CRN-paired.
+
+    Samples the same bits ``build_round_masks`` will hand the engine (same
+    ``dynamics.graph_rng`` key), averages the per-edge up-fraction, and
+    applies the mass-preserving reweighting with those fractional bits —
+    the masking rule is linear in the bits, so this IS E[W_eff] under the
+    empirical schedule, bursts and all.
+    """
+    spec = dynamics.parse_dynamics(dyn)
+    rng = dynamics.graph_rng(seed, (topo, n, 0))
+    bits = dynamics.sample_edge_bits(spec, num_iters, ix, n, rng)
+    w_mean = dynamics.masked_w(w[:n, :n], bits.mean(axis=0), ix)
+    vals = np.linalg.eigvalsh(w_mean)
+    return float(vals[-2])
+
+
+def _tail_rho(mse_cell: np.ndarray, floor: float = 1e-7) -> float:
+    """Per-tick contraction over the last clean decay window of a cell.
+
+    The window ends where the trial-mean MSE first dips under ``floor``
+    (past that the f32 plateau contaminates the quotient) and spans the 20
+    preceding ticks.
+    """
+    m = mse_cell.mean(axis=1)
+    below = np.nonzero(m < floor)[0]
+    hi = int(below[0]) if len(below) else len(m) - 1
+    lo = max(hi - 20, 1)
+    if hi <= lo or m[lo] <= 0:
+        return float("nan")
+    return float((m[hi] / m[lo]) ** (1.0 / (2 * (hi - lo))))
+
+
+def _dwell_times(mse: np.ndarray, eps: float, dwell: int = 50) -> np.ndarray:
+    """(G, F) first t after which the MSE stays under eps^2 mse(0) for
+    ``dwell`` consecutive ticks (-1 where never).
+
+    The engine's ``sustained=True`` requires holding the threshold through
+    the END of the horizon, which long f32 runs of large-coefficient
+    recursions fail for a non-physical reason: roundoff drift slowly
+    re-grows the floor after convergence. A dwell window keeps the
+    robustness against non-monotone masked-dynamics dips without charging
+    the algorithms for late-horizon float drift. Crossings within the last
+    ``dwell`` ticks count if they hold to the horizon (the window is padded
+    with hits), so the metric is monotone in the horizon.
+    """
+    thresh = (eps * eps) * mse[:, :1, :]
+    hit = mse <= np.maximum(thresh, 0.0)                       # (G, T+1, F)
+    dwell = min(dwell, hit.shape[1])
+    pad = np.ones((hit.shape[0], dwell - 1, hit.shape[2]), dtype=bool)
+    padded = np.concatenate([hit, pad], axis=1)
+    win = np.lib.stride_tricks.sliding_window_view(
+        padded, dwell, axis=1).all(axis=-1)                    # (G, T+1, F)
+    t = np.argmax(win, axis=1)
+    return np.where(win.any(axis=1), t, -1).astype(np.int64)
+
+
+def _cell_time(times: np.ndarray, idx: list[int]) -> tuple[float, float]:
+    """(mean sustained time over converged trials, converged fraction)."""
+    hits = [times[i, f] for i in idx for f in range(times.shape[1])
+            if times[i, f] >= 0]
+    total = max(len(idx) * times.shape[1], 1)
+    return (float(np.mean(hits)) if hits else -1.0, len(hits) / total)
+
+
+def run(size=16, num_trials=4, num_iters=1300, eps=1e-4, backend="jax",
+        dynamics_grid=DYNAMICS, seed=0):
+    fail_dyns = [d for d in dynamics_grid if d != "static"]
+
+    main_spec = SweepSpec(
+        topologies=TOPOLOGIES, sizes=(size,), designs=("memoryless", "asymptotic"),
+        algorithms=ALGORITHMS, dynamics=tuple(dynamics_grid),
+        num_trials=num_trials, layout="dense", init="paper", seed=seed,
+    )
+    main = build_ensemble(main_spec)
+
+    mtap_spec = SweepSpec(
+        topologies=("chain",), sizes=(size,), designs=("asymptotic",),
+        algorithms=MTAP_ALGOS, dynamics=("static",),
+        num_trials=num_trials, layout="dense", init="paper", seed=seed,
+    )
+    mtap = build_ensemble(mtap_spec)
+
+    # Matched-oracle minis: one accel cell per (topology, failure dynamics),
+    # alpha pre-solved from the mean masked operator. Same seed -> same graph
+    # draw, same init block, and (graph-keyed RoundMasks sampling) the same
+    # per-round failure bits as the nominal/adaptive cells they pair with.
+    theta = accel.theta_asymptotic(0.5)
+    oracle_alpha: dict[tuple[str, str], float] = {}
+    oracle_minis = []
+    for topo in TOPOLOGIES:
+        i_ref = next(i for i, c in enumerate(main.configs)
+                     if c.topology == topo and c.algorithm == "accel")
+        n = int(main.node_counts[i_ref])
+        w = np.asarray(main.ws[i_ref], dtype=np.float64)
+        ix = main.edge_index(i_ref)
+        for dyn in fail_dyns:
+            lam_eff = _mean_masked_lambda2(w, ix, dyn, n, topo, num_iters, seed)
+            al = accel.alpha_star(lam_eff, theta)
+            oracle_alpha[(topo, dyn)] = al
+            oracle_minis.append(build_ensemble(SweepSpec(
+                topologies=(topo,), sizes=(size,), designs=("asymptotic",),
+                alphas=(al,), algorithms=("accel",), dynamics=(dyn,),
+                num_trials=num_trials, layout="dense", init="paper", seed=seed,
+            )))
+
+    ens = merge_ensembles(main, mtap, *oracle_minis)
+    oracle_start = main.num_configs + mtap.num_configs
+    masks = build_round_masks(ens, num_iters, seed=seed)
+
+    def _go():
+        return run_ensemble(ens, num_iters=num_iters, backend=backend,
+                            round_masks=masks)
+
+    res = _go()                         # warm: trace + compile
+    t0 = time.perf_counter()
+    res = _go()
+    us = (time.perf_counter() - t0) * 1e6
+    times = _dwell_times(res.mse, eps)                        # (G, F)
+
+    pallas_mode = "pallas-interpret" if ops.use_interpret() else "compiled"
+    mode = pallas_mode if backend == "pallas" else "compiled"
+    nan = float("nan")
+    rows = []
+
+    def _row(bench, **kw):
+        base = {"bench": bench, "topology": "", "dynamics": "", "variant": "",
+                "n": size, "t_avg": nan, "frac_converged": nan,
+                "t_oracle_ratio": nan, "rho_design": nan, "rho_tail": nan,
+                "t_lower_bound": nan, "mode": mode, "us_per_call": nan}
+        base.update(kw)
+        rows.append(base)
+        return base
+
+    # ---- adaptive grid: memoryless / nominal / adaptive / oracle ----------
+    agg_nom, agg_adapt = 0.0, 0.0
+    agg_rows = 0
+    for topo in TOPOLOGIES:
+        for dyn in dynamics_grid:
+            variants = {
+                "memoryless": [i for i in res.cells(
+                    topology=topo, dynamics=dyn, algorithm="accel",
+                    design="memoryless") if i < oracle_start],
+                "nominal": [i for i in res.cells(
+                    topology=topo, dynamics=dyn, algorithm="accel",
+                    design="asymptotic") if i < oracle_start],
+                "adaptive": [i for i in res.cells(
+                    topology=topo, dynamics=dyn, algorithm="accel_adapt",
+                    design="asymptotic") if i < oracle_start],
+            }
+            if dyn != "static":
+                variants["oracle"] = [i for i in res.cells(
+                    topology=topo, dynamics=dyn, algorithm="accel",
+                    design="asymptotic") if i >= oracle_start]
+            t, fracs = {}, {}
+            for name, idx in variants.items():
+                t[name], fracs[name] = _cell_time(times, idx)
+                if t[name] < 0:
+                    print(f"fig_adaptive[{topo} {dyn} {name}]: no trial "
+                          f"sustained eps={eps} within {num_iters} rounds "
+                          f"(raise --iters or eps)")
+            for name in variants:
+                ratio = (t[name] / t["oracle"]
+                         if t.get("oracle", -1) > 0 and t[name] > 0
+                         and name != "oracle" else nan)
+                _row(f"adaptive_{topo}_{dyn}_{name}", topology=topo,
+                     dynamics=dyn, variant=name, t_avg=t[name],
+                     frac_converged=fracs[name], t_oracle_ratio=ratio)
+            msg = " ".join(f"{k}={v:.0f}" for k, v in t.items())
+            print(f"fig_adaptive[{topo} {dyn}]: {msg}")
+            if dyn != "static" and t.get("nominal", -1) > 0 \
+                    and t.get("adaptive", -1) > 0 \
+                    and dynamics.parse_dynamics(dyn).p <= AGG_MAX_P:
+                agg_nom += t["nominal"]
+                agg_adapt += t["adaptive"]
+                agg_rows += 1
+            if dyn == "bernoulli:0.1" and t.get("oracle", -1) > 0 \
+                    and t.get("adaptive", -1) > 0:
+                r = t["adaptive"] / t["oracle"]
+                assert r <= 1.5, (
+                    f"accel_adapt {r:.2f}x oracle on {topo} at p=0.1 "
+                    f"(acceptance bound 1.5x)")
+
+    # Paired (CRN) aggregate over every failure row: adaptation must recover
+    # at least what the nominal design loses. Per-row margins vary (see
+    # module docstring); the aggregate is the robust acceptance anchor.
+    if agg_rows:
+        print(f"fig_adaptive[aggregate over {agg_rows} failure rows]: "
+              f"nominal={agg_nom:.0f} adaptive={agg_adapt:.0f}")
+        assert agg_adapt <= agg_nom, (
+            f"adaptive aggregate {agg_adapt:.0f} worse than nominal "
+            f"{agg_nom:.0f} over {agg_rows} CRN-paired failure rows")
+
+    # ---- M-tap frontier column (static chain) -----------------------------
+    i0 = next(i for i in range(main.num_configs, oracle_start)
+              if res.configs[i].algorithm == "accel")
+    n0 = int(ens.node_counts[i0])
+    vals = np.linalg.eigvalsh(np.asarray(ens.ws[i0][:n0, :n0], np.float64))
+    lam2, lam_n = float(vals[-2]), float(vals[0])
+    t_lb = accel.averaging_time_lower_bound(eps, lam_n, lam2)
+    mtap_t = {}
+    for spec_name in MTAP_ALGOS:
+        idx = [i for i in range(main.num_configs, oracle_start)
+               if res.configs[i].algorithm == spec_name]
+        t_avg, frac = _cell_time(times, idx)
+        per_trial = times[idx[0]]
+        rho_d = res.configs[idx[0]].rho_accel
+        rho_t = _tail_rho(res.mse[idx[0]])
+        mtap_t[spec_name] = (t_avg, per_trial, rho_d, rho_t)
+        _row(f"mtap_chain_{spec_name.replace(':', '')}", topology="chain",
+             dynamics="static", variant=spec_name, t_avg=t_avg,
+             frac_converged=frac, rho_design=rho_d, rho_tail=rho_t,
+             t_lower_bound=float(t_lb),
+             t_oracle_ratio=(t_avg / t_lb if t_avg > 0 else nan))
+        print(f"fig_adaptive[mtap {spec_name}]: t={t_avg:.1f} "
+              f"rho_design={rho_d:.4f} rho_tail={rho_t:.4f} "
+              f"T_lb={t_lb} ratio={t_avg / t_lb if t_avg > 0 else nan:.2f}")
+
+    t2, pt2 = mtap_t["accel"][0], mtap_t["accel"][1]
+    assert np.array_equal(pt2, mtap_t["accel_m:2"][1]), (
+        "accel_m:2 must reduce exactly to the two-tap recursion")
+    for spec_name in ("accel_m:3", "accel_m:4"):
+        t_m, _, rho_d, rho_t = mtap_t[spec_name]
+        assert rho_d < mtap_t["accel"][2], (
+            f"{spec_name} design rho {rho_d:.4f} not below two-tap "
+            f"{mtap_t['accel'][2]:.4f}")
+        assert rho_t < mtap_t["accel"][3], (
+            f"{spec_name} measured tail rho {rho_t:.4f} not below two-tap "
+            f"{mtap_t['accel'][3]:.4f}")
+        if t_m > 0 and t2 > 0:
+            assert t_m <= t2, (
+                f"{spec_name} sustained time {t_m:.1f} above two-tap {t2:.1f} "
+                f"on the static chain at eps={eps}")
+
+    _row(f"sweep_adaptive_{backend}_G{ens.num_configs}x{num_iters}it",
+         variant="all", us_per_call=us)
+    emit("fig_adaptive", rows)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer trials/rounds on the pallas backend")
+    ap.add_argument("--backend", default=None, choices=["jax", "pallas"])
+    ap.add_argument("--size", type=int, default=None)
+    ap.add_argument("--trials", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    a = ap.parse_args(argv)
+    kw = dict(QUICK) if a.quick else {}
+    if a.backend is not None:
+        kw["backend"] = a.backend
+    if a.size is not None:
+        kw["size"] = a.size
+    if a.trials is not None:
+        kw["num_trials"] = a.trials
+    if a.iters is not None:
+        kw["num_iters"] = a.iters
+    run(**kw)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,11 @@ __all__ = [
     "theta_ls",
     "theta_asymptotic",
     "alpha_star",
+    "alpha_star_jnp",
     "alpha_star_from_w",
+    "two_tap_interval_weights",
+    "m_tap_weights",
+    "averaging_time_lower_bound",
     "rho_accel",
     "rho_accel_bound",
     "gain_bound",
@@ -147,9 +151,147 @@ def alpha_star(lam2: float, theta: Theta) -> float:
     return float(num / den)
 
 
+def alpha_star_jnp(lam2, theta):
+    """Traceable twin of :func:`alpha_star` for in-scan re-solves.
+
+    Same closed form (Theorem 1 / Eq. 14), but every host-side branch is a
+    ``jnp.where`` so it can run on a traced ``lam2`` inside a jitted scan
+    (the ``accel_adapt`` algorithm re-solves alpha* every round from its
+    power-iteration lambda_2 estimate). Differences from the host oracle,
+    both deliberate:
+
+    * the ``den -> 0`` cutoff follows the *dtype* of ``lam2`` (f32 traces
+      would flush the host's 1e-300 threshold to zero);
+    * a negative discriminant clamps to 0 instead of raising — inside a
+      scan a transiently out-of-model estimate must degrade gracefully,
+      not abort the program. The host twin keeps the loud error.
+
+    ``theta`` may be a :class:`Theta` or a plain ``(t1, t2, t3)`` tuple.
+    Agreement with the host version to f64 roundoff is pinned by
+    ``tests/test_adaptive.py``.
+    """
+    import jax.numpy as jnp
+
+    t1, t2, t3 = theta.as_tuple if isinstance(theta, Theta) else tuple(theta)
+    lam = jnp.asarray(lam2)
+    edge = t2 + (t3 - 1.0) * lam
+    den = edge * edge
+    rad = jnp.maximum(t1 * t1 + t1 * lam * edge, 0.0)
+    num = -((t3 - 1.0) * lam * lam + t2 * lam + 2.0 * t1) - 2.0 * jnp.sqrt(rad)
+    cutoff = jnp.asarray(jnp.finfo(den.dtype).tiny, den.dtype) * 4.0
+    safe = jnp.where(den < cutoff, 1.0, den)
+    return jnp.where(den < cutoff, 0.0, num / safe)
+
+
 def alpha_star_from_w(w: np.ndarray, theta: Theta) -> float:
     """alpha* computed from the matrix itself (convenience wrapper)."""
     return alpha_star(lambda2(w), theta)
+
+
+def two_tap_interval_weights(lam_lo: float, lam_hi: float) -> tuple[float, float, float, float]:
+    """Optimal stationary two-tap weights for a spectral interval [lo, hi].
+
+    Shifted second-order Richardson (stationary Chebyshev limit / shifted
+    heavy ball): for the recursion  x' = a (W x) + b x + c x_prev  with the
+    non-consensus spectrum of W inside [lam_lo, lam_hi] (lam_hi < 1),
+
+        d = 1 - (lo + hi)/2,    h = (hi - lo)/4,
+        a = (d - sqrt(d^2 - 4 h^2)) / (2 h^2),
+        b = -a (lo + hi)/2,     c = 1 - a - b,
+
+    gives the minimax asymptotic rate rho = a*h (= sqrt(-c); every error
+    mode lands on the complex circle |mu| = rho). Returns ``(a, b, c, rho)``.
+
+    The symmetric case lo = -hi reduces *exactly* to Theorem 1 with the
+    asymptotic design theta = (-eps, 0, 1+eps): a = 1 + rho^2, b = 0,
+    c = -rho^2, rho = (1 - sqrt(1 - hi^2)) / hi. The asymmetric case is
+    what Theorem 1 leaves on the table: the paper symmetrizes via the lazy
+    (I + W)/2 map, while Metropolis chains/grids here have lam_N far from
+    -lam_2, so centering the interval (the shift b) strictly beats alpha*
+    tuned to [-lam_2, lam_2]. Used by :func:`m_tap_weights`.
+    """
+    lo, hi = float(lam_lo), float(lam_hi)
+    if not (-1.0 < lo <= hi < 1.0):
+        raise ValueError(f"need -1 < lam_lo <= lam_hi < 1, got [{lo}, {hi}]")
+    d = 1.0 - 0.5 * (lo + hi)
+    h = 0.25 * (hi - lo)
+    if h < 1e-15:
+        # degenerate single-point spectrum: first-order a = 1/d kills it
+        a = 1.0 / d
+        return a, -a * 0.5 * (lo + hi), 1.0 - a - (-a * 0.5 * (lo + hi)), 0.0
+    disc = d * d - 4.0 * h * h  # = (1 - hi)(1 - lo) > 0 on the open interval
+    a = (d - np.sqrt(disc)) / (2.0 * h * h)
+    b = -a * 0.5 * (lo + hi)
+    c = 1.0 - a - b
+    return float(a), float(b), float(c), float(a * h)
+
+
+def m_tap_weights(
+    num_taps: int, lam2: float, lam_n: float | None = None
+) -> tuple[np.ndarray, float]:
+    """Analytic optimal stationary M-tap weights (the memory frontier).
+
+    Weights ``(a, b, c_1, ..., c_{M-1})`` for the one-matvec recursion
+
+        x(t+1) = a W x(t) + b x(t) + sum_m c_m x(t-m),
+
+    minimizing the asymptotic rate over all stationary M-tap schemes given
+    the admitted spectral statistics. Returns ``(weights, rho)``.
+
+    The frontier is an *information* frontier, not a degree frontier:
+
+    * M = 2 admits lambda_2 only, so the design must cover the symmetric
+      interval [-lam2, lam2] — this is exactly Theorem 1's alpha* with the
+      asymptotic theta (pinned by a property test).
+    * M >= 3 admits the second statistic lambda_N, covering the true
+      interval [lam_n, lam2]; by Golub & Varga's saturation theorem the
+      optimal stationary rate over an interval is already achieved at two
+      taps, so the analytic optimum puts *zero* weight on taps older than
+      one round and all of the M >= 3 gain comes from the tighter interval.
+      (Numerically re-confirmed on the discrete chain spectrum in
+      ``tests/test_adaptive.py`` — a direct search over genuine 3-tap
+      weights cannot beat the shifted two-tap rate.)
+
+    So ``accel_m:3`` and ``accel_m:4`` share a rate and differ only in the
+    (zero-padded) carry depth — the honest statement of Yi-Chai-Zhang-style
+    analytic designs under a one-matvec-per-round cost model.
+    """
+    if num_taps < 2:
+        raise ValueError(f"m_tap_weights needs num_taps >= 2, got {num_taps}")
+    if num_taps == 2 or lam_n is None:
+        lo, hi = -abs(float(lam2)), abs(float(lam2))
+    else:
+        lo, hi = float(lam_n), float(lam2)
+    a, b, c, rho = two_tap_interval_weights(lo, hi)
+    weights = np.zeros(num_taps + 1, dtype=np.float64)
+    weights[0], weights[1], weights[2] = a, b, c
+    return weights, rho
+
+
+def averaging_time_lower_bound(eps: float, lam_lo: float, lam_hi: float) -> int:
+    """Chebyshev minimax lower bound on the eps-averaging time.
+
+    Any consensus protocol whose round-t state is a degree-t polynomial in W
+    applied to x(0) — every algorithm in the registry, memoryless through
+    M-tap — has worst-case error over the interval [lam_lo, lam_hi] at
+    least 1/|T_t(sigma)|, sigma = (2 - lo - hi)/(hi - lo) (the Chebyshev
+    extremality theorem; the graph-topological counterpart is the
+    Olshevsky-Tsitsiklis Omega(n^2) chain bound, arXiv:1003.5941). So
+
+        T(eps) >= ceil( arccosh(1/eps) / arccosh(sigma) ).
+
+    ``benchmarks/fig_adaptive.py`` reports T_measured / T_lb per cell — the
+    distance-to-optimal column for the whole registry.
+    """
+    lo, hi = float(lam_lo), float(lam_hi)
+    if not (-1.0 < lo <= hi < 1.0):
+        raise ValueError(f"need -1 < lam_lo <= lam_hi < 1, got [{lo}, {hi}]")
+    if not (0.0 < eps < 1.0):
+        raise ValueError(f"need 0 < eps < 1, got {eps}")
+    sigma = (2.0 - lo - hi) / max(hi - lo, 1e-15)
+    if sigma <= 1.0 + 1e-15:
+        return 1
+    return int(np.ceil(np.arccosh(1.0 / eps) / np.arccosh(sigma)))
 
 
 def rho_accel(lam2: float, theta: Theta) -> float:

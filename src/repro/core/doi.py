@@ -16,7 +16,11 @@ vs O(K^2) for the prior DOI variants — the paper's initialization selling poin
 
 This module simulates the algorithm faithfully at the network level (numpy);
 ``repro.dist.gossip.distributed_lambda2`` runs the same algorithm *inside* a
-jitted SPMD program over a mesh axis.
+jitted SPMD program over a mesh axis, and ``repro.core.algorithms``'s
+``accel_adapt`` carries the same recursion as auxiliary scan state (the
+``sup_normalize`` / ``gelfand_quotient`` primitives below are backend-
+agnostic — pass ``xp=jax.numpy`` to trace them — so all three layers share
+one definition of Algorithm 1's normalization and Gelfand extraction).
 """
 from __future__ import annotations
 
@@ -27,7 +31,40 @@ import numpy as np
 
 from .topology import Graph, diameter
 
-__all__ = ["DoiResult", "estimate_lambda2", "doi_cost", "max_consensus_rounds"]
+__all__ = [
+    "DoiResult",
+    "estimate_lambda2",
+    "doi_cost",
+    "max_consensus_rounds",
+    "sup_normalize",
+    "gelfand_quotient",
+]
+
+
+def sup_normalize(v, axis=None, xp=np):
+    """Algorithm 1 step 3: normalize by ||v||_inf, guarding the zero vector.
+
+    In the network the sup-norm is a max-consensus; here it is an ``xp.max``.
+    ``axis`` (with keepdims) supports batched carries, e.g. per-cell
+    normalization of a (G, N, F) probe block with ``axis=(1, 2)``.
+    Backend-agnostic: ``xp=np`` on the host, ``xp=jax.numpy`` in a scan.
+    """
+    norm = xp.max(xp.abs(v), axis=axis, keepdims=axis is not None)
+    return v / xp.where(norm > 0, norm, xp.ones_like(norm))
+
+
+def gelfand_quotient(wv, v, axis=None, xp=np):
+    """Algorithm 1 step 4: lambda2_hat = ||W v||_inf / ||v||_inf (Gelfand).
+
+    Returns 0 where ``v`` has collapsed to zero (the estimate is undefined;
+    callers treat 0 as "no information"). Same batching/backed conventions
+    as :func:`sup_normalize`, without keepdims (the quotient is a scalar
+    per reduced block).
+    """
+    num = xp.max(xp.abs(wv), axis=axis)
+    den = xp.max(xp.abs(v), axis=axis)
+    return xp.where(den > 0, num / xp.where(den > 0, den, xp.ones_like(den)),
+                    xp.zeros_like(den))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,16 +119,12 @@ def estimate_lambda2(
         v = mv(v)
         ticks_w += 1
         if k % normalize_every == 0:
-            norm = np.max(np.abs(v))  # sup-norm via max-consensus: D ticks
+            v = sup_normalize(v)  # sup-norm via max-consensus: D ticks
             ticks_max += d
-            if norm > 0:
-                v = v / norm
     wv = mv(v)
     ticks_w += 1
-    num = np.max(np.abs(wv))
-    den = np.max(np.abs(v))
     ticks_max += 2 * d  # two sup-norms (can be pipelined; charge both)
-    lam_hat = float(num / den) if den > 0 else 0.0
+    lam_hat = float(gelfand_quotient(wv, v))
     return DoiResult(
         lambda2_hat=lam_hat,
         num_consensus_ticks=ticks_w,

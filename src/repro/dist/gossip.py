@@ -13,6 +13,9 @@ fabric's graph edges, the accelerated variant carrying the ``(x, x_prev)``
 taps across rounds), and ``distributed_lambda2`` is Algorithm 1 run in-mesh —
 power iteration with periodic max-consensus normalization, mirroring the
 host-side ``repro.core.doi`` network simulation op for op.
+``adaptive_accel_gossip`` composes the two: periodic in-mesh re-estimation
+feeding a traced Theorem-1 re-solve between gossip segments — the shard_map
+mirror of the registry's ``accel_adapt`` time-varying coefficient stream.
 
 The edge structure of W is lowered to a static list of permutations (greedy
 matching decomposition of the directed edge set, one ppermute each); per-node
@@ -37,6 +40,7 @@ __all__ = [
     "make_fabric",
     "gossip",
     "accel_gossip",
+    "adaptive_accel_gossip",
     "pairwise_gossip",
     "push_sum_gossip",
     "algorithm_gossip",
@@ -331,6 +335,81 @@ def accel_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int, wire=Non
                         drop_mask=drop_mask)
 
 
+def adaptive_accel_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int,
+                          resolve_every: int | None = None,
+                          doi_iters: int | None = None,
+                          normalize_every: int = 10, v_init=None,
+                          wire=None, drop_mask=None):
+    """Two-tap gossip with periodic in-mesh re-solve of Theorem 1.
+
+    The SPMD mirror of the registry's ``accel_adapt``: before each segment of
+    ``resolve_every`` rounds (default: one leading segment covering the whole
+    run) the pods run Algorithm 1 *in-mesh* (``distributed_lambda2``) and
+    re-solve alpha* from the fresh estimate as traced scalars — the
+    one-program analogue of ``ElasticFabric.refresh_lambda2``, with the
+    ``(x, x_prev)`` taps carried straight across segment boundaries (the
+    recursion never restarts, only its coefficient stream moves).
+
+    The re-solve applies the same one-sided rule as ``accel_adapt``:
+    ``lambda_used = max(fabric.lambda2, lambda2_hat)``. Underestimates are
+    the catastrophic direction for alpha* (real-root regime) and the finite-K
+    power iteration approaches lambda_2 from below, so the fabric's nominal
+    value is a floor; a degraded fabric raises the estimate above it.
+
+    ``v_init`` seeds the (P,) DOI probe; None derives a deterministic
+    integer-hash probe (no key threading, reproducible across hosts).
+    Estimation ticks run on the intact fabric — ``drop_mask``
+    (num_rounds, num_matchings) applies to the consensus rounds only,
+    modelling the deployment where re-tuning is a slow control-plane sweep
+    while per-round losses hit the data path.
+    """
+    from ..core.algorithms import _probe_block
+
+    t = fabric.theta
+    p = fabric.num_pods
+    if p == 1 or num_rounds <= 0:
+        return x
+    if resolve_every is None:
+        resolve_every = num_rounds
+    if resolve_every < 1:
+        raise ValueError(f"resolve_every must be >= 1, got {resolve_every}")
+    idx = jax.lax.axis_index(axis_name)
+    diag = jnp.asarray(np.diag(fabric.w), x.dtype)
+    perms = [(perm, jnp.asarray(wvec, x.dtype))
+             for perm, wvec in edge_permutations(fabric.w)]
+    if drop_mask is not None:
+        drop_mask = jnp.asarray(drop_mask, x.dtype)
+        if drop_mask.shape != (num_rounds, len(perms)):
+            raise ValueError(
+                f"drop_mask shape {drop_mask.shape} != (num_rounds, num_matchings)"
+                f" = ({num_rounds}, {len(perms)})"
+            )
+    if v_init is None:
+        v_init = _probe_block(p, 1)[:, 0].astype(np.float64)
+    lam_floor = jnp.asarray(min(max(fabric.lambda2, 0.0), 0.999999), x.dtype)
+    err = jnp.zeros_like(x) if wire is not None else None
+    x_prev = None
+    for start in range(0, num_rounds, resolve_every):
+        lam_hat = distributed_lambda2(
+            axis_name, p, None, num_iters=doi_iters,
+            normalize_every=normalize_every, fabric=fabric,
+            v_init=v_init, dtype=x.dtype)
+        lam_eff = jnp.clip(jnp.maximum(lam_floor, lam_hat), 0.0, 0.999999)
+        al = accel.alpha_star_jnp(lam_eff, t)
+        a = 1.0 - al + al * t.t3
+        b = al * t.t2
+        c = al * t.t1
+        for r in range(start, min(start + resolve_every, num_rounds)):
+            payload = x
+            if wire is not None:
+                payload, err = wire.encode_decode(x, err)
+            live = None if drop_mask is None else drop_mask[r]
+            xw = _neighbor_sum(x, payload, axis_name, idx, diag, perms, live)
+            xp = x if x_prev is None else x_prev
+            x, x_prev = a * xw + b * x + c * xp, x
+    return x
+
+
 def pairwise_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int,
                     schedule=None, seed: int = 0):
     """Boyd-style asynchronous randomized pairwise gossip, in-mesh.
@@ -450,6 +529,7 @@ def _register_dist_variants():
 
     register_dist_variant("memoryless", gossip)
     register_dist_variant("accel", accel_gossip)
+    register_dist_variant("accel_adapt", adaptive_accel_gossip)
     register_dist_variant("async_pairwise", pairwise_gossip)
     register_dist_variant("push_sum", push_sum_gossip)
 

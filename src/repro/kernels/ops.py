@@ -133,6 +133,13 @@ def batched_round_prim(ws, *, bm: int = 128, bk: int = 128, bf: int = 512,
     (Gp, N, N) activity mask ``m`` is supplied. Operands must already be
     padded to the (bm, bk, bf) tiles — the sweep engine pads ONCE outside its
     scan (see ``repro.sweep.engine``).
+
+    ``coef`` is a traced per-CALL operand, never a compile-time constant:
+    the kernels read it from memory each launch, so per-round coefficient
+    streams (``accel_adapt`` re-solving alpha* every tick from its in-scan
+    estimate) flow through unchanged with zero recompilation — the
+    time-varying coefficient contract (docs/ARCHITECTURE.md) is free at
+    this layer. The same holds for ``batched_segment_round_prim``.
     """
     if interpret is None:
         interpret = use_interpret()

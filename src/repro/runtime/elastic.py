@@ -87,6 +87,7 @@ class ElasticFabric:
     fabric: PodFabric | None = None
     members: list[int] = dataclasses.field(default_factory=list)
     resize_count: int = 0
+    retune_count: int = 0
 
     def bootstrap(self, pod_ids: list[int]) -> PodFabric:
         self.members = sorted(pod_ids)
@@ -118,6 +119,29 @@ class ElasticFabric:
         self.resize_count += 1
         self.fabric = make_fabric(
             len(self.members), self.topology, self.theta, lambda2=lambda2_estimate
+        )
+        return self.fabric
+
+    def refresh_lambda2(self, lambda2_estimate: float) -> PodFabric:
+        """Re-tune Theorem 1 for the CURRENT membership — no graph edit.
+
+        The control-plane twin of the registry's ``accel_adapt`` and the
+        in-mesh ``dist.gossip.adaptive_accel_gossip``: a fresh O(K)
+        Algorithm-1 estimate (link degradation, congestion-induced effective
+        topology drift) re-solves alpha* without touching the member list.
+        All three layers apply the same one-sided rule — the estimate is
+        floored at the fabric's nominal lambda_2, because underestimates
+        (the finite-K transient approaches lambda_2 from below) put alpha*
+        in the slow real-root regime while overestimates degrade smoothly,
+        and degradation only moves the effective lambda_2 up. Re-seeding
+        downward after a topology improvement goes through ``resize``.
+        """
+        if self.fabric is None:
+            raise RuntimeError("bootstrap the fabric before re-tuning")
+        est = max(float(lambda2_estimate), self.fabric.lambda2)
+        self.retune_count += 1
+        self.fabric = make_fabric(
+            len(self.members), self.topology, self.theta, lambda2=est
         )
         return self.fabric
 

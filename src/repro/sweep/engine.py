@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 
 import numpy as np
 
@@ -66,6 +67,24 @@ _TRACE_COUNT = 0
 
 def trace_count() -> int:
     return _TRACE_COUNT
+
+
+def _algo_init(algo, x0_p, coefs_p, mask_p):
+    """Dispatch ``init_carry`` across contract generations (trace time).
+
+    The time-varying-coefficient contract passes the partition's traced
+    param rows and node mask so aux-carrying algorithms can seed estimator
+    state; registrations written against the original one-argument contract
+    (including user registrations outside this repo) keep working via the
+    same signature-inspection idiom as ``grid._sparse_tick_rho``.
+    """
+    try:
+        takes = "params" in inspect.signature(algo.init_carry).parameters
+    except (TypeError, ValueError):
+        takes = False
+    if takes:
+        return algo.init_carry(x0_p, params=coefs_p, mask=mask_p)
+    return algo.init_carry(x0_p)
 
 
 def _dense_round_prim(wsp, renorm: str):
@@ -308,7 +327,8 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
         x_all = disp[0] if len(disp) == 1 else jnp.concatenate(disp, axis=0)
         return tuple(new_carry), mse_of(x_all)
 
-    init = tuple(algo.init_carry(x0[s:e]) for algo, s, e, _ in parts)
+    init = tuple(_algo_init(algo, x0[s:e], coefs[s:e], mask[s:e])
+                 for algo, s, e, _ in parts)
     t_idx = jnp.arange(num_iters, dtype=jnp.int32)
     carry_fin, mse_tail = jax.lax.scan(
         body, init, (t_idx, bits) if dynamic else t_idx, length=num_iters
@@ -388,7 +408,17 @@ def run_batch(
         (stop - start, N, F) numpy array. This exposes the raw two-state
         (value, mass) taps of the push-sum family so conformance tests can
         assert total-mass conservation directly, not just the displayed
-        ratio.
+        ratio. Only the algorithm's ``num_taps`` state slots are returned:
+        auxiliary carry slots (``num_aux`` — estimator probes, running
+        spectral estimates) are internal state and invariant-exempt by
+        contract.
+
+    Note on ``trial_chunk`` with aux-carrying algorithms: ``accel_adapt``
+    pools its F trial columns as independent estimator probes (the Gelfand
+    quotient maxes over all of them), so chunking the F axis changes the
+    probe pool and hence the coefficient stream — chunked and unchunked
+    adaptive runs agree in distribution but not to roundoff. Static-
+    coefficient algorithms keep the exact-match guarantee.
 
     Returns:
       (x_final (G, N, F), mse (G, T+1, F)) as numpy arrays, plus the taps
@@ -655,9 +685,12 @@ def run_batch(
         return x_fin, mse
     # G-padding only ever extends the LAST partition, so slicing each
     # partition's taps to its pre-padding span drops exactly the pad rows.
+    # Aux carry slots (everything past num_taps) are algorithm-internal
+    # estimator state, not network state: excluded by contract.
     taps = tuple(
         (name, s_p, e_p, tuple(
-            np.asarray(t)[:e_p - s_p, :n_orig, :f_orig] for t in sub))
+            np.asarray(t)[:e_p - s_p, :n_orig, :f_orig]
+            for t in sub[:get_algorithm(name).num_taps]))
         for (name, s_p, e_p), sub in zip(parts_out, carry_fin)
     )
     return x_fin, mse, taps

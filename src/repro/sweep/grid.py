@@ -170,6 +170,22 @@ def _surrogate_spectrum(
     return np.concatenate([np.linspace(lam_n, lam2, k), [1.0]])
 
 
+def _design_params(algo, th, al, lam2):
+    """design_params dispatch: lam2-aware (adaptive family) or classic 2-arg.
+
+    Aux-carrying algorithms seed their in-scan estimator from the cell's
+    nominal lambda_2, so their ``design_params`` takes it as a keyword; the
+    original two-argument contract keeps working unchanged.
+    """
+    try:
+        takes = "lam2" in inspect.signature(algo.design_params).parameters
+    except (TypeError, ValueError):
+        takes = False
+    if takes:
+        return algo.design_params(th, al, lam2=lam2)
+    return algo.design_params(th, al)
+
+
 def _sparse_tick_rho(algo, lam2, rho_mem, vals, edges, n):
     """tick_rho for a non-densifiable cell; 4-arg fallback for old overrides."""
     try:
@@ -576,7 +592,7 @@ def build_ensemble(spec: SweepSpec) -> Ensemble:
                         )
                         cells = [(th, float(al)) for al in alphas]
                     for th, al in cells:
-                        params = algo.design_params(th, al)
+                        params = _design_params(algo, th, al, lam2)
                         if th is None:
                             rho_acc = rho_mem
                         else:

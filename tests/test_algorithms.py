@@ -112,6 +112,10 @@ def test_every_registered_algorithm_matches_host_reference(conformance_grid, bac
                        return_taps=True)
     part_of = {}
     for name, s, e, taps in res.taps:
+        # aux-carry contract: return_taps exposes exactly num_taps state
+        # slots — estimator probes / running spectral estimates (num_aux)
+        # are internal and never leak into the displayed-state surface
+        assert len(taps) == alg.get_algorithm(name).num_taps, name
         for i in range(s, e):
             part_of[i] = (s, taps)
     seen = set()
@@ -123,8 +127,12 @@ def test_every_registered_algorithm_matches_host_reference(conformance_grid, bac
         # f32 rounding scales with the round's coefficient mass: ~1 for the
         # one-matvec family, the l1 coefficient norm for the Horner ticks;
         # the ratio family's displayed quotient compounds the rounding of
-        # two states, hence the extra factor
+        # two states, hence the extra factor. ref_tol_factor widens the
+        # TRAJECTORY comparisons only (feedback/non-normal recursions
+        # amplify backend-order noise); the invariant checks below stay at
+        # their exact tolerances for every algorithm.
         tol = 1e-6 * max(1.0, float(np.abs(ens.coefs[i]).sum()))
+        tol *= a.ref_tol_factor
         if a.invariant == "mass":
             tol *= 4.0
         x32, mse32 = a.reference_run(
@@ -141,7 +149,8 @@ def test_every_registered_algorithm_matches_host_reference(conformance_grid, bac
             ens.ws[i][:n, :n], ens.x0[i][:n], ens.coefs[i], 45,
             bits=masks.bits[:, i, :e], idx=masks.idx[i, :e], dtype=np.float64,
         )
-        np.testing.assert_allclose(res.x_final[i][:n], x64, atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(res.x_final[i][:n], x64,
+                                   atol=1e-5 * a.ref_tol_factor, rtol=1e-4)
         if a.invariant == "mass":
             # push-sum family: the displayed ratio's node mean is NOT
             # invariant, but the TOTAL of each carry tap is — the value tap

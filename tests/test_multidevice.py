@@ -245,6 +245,50 @@ def test_masked_gossip_degrades_gracefully_p4():
 
 
 @pytest.mark.slow
+def test_adaptive_accel_gossip_p4():
+    """In-mesh adaptive recursion: periodic Algorithm-1 re-solve composed
+    with the accelerated rounds. Static fabric: the floored estimate pins
+    alpha at the nominal alpha*, so the trajectory tracks plain accel_gossip
+    to f32 noise and still reaches the mean; pod mean is conserved; the
+    registry dispatcher routes to the identical program."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import make_fabric
+        from repro.dist.gossip import accel_gossip, adaptive_accel_gossip, algorithm_gossip
+        mesh = jax.make_mesh((4,), ("pod",))
+        fab = make_fabric(4, "chain")
+        R = max(fab.rounds_for(1e-3), 8)
+
+        def runner(fn, **kw):
+            def body(b):
+                return fn(b[0], "pod", fab, R, **kw)[None]
+            return jax.jit(shard_map(body, mesh=mesh, in_specs=P("pod"),
+                                     out_specs=P("pod"), check_rep=False))
+
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 64)), jnp.float32)
+        y = runner(adaptive_accel_gossip, resolve_every=4, doi_iters=8)(x)
+        target = x.mean(axis=0)
+        rel = float(jnp.linalg.norm(y - target[None])
+                    / jnp.linalg.norm(x - target[None]))
+        assert rel < 2e-3, rel
+        # pod mean conserved through estimator + re-solve composition
+        assert float(jnp.abs(y.mean(0) - x.mean(0)).max()) < 1e-5
+        # floored-at-nominal on a static fabric == plain accel up to the f32
+        # in-mesh alpha* re-solve's last-ulp coefficient difference
+        y0 = runner(accel_gossip)(x)
+        assert float(jnp.abs(y - y0).max()) < 1e-4
+        # registry dispatch routes to the identical program
+        y2 = runner(algorithm_gossip, algorithm="accel_adapt",
+                    resolve_every=4, doi_iters=8)(x)
+        assert float(jnp.abs(y - y2).max()) == 0.0
+        print("OK adaptive gossip", rel)
+    """)
+    assert "OK adaptive gossip" in out
+
+
+@pytest.mark.slow
 def test_inmesh_doi_matches_theory():
     out = _run("""
         import jax, jax.numpy as jnp

@@ -72,6 +72,27 @@ def test_gate_covers_directed_lane_rows():
     assert any("SKIP" in ln for ln in lines)
 
 
+def test_gate_covers_adaptive_lane_rows():
+    # fig_adaptive's whole-grid timing row is sweep_-prefixed so it gates;
+    # its per-cell accuracy rows (adaptive_* / mtap_*) are tracked, never
+    # gated — averaging times are asserted inside the bench itself.
+    fresh = [
+        _row("sweep_adaptive_pallas_G16x800it", 330.0, "pallas-interpret"),
+        _row("adaptive_chain_bernoulli:0.1_adaptive", 999999.0, "pallas-interpret"),
+        _row("mtap_chain_accel_m3", 999999.0, "pallas-interpret"),
+    ]
+    base = {"sweep_adaptive_pallas_G16x800it": _row(
+        "sweep_adaptive_pallas_G16x800it", 100.0, "pallas-interpret")}
+    lines, failures = bench_run._gate_rows(fresh, base, 1.5)
+    assert failures == [("sweep_adaptive_pallas_G16x800it", 3.3)]
+    assert not any("adaptive_chain" in ln or "mtap_" in ln for ln in lines)
+    # like-for-like only: the same lane re-stamped compiled must skip
+    fresh = [_row("sweep_adaptive_pallas_G16x800it", 330.0, "compiled")]
+    lines, failures = bench_run._gate_rows(fresh, base, 1.5)
+    assert failures == []
+    assert any("SKIP" in ln for ln in lines)
+
+
 def test_gate_ignores_untracked_and_new_rows():
     fresh = [
         _row("simulator_numpy", 999999.0, "compiled"),   # not a gated prefix
