@@ -72,6 +72,50 @@ def run():
                  "us_per_call": _time(f_pair), "mode": pallas_mode,
                  "derived": "matvec + FMA, x_w via HBM"})
 
+    # batched round at static vs autotuned tiles. The autotuner only varies
+    # output-parallel tiles (bm/bf), so both rows compute bit-identical
+    # results; the delta is pure blocking efficiency. Under the default
+    # REPRO_KERNEL_TUNE=cache with a cold cache the tuned tiles degrade to
+    # the static heuristic and the two rows coincide — set
+    # REPRO_KERNEL_TUNE=full to measure and persist a real winner.
+    gb, nb, fb = 2, 128, 128
+    wsb = jnp.asarray(np.stack([w[:nb, :nb]] * gb), jnp.float32)
+    xsb = jnp.asarray(rng.standard_normal((gb, nb, fb)), jnp.float32)
+    xpb = jnp.asarray(rng.standard_normal((gb, nb, fb)), jnp.float32)
+    cfb = jnp.asarray(np.tile([1.1, 0.2, -0.3], (gb, 1)), jnp.float32)
+    interp = ops.use_interpret()
+    sbm, sbk, sbf = ops._round_tiles(fb)
+    tbm, tbk, tbf = ops.round_tiles(nb, fb, gb, tune=True)
+
+    def f_static():
+        return ops.gossip_round_batched_pallas(
+            wsb, xsb, xpb, cfb, bm=sbm, bk=sbk, bf=sbf, interpret=interp)
+
+    def f_tuned():
+        return ops.gossip_round_batched_pallas(
+            wsb, xsb, xpb, cfb, bm=tbm, bk=tbk, bf=tbf, interpret=interp)
+    rows.append({"bench": f"gossip_round_batched_static_G{gb}N{nb}F{fb}",
+                 "us_per_call": _time(f_static), "mode": pallas_mode,
+                 "derived": f"static tiles ({sbm},{sbk},{sbf})"})
+    rows.append({"bench": f"gossip_round_batched_tuned_G{gb}N{nb}F{fb}",
+                 "us_per_call": _time(f_tuned), "mode": pallas_mode,
+                 "derived": f"autotuned tiles ({tbm},{tbk},{tbf})"})
+
+    # ELL segment round at the same footprint (ring topology, low degree):
+    # the sparse engine's workhorse, gated like the dense rows.
+    gs = topology.sparse_ring(nb)
+    e_w, d_w = weights.metropolis_hastings_edges(gs)
+    nbr, wgt, wrev, slot, diag = ops.build_ell(gs.edges, e_w, d_w, nb)
+    xseg = jnp.asarray(rng.standard_normal((nb, fb)), jnp.float32)
+    xpseg = jnp.asarray(rng.standard_normal((nb, fb)), jnp.float32)
+
+    def f_seg():
+        return ops.segment_round(
+            nbr, wgt, slot, diag, xseg, xpseg, 1.1, 0.2, -0.3)
+    rows.append({"bench": f"segment_round_N{nb}F{fb}",
+                 "us_per_call": _time(f_seg), "mode": pallas_mode,
+                 "derived": "ELL segment reduce, auto-padded wrapper"})
+
     # batched sweep engine: a full topology x design grid in one program.
     # Build the ensemble once and warm each backend with an untimed call so
     # the row tracks steady-state scan throughput, not host eigensolves or

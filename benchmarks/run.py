@@ -31,7 +31,76 @@ import time
 
 # rows gated by --check: the warmed kernel/engine rows. The simulator_* rows
 # include jit trace+compile time and host eigensolves — tracked, not gated.
-GATE_PREFIXES = ("gossip_round", "sweep_", "ssd_")
+GATE_PREFIXES = ("gossip_round", "segment_round", "sweep_", "ssd_")
+
+
+def _trajectory_path() -> str:
+    from .common import OUT_DIR
+
+    return os.path.join(OUT_DIR, "TRAJECTORY.jsonl")
+
+
+def _append_trajectory(rows, path: str | None = None) -> None:
+    """Append one per-commit line of gate-row timings to TRAJECTORY.jsonl.
+
+    The line holds (commit, unix_time, {bench: {us_per_call, mode}}) for
+    every GATE_PREFIXES row — the tracked perf trajectory that accumulates
+    across commits (the BENCH_*.json files only ever hold the latest run).
+    Called from the bench tiers, never from --check: a gate run must not
+    stamp its own machine-local timings into the history it gates against.
+    """
+    entry = {
+        r["bench"]: {"us_per_call": float(r["us_per_call"]),
+                     "mode": r.get("mode")}
+        for r in rows if r["bench"].startswith(GATE_PREFIXES)
+    }
+    if not entry:
+        return
+    commit = os.environ.get("GITHUB_SHA", "").strip()
+    if not commit:
+        import subprocess
+
+        try:
+            commit = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True, text=True, timeout=10,
+            ).stdout.strip()
+        except (OSError, subprocess.SubprocessError):
+            commit = ""
+    line = {"commit": commit, "unix_time": time.time(), "rows": entry}
+    path = path or _trajectory_path()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+
+
+def _trajectory_rows(path: str | None = None) -> dict:
+    """bench name -> most recent trajectory row dict ({us_per_call, mode}).
+
+    Later lines win; unparseable lines are skipped (the file is appended by
+    many commits on many machines — one bad line must not kill the gate).
+    Missing file -> empty dict: the gate then runs purely off the baseline.
+    """
+    path = path or _trajectory_path()
+    out: dict = {}
+    try:
+        with open(path) as f:
+            for raw in f:
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    line = json.loads(raw)
+                    rows = line["rows"]
+                except (ValueError, KeyError, TypeError):
+                    continue
+                if isinstance(rows, dict):
+                    for name, r in rows.items():
+                        if isinstance(r, dict) and "us_per_call" in r:
+                            out[name] = {"bench": name, **r}
+    except OSError:
+        return {}
+    return out
 
 
 def _gate_rows(fresh, base_rows, ratio_max):
@@ -81,7 +150,11 @@ def _check(baseline_path: str) -> int:
               f"`python -m benchmarks.run --quick` and commit the root "
               f"BENCH_kernel_perf.json to start the trajectory")
         return 1
-    base_rows = {r["bench"]: r for r in base["rows"]}
+    # The tracked per-commit trajectory widens the baseline: rows that only
+    # exist in TRAJECTORY.jsonl (e.g. a bench added after the last committed
+    # baseline refresh) still gate. The baseline JSON wins on conflicts — it
+    # is the deliberately stamped reference, the trajectory the running log.
+    base_rows = {**_trajectory_rows(), **{r["bench"]: r for r in base["rows"]}}
 
     from . import kernel_perf
 
@@ -115,7 +188,7 @@ def _quick() -> None:
     # would double the most expensive interpret-mode bench of the job.
     from . import fig34_scaling, kernel_perf
 
-    kernel_perf.run()
+    _append_trajectory(kernel_perf.run())
     fig34_scaling.run(
         trials=2,
         rgg_sizes=(30, 50),
@@ -161,7 +234,7 @@ def main() -> None:
     fig5_finite_time.run(sizes=(50, 100, 150) if full else (40, 80), trials=10 if full else 3)
     init_cost.run()
     sync_cost.run()
-    kernel_perf.run()
+    _append_trajectory(kernel_perf.run())
     roofline_table.run(mesh="single")
     roofline_table.run(mesh="multi")
     print(f"benchmarks done in {time.time()-t0:.0f}s")

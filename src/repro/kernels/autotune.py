@@ -1,0 +1,233 @@
+"""Block-size autotuner for the Pallas round kernels.
+
+The fused round kernels are tiled by (bm, bk, bf) — dense — or (bm, bd, bf)
+— ELLPACK segment — block sizes. Historically those were hard-coded
+heuristics; this module turns them into a measured choice with three modes,
+selected by ``REPRO_KERNEL_TUNE``:
+
+    off    always return the static heuristic (the pre-autotuner tiles)
+    cache  (default) return a cached winner if one exists — in-process
+           first, then the JSON cache — else the static heuristic; never
+           spends time measuring
+    full   on a cache miss, time every candidate with the caller-provided
+           bench closure and persist the winner to both caches
+
+Caches
+------
+In-process: a plain dict keyed by (device_key, problem_key) — one entry per
+(kind, G, N, F) problem per process.  On disk: a JSON file keyed by device
+kind (``cpu:TFRT_CPU`` / ``tpu:TPU v5e`` …) so a cache written on one
+accelerator generation never leaks onto another. Default location
+``~/.cache/repro/kernel_tune.json``, overridable via
+``REPRO_KERNEL_TUNE_CACHE``. Corrupt or unreadable cache files are treated
+as empty, never fatal.
+
+Bit-identicality contract
+-------------------------
+Candidates vary ONLY the output-parallel tiles bm (rows) and bf (feature
+columns). The contraction tiles — bk for the dense matvec, bd for the
+segment slot axis — are pinned to the static values, because splitting the
+contraction differently reorders the float accumulation and would make the
+"winner" numerically different from the static tiles. Varying bm/bf only
+repartitions which grid step computes which output block; every candidate
+therefore produces bit-identical results (tests/test_autotune.py asserts
+this property on both kernel families).
+
+The bench closure is supplied by the caller (``repro.kernels.ops``) so this
+module never imports the kernels — it only ranks (tiles -> seconds).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Callable, Iterable
+
+import jax
+
+__all__ = [
+    "static_round_tiles",
+    "static_segment_tiles",
+    "round_candidates",
+    "segment_candidates",
+    "get_tiles",
+    "device_key",
+    "cache_path",
+    "clear_memory_cache",
+    "time_candidate",
+]
+
+_BK = 128   # dense contraction tile: pinned (reduction order = numerics)
+_BD = 8     # segment slot-axis tile: pinned for the same reason
+
+# in-process winners: {(device_key, problem_key): (bm, bx, bf)}
+_MEM: dict[tuple[str, str], tuple[int, ...]] = {}
+# lazily-loaded disk snapshot per cache path, so repeated misses in
+# ``cache`` mode do not re-read the file
+_DISK: dict[str, dict] = {}
+
+
+def static_round_tiles(f: int) -> tuple[int, int, int]:
+    """The historical dense heuristic: (bm, bk, bf)."""
+    return (128, _BK, 512 if f > 256 else 128)
+
+
+def static_segment_tiles(f: int) -> tuple[int, int, int]:
+    """The historical ELLPACK heuristic: (bm, bd, bf)."""
+    return (128, _BD, 512 if f > 256 else 128)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _axis_candidates(dim: int, sizes: Iterable[int], static: int) -> list[int]:
+    """Tile sizes no larger than the padded axis, static choice always in."""
+    padded = _round_up(max(dim, 1), 128)
+    out = [s for s in sizes if s <= padded]
+    if static not in out:
+        out.append(static)
+    return sorted(set(out))
+
+
+def round_candidates(n: int, f: int) -> list[tuple[int, int, int]]:
+    """Bounded dense candidate grid; bk pinned, bm/bf output-parallel only."""
+    _, _, sbf = static_round_tiles(f)
+    bms = _axis_candidates(n, (128, 256), 128)
+    bfs = _axis_candidates(f, (128, 256, 512), sbf)
+    return [(bm, _BK, bf) for bm in bms for bf in bfs]
+
+
+def segment_candidates(n: int, f: int) -> list[tuple[int, int, int]]:
+    """Bounded ELLPACK candidate grid; bd pinned, bm/bf output-parallel only."""
+    _, _, sbf = static_segment_tiles(f)
+    bms = _axis_candidates(n, (128, 256), 128)
+    bfs = _axis_candidates(f, (128, 256, 512), sbf)
+    return [(bm, _BD, bf) for bm in bms for bf in bfs]
+
+
+def device_key() -> str:
+    """Backend + device kind, the disk-cache namespace."""
+    try:
+        return f"{jax.default_backend()}:{jax.devices()[0].device_kind}"
+    except Exception:  # pragma: no cover - no devices at all
+        return "unknown:unknown"
+
+
+def cache_path() -> Path:
+    env = os.environ.get("REPRO_KERNEL_TUNE_CACHE", "").strip()
+    if env:
+        return Path(env)
+    return Path(os.path.expanduser("~")) / ".cache" / "repro" / "kernel_tune.json"
+
+
+def clear_memory_cache() -> None:
+    """Drop in-process winners and the disk snapshot (tests / bench sweeps)."""
+    _MEM.clear()
+    _DISK.clear()
+
+
+def _mode() -> str:
+    mode = os.environ.get("REPRO_KERNEL_TUNE", "cache").strip().lower() or "cache"
+    if mode not in ("off", "cache", "full"):
+        raise ValueError(
+            f"REPRO_KERNEL_TUNE={mode!r}: expected off, cache, or full")
+    return mode
+
+
+def _problem_key(kind: str, g: int, n: int, f: int) -> str:
+    return f"{kind}:g{g}:n{n}:f{f}:f32"
+
+
+def _disk_load(path: Path) -> dict:
+    spath = str(path)
+    if spath not in _DISK:
+        try:
+            with open(path) as fh:
+                data = json.load(fh)
+            _DISK[spath] = data if isinstance(data, dict) else {}
+        except (OSError, ValueError):
+            _DISK[spath] = {}
+    return _DISK[spath]
+
+
+def _disk_store(path: Path, dev: str, key: str, tiles: tuple[int, ...]) -> None:
+    data = _disk_load(path)
+    data.setdefault(dev, {})[key] = list(tiles)
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "w") as fh:
+            json.dump(data, fh, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS: in-process cache still holds the winner
+
+
+def time_candidate(bench: Callable[[tuple[int, ...]], None],
+                   tiles: tuple[int, ...], reps: int = 3) -> float:
+    """Best-of-reps wall time of one candidate; one warmup call for compile."""
+    bench(tiles)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        bench(tiles)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def get_tiles(
+    kind: str,
+    n: int,
+    f: int,
+    g: int = 1,
+    bench: Callable[[tuple[int, ...]], None] | None = None,
+) -> tuple[int, int, int]:
+    """Resolve (bm, bk|bd, bf) for a (kind, G, N, F) f32 round problem.
+
+    ``kind`` is "round" (dense) or "segment" (ELLPACK). ``bench(tiles)``
+    must run the real kernel once at those tiles and block until done; it is
+    only invoked in ``full`` mode on a cache miss. All modes degrade to the
+    static heuristic rather than raising.
+    """
+    if kind == "round":
+        static = static_round_tiles(f)
+        candidates = round_candidates(n, f)
+    elif kind == "segment":
+        static = static_segment_tiles(f)
+        candidates = segment_candidates(n, f)
+    else:
+        raise ValueError(f"unknown kernel kind {kind!r}")
+
+    mode = _mode()
+    if mode == "off":
+        return static
+
+    dev = device_key()
+    key = _problem_key(kind, g, n, f)
+    hit = _MEM.get((dev, key))
+    if hit is not None:
+        return tuple(hit)
+
+    disk = _disk_load(cache_path()).get(dev, {}).get(key)
+    if disk is not None and len(disk) == 3:
+        tiles = tuple(int(t) for t in disk)
+        _MEM[(dev, key)] = tiles
+        return tiles
+
+    if mode != "full" or bench is None:
+        return static
+
+    timed = []
+    for cand in candidates:
+        try:
+            timed.append((time_candidate(bench, cand), cand))
+        except Exception:
+            continue  # candidate invalid on this backend: skip, never fatal
+    if not timed:
+        return static
+    best = min(timed)[1]
+    _MEM[(dev, key)] = best
+    _disk_store(cache_path(), dev, key, best)
+    return best

@@ -45,6 +45,8 @@ __all__ = [
     "gossip_round_masked_pallas",
     "gossip_round_masked_batched_kernel",
     "gossip_round_masked_batched_pallas",
+    "gossip_round_sender_masked_batched_kernel",
+    "gossip_round_sender_masked_batched_pallas",
 ]
 
 
@@ -335,3 +337,104 @@ def gossip_round_masked_batched_pallas(
         out_shape=jax.ShapeDtypeStruct((g, n, f), jnp.float32),
         interpret=interpret,
     )(coefs, ws, ms, xs, xs, xps)
+
+
+# ---------------------------------------------------------------------------
+# Sender-renorm masked variant: column-stochastic mass preservation.
+#
+#     W_eff = W .* M + diag(1' @ (W .* (1 - M)))       (column renorm)
+#     Y     = a * (W_eff @ X) + b * X + c * Xp
+#
+# The push_sum / ratio_consensus family keeps W COLUMN stochastic: node j's
+# outgoing mass sums to 1 down column j. A dropped edge's mass must return
+# to the SENDER's diagonal — W_eff[j, j] += sum_i W[i, j] * (1 - M[i, j]) —
+# or masking silently creates/destroys mass. Per output row i that is a
+# COLUMN sum of W .* (1 - M), which a row-tiled kernel cannot form from its
+# (i, kk) tile alone: W and M are therefore passed twice, once as the usual
+# (bm, bk) contraction tile and once as the transposed-access (bk, bm) tile
+# at block index (kk, i), whose axis-0 sum accumulates column i's dropped
+# mass across the K grid steps. M is symmetric (per undirected edge, 1 on
+# the diagonal), so the same mask array serves both access patterns.
+# ---------------------------------------------------------------------------
+
+
+def gossip_round_sender_masked_batched_kernel(nk: int, coef_ref, w_ref, wt_ref,
+                                              m_ref, mt_ref, xk_ref, xi_ref,
+                                              xp_ref, y_ref):
+    """Masked matvec + sender-side (column) dropped-mass return per K tile."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    wm = w_ref[0] * m_ref[0]
+    # this K tile's rows are columns of the (kk, i) transposed-access tile:
+    # the (bm,) axis-0 sum of W .* (1 - M) accumulates diag(1' @ (W .* (1-M)))
+    # restricted to senders in the current K block.
+    dropc = jnp.sum(wt_ref[0] * (1.0 - mt_ref[0]), axis=0)
+    y_ref[0] += (
+        jnp.dot(wm, xk_ref[0], preferred_element_type=jnp.float32)
+        + dropc[:, None] * xi_ref[0]
+    )
+
+    @pl.when(k == nk - 1)
+    def _fma():
+        a = coef_ref[0, 0]
+        b = coef_ref[0, 1]
+        c = coef_ref[0, 2]
+        y_ref[...] = a * y_ref[...] + b * xi_ref[...] + c * xp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bf", "interpret"))
+def gossip_round_sender_masked_batched_pallas(
+    ws: jax.Array,
+    ms: jax.Array,
+    xs: jax.Array,
+    xps: jax.Array,
+    coefs: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bf: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sender-renorm masked fused round over a stacked ensemble.
+
+    Operand contract matches ``gossip_round_masked_batched_pallas`` —
+    Ws/Ms (G, N, N), Xs/Xps (G, N, F), coefs (G, 3) — but Ws is column
+    stochastic and Ms MUST be symmetric with ones on the diagonal (per
+    undirected edge activity, as repro.core.dynamics expands it). Requires
+    bm == bk so the transposed-access tile grid lines up.
+    """
+    g, n, k = ws.shape
+    g2, k2, f = xs.shape
+    if g != g2 or k != k2 or xs.shape != xps.shape or coefs.shape != (g, 3) \
+            or ms.shape != ws.shape:
+        raise ValueError(
+            f"shape mismatch: Ws {ws.shape}, Ms {ms.shape}, Xs {xs.shape}, "
+            f"Xps {xps.shape}, coefs {coefs.shape}"
+        )
+    if bm != bk:
+        raise ValueError(f"sender renorm needs square W tiles, got bm={bm} bk={bk}")
+    if n % bm or k % bk or f % bf:
+        raise ValueError(f"shapes ({n},{k},{f}) not multiples of tiles ({bm},{bk},{bf})")
+    nk = k // bk
+    grid = (g, n // bm, f // bf, nk)
+    return pl.pallas_call(
+        functools.partial(gossip_round_sender_masked_batched_kernel, nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda gg, i, j, kk: (gg, 0)),
+            pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+            pl.BlockSpec((1, bk, bm), lambda gg, i, j, kk: (gg, kk, i)),
+            pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+            pl.BlockSpec((1, bk, bm), lambda gg, i, j, kk: (gg, kk, i)),
+            pl.BlockSpec((1, bk, bf), lambda gg, i, j, kk: (gg, kk, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, kk: (gg, i, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, kk: (gg, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bf), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, n, f), jnp.float32),
+        interpret=interpret,
+    )(coefs, ws, ws, ms, ms, xs, xs, xps)

@@ -13,6 +13,7 @@ import contextlib
 import contextvars
 import functools
 import inspect
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental.custom_partitioning import custom_partitioning
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from . import autotune
 from .consensus_update import LANES, consensus_update_pallas
 from .gossip_matvec import gossip_matvec_pallas
 from .gossip_round import (
@@ -27,6 +29,7 @@ from .gossip_round import (
     gossip_round_masked_batched_pallas,
     gossip_round_masked_pallas,
     gossip_round_pallas,
+    gossip_round_sender_masked_batched_pallas,
 )
 from .ref import ssd_chunk_ref
 from .segment_round import (
@@ -34,6 +37,7 @@ from .segment_round import (
     segment_round_masked_batched_pallas,
     segment_round_masked_pallas,
     segment_round_pallas,
+    segment_round_sender_masked_batched_pallas,
 )
 from .ssd_chunk import ssd_chunk_pallas
 
@@ -42,20 +46,36 @@ __all__ = [
     "batched_segment_round_prim",
     "build_ell",
     "consensus_update",
+    "cp_partition_count",
     "gossip_matvec",
     "gossip_round",
     "gossip_round_batched",
     "gossip_round_masked",
     "gossip_round_masked_batched",
+    "round_tiles",
+    "segment_bn",
     "segment_round",
+    "segment_tiles",
     "ssd_scan",
     "use_interpret",
 ]
 
 
 def use_interpret() -> bool:
-    """Pallas interpret mode everywhere except on a real TPU backend."""
-    return jax.default_backend() != "tpu"
+    """Pallas interpret mode everywhere except on a real TPU backend.
+
+    ``REPRO_REQUIRE_COMPILED=1`` turns silent interpret fallback into a hard
+    failure — the CI compiled-bench lane sets it so a kernel quietly running
+    under the interpreter (orders of magnitude slower, and not the artifact
+    being measured) fails the job instead of polluting the trajectory.
+    """
+    interp = jax.default_backend() != "tpu"
+    if interp and os.environ.get("REPRO_REQUIRE_COMPILED", "").strip() == "1":
+        raise RuntimeError(
+            "REPRO_REQUIRE_COMPILED=1 but the Pallas kernels would run in "
+            f"interpret mode (jax backend: {jax.default_backend()!r}); "
+            "run on a TPU backend or unset the flag")
+    return interp
 
 
 def _round_up(x: int, m: int) -> int:
@@ -115,11 +135,141 @@ def gossip_matvec(w, x):
 
 def _round_tiles(f: int) -> tuple[int, int, int]:
     """(bm, bk, bf) MXU-aligned tiles; narrow trial blocks get narrow bf."""
-    return 128, 128, 512 if f > 256 else 128
+    return autotune.static_round_tiles(f)
+
+
+def _round_bench(n: int, f: int, g: int):
+    """Bench closure for the dense autotuner: run one batched round, blocked.
+
+    Dummy operands are cached per padded shape so repeat timings measure the
+    kernel, not host array construction. The ensemble axis is clamped — tile
+    quality is shape-per-graph-driven, and a G=192 sweep grid would make
+    every candidate probe pay the full sweep's memory.
+    """
+    gb = max(1, min(g, 4))
+    arrays = {}
+
+    def bench(tiles):
+        bm, bk, bf = tiles
+        np_, fp_ = _round_up(n, max(bm, bk)), _round_up(f, bf)
+        if (np_, fp_) not in arrays:
+            arrays[(np_, fp_)] = (
+                jnp.full((gb, np_, np_), 1.0 / np_, jnp.float32),
+                jnp.ones((gb, np_, fp_), jnp.float32),
+                jnp.ones((gb, 3), jnp.float32),
+            )
+        ws, xs, coefs = arrays[(np_, fp_)]
+        gossip_round_batched_pallas(
+            ws, xs, xs, coefs, bm=bm, bk=bk, bf=bf, interpret=use_interpret()
+        ).block_until_ready()
+
+    return bench
+
+
+def round_tiles(n: int, f: int, g: int = 1, tune: bool = False):
+    """Autotune-aware (bm, bk, bf) for a dense (G, N, F) round problem.
+
+    ``tune=True`` enables measuring on a cache miss (``REPRO_KERNEL_TUNE=
+    full`` only) — callers must be OUTSIDE any jit trace to pass it, which
+    the sweep engine and the benches are. Jitted wrappers call with the
+    default and get the cached winner or the static heuristic.
+    """
+    bench = _round_bench(n, f, g) if tune else None
+    return autotune.get_tiles("round", n, f, g, bench=bench)
+
+
+# ---------------------------------------------------------------------------
+# custom_partitioning over G: the batched round kernels are embarrassingly
+# parallel over the ensemble axis — every operand (Ws, masks, ELL arrays,
+# states, coefs, bits) carries G as dim 0 and nothing crosses graphs. Without
+# a rule, GSPMD treats the pallas_call as an opaque custom call and
+# replicates it: every device would run the FULL (G, ...) grid. The wrappers
+# below declare "shard dim 0 however the operands are sharded, replicate the
+# rest", so the sweep engine's existing NamedSharding(mesh, P('data')) G
+# layout flows straight through — no shard_map, no replicated dispatch.
+# Dispatch skips the wrapper entirely on single-device processes (the
+# common CPU/test path).
+# ---------------------------------------------------------------------------
+
+_CP_PARTITION_CALLS = 0
+
+
+def cp_partition_count() -> int:
+    """How many times GSPMD invoked a round-kernel partition rule (tests)."""
+    return _CP_PARTITION_CALLS
+
+
+def _g_axis(arg_shapes):
+    """The mesh axis dim 0 is sharded over, from the first sharded operand."""
+    for a in arg_shapes:
+        s = getattr(a, "sharding", None)
+        if isinstance(s, NamedSharding) and len(s.spec) and s.spec[0] is not None:
+            return s.spec[0]
+    return None
+
+
+def _dim0_sharding(mesh, g_ax, ndim):
+    return NamedSharding(mesh, P(*((g_ax,) + (None,) * (ndim - 1))))
+
+
+def _batched_infer(mesh, arg_shapes, result_shape):
+    g_ax = _g_axis(arg_shapes)
+    return _dim0_sharding(mesh, g_ax, len(result_shape.shape))
+
+
+def _make_batched_partition(call):
+    def _partition(mesh, arg_shapes, result_shape):
+        global _CP_PARTITION_CALLS
+        _CP_PARTITION_CALLS += 1
+        g_ax = _g_axis(arg_shapes)
+        arg_shardings = tuple(
+            _dim0_sharding(mesh, g_ax, len(a.shape)) for a in arg_shapes)
+        out_sharding = _dim0_sharding(mesh, g_ax, len(result_shape.shape))
+
+        def lower_fn(*args):
+            return call(*args)
+
+        return mesh, lower_fn, out_sharding, arg_shardings
+
+    return _partition
+
+
+@functools.lru_cache(maxsize=None)
+def _round_cp(variant: str, bm: int, bk: int, bf: int, interpret: bool):
+    """custom_partitioning wrapper for one dense batched-kernel variant.
+
+    Cached per (variant, tiles, interpret) so a sweep's scan body reuses one
+    wrapped callable — custom_partitioning instances are identity-keyed in
+    the jaxpr, and rebuilding one per trace would defeat the jit cache.
+    No Shardy ``sharding_rule``: X's node axis is both contracted (W @ X)
+    and elementwise (the taps), which an einsum-factor rule cannot express;
+    the GSPMD callbacks fully describe the G-only partitioning.
+    """
+    kw = dict(bm=bm, bk=bk, bf=bf, interpret=interpret)
+    if variant == "plain":
+        def call(ws, xs, xps, coefs):
+            return gossip_round_batched_pallas(ws, xs, xps, coefs, **kw)
+    elif variant == "masked":
+        def call(ws, ms, xs, xps, coefs):
+            return gossip_round_masked_batched_pallas(ws, ms, xs, xps, coefs, **kw)
+    elif variant == "sender":
+        def call(ws, ms, xs, xps, coefs):
+            return gossip_round_sender_masked_batched_pallas(
+                ws, ms, xs, xps, coefs, **kw)
+    else:
+        raise ValueError(f"unknown dense round variant {variant!r}")
+    cp = custom_partitioning(call)
+    cp.def_partition(
+        partition=_make_batched_partition(call),
+        infer_sharding_from_operands=_batched_infer,
+        decode_shardings=True,
+    )
+    return cp
 
 
 def batched_round_prim(ws, *, bm: int = 128, bk: int = 128, bf: int = 512,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       renorm: str = "receiver"):
     """Fused-round primitive over a pre-padded (Gp, N, N) partition slice.
 
     This is the kernel-layer dispatch point every registry algorithm's
@@ -129,10 +279,18 @@ def batched_round_prim(ws, *, bm: int = 128, bk: int = 128, bf: int = 512,
         prim(x, xp, coef, m=None) -> coef[:,0]*(W_eff@x) + coef[:,1]*x
                                      + coef[:,2]*xp
 
-    picks the plain or the masked fused batched kernel by whether a per-round
-    (Gp, N, N) activity mask ``m`` is supplied. Operands must already be
-    padded to the (bm, bk, bf) tiles — the sweep engine pads ONCE outside its
-    scan (see ``repro.sweep.engine``).
+    picks the plain or a masked fused batched kernel by whether a per-round
+    (Gp, N, N) activity mask ``m`` is supplied; ``renorm`` selects where a
+    dropped edge's mass returns — "receiver" (row renorm, the doubly
+    stochastic family) or "sender" (column renorm, push_sum /
+    ratio_consensus; masks must be symmetric per undirected edge). Operands
+    must already be padded to the (bm, bk, bf) tiles — the sweep engine pads
+    ONCE outside its scan (see ``repro.sweep.engine``).
+
+    On multi-device processes every kernel call goes through a
+    ``custom_partitioning`` wrapper that shards the G axis however the
+    operands are sharded (see ``_round_cp``), so the same prim serves both
+    the single-device jit and the mesh-sharded sweep.
 
     ``coef`` is a traced per-CALL operand, never a compile-time constant:
     the kernels read it from memory each launch, so per-round coefficient
@@ -143,13 +301,24 @@ def batched_round_prim(ws, *, bm: int = 128, bk: int = 128, bf: int = 512,
     """
     if interpret is None:
         interpret = use_interpret()
+    if renorm not in ("receiver", "sender"):
+        raise ValueError(f"renorm must be receiver or sender, got {renorm!r}")
+    single = jax.device_count() == 1
+    kw = dict(bm=bm, bk=bk, bf=bf, interpret=interpret)
 
     def prim(x, xp, coef, m=None):
         if m is None:
-            return gossip_round_batched_pallas(
-                ws, x, xp, coef, bm=bm, bk=bk, bf=bf, interpret=interpret)
-        return gossip_round_masked_batched_pallas(
-            ws, m, x, xp, coef, bm=bm, bk=bk, bf=bf, interpret=interpret)
+            if single:
+                return gossip_round_batched_pallas(ws, x, xp, coef, **kw)
+            return _round_cp("plain", bm, bk, bf, interpret)(ws, x, xp, coef)
+        if renorm == "receiver":
+            if single:
+                return gossip_round_masked_batched_pallas(ws, m, x, xp, coef, **kw)
+            return _round_cp("masked", bm, bk, bf, interpret)(ws, m, x, xp, coef)
+        if single:
+            return gossip_round_sender_masked_batched_pallas(
+                ws, m, x, xp, coef, **kw)
+        return _round_cp("sender", bm, bk, bf, interpret)(ws, m, x, xp, coef)
 
     return prim
 
@@ -161,10 +330,20 @@ def gossip_round(w, x, xp, a, b, c):
     W (N, N), X/Xp (N, F), a/b/c scalars (python or traced). Zero padding is
     exact: padded W rows/cols contribute nothing and padded X/Xp entries are
     zero, so the sliced (N, F) output equals the unpadded computation.
+
+    Interpret-mode dispatch (trace-time branch) runs the unfused
+    matvec + FMA pair instead: the fusion's win is skipping the x_w HBM
+    round-trip, but the interpreter evaluates the fused grid's k-independent
+    X/Xp tile loads and FMA predicate on EVERY grid step in Python, which
+    costs more than the spill it saves (2.7ms vs 1.8ms per round at
+    N200xF300 in BENCH_kernel_perf.json). On a real TPU backend the fused
+    kernel is the whole point and is always used.
     """
+    if use_interpret():
+        return consensus_update(gossip_matvec(w, x), x, xp, a, b, c)
     n, f = w.shape[0], x.shape[1]
-    bm, bk, bf = _round_tiles(f)
-    np_, fp_ = _round_up(n, 128), _round_up(f, bf)
+    bm, bk, bf = round_tiles(n, f)
+    np_, fp_ = _round_up(n, max(bm, bk)), _round_up(f, bf)
     wp = jnp.pad(w.astype(jnp.float32), ((0, np_ - n), (0, np_ - n)))
     xpad = jnp.pad(x.astype(jnp.float32), ((0, np_ - n), (0, fp_ - f)))
     xppad = jnp.pad(xp.astype(jnp.float32), ((0, np_ - n), (0, fp_ - f)))
@@ -187,8 +366,8 @@ def gossip_round_batched(ws, xs, xps, coefs):
     (G, 3) operand so heterogeneous (alpha, theta) cells share the program.
     """
     g, n, f = xs.shape
-    bm, bk, bf = _round_tiles(f)
-    np_, fp_ = _round_up(n, 128), _round_up(f, bf)
+    bm, bk, bf = round_tiles(n, f, g)
+    np_, fp_ = _round_up(n, max(bm, bk)), _round_up(f, bf)
     wp = jnp.pad(ws.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, np_ - n)))
     xpad = jnp.pad(xs.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, fp_ - f)))
     xppad = jnp.pad(xps.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, fp_ - f)))
@@ -209,8 +388,8 @@ def gossip_round_masked(w, m, x, xp, a, b, c):
     are zero, so they contribute neither matvec nor dropped mass.
     """
     n, f = w.shape[0], x.shape[1]
-    bm, bk, bf = _round_tiles(f)
-    np_, fp_ = _round_up(n, 128), _round_up(f, bf)
+    bm, bk, bf = round_tiles(n, f)
+    np_, fp_ = _round_up(n, max(bm, bk)), _round_up(f, bf)
     wp = jnp.pad(w.astype(jnp.float32), ((0, np_ - n), (0, np_ - n)))
     mp = jnp.pad(m.astype(jnp.float32), ((0, np_ - n), (0, np_ - n)))
     xpad = jnp.pad(x.astype(jnp.float32), ((0, np_ - n), (0, fp_ - f)))
@@ -232,8 +411,8 @@ def gossip_round_masked_batched(ws, ms, xs, xps, coefs):
     Ws/Ms (G, N, N), Xs/Xps (G, N, F), coefs (G, 3) -> (G, N, F) fp32.
     """
     g, n, f = xs.shape
-    bm, bk, bf = _round_tiles(f)
-    np_, fp_ = _round_up(n, 128), _round_up(f, bf)
+    bm, bk, bf = round_tiles(n, f, g)
+    np_, fp_ = _round_up(n, max(bm, bk)), _round_up(f, bf)
     wp = jnp.pad(ws.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, np_ - n)))
     mp = jnp.pad(ms.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, np_ - n)))
     xpad = jnp.pad(xs.astype(jnp.float32), ((0, 0), (0, np_ - n), (0, fp_ - f)))
@@ -252,7 +431,79 @@ def gossip_round_masked_batched(ws, ms, xs, xps, coefs):
 
 def _segment_tiles(f: int) -> tuple[int, int, int]:
     """(bm, bd, bf) tiles for the ELL kernels; bd is the neighbor-slot axis."""
-    return 128, 8, 512 if f > 256 else 128
+    return autotune.static_segment_tiles(f)
+
+
+def _segment_bench(n: int, f: int, g: int):
+    """Bench closure for the ELL autotuner: ring-graph dummy, one tile of D."""
+    gb = max(1, min(g, 4))
+    arrays = {}
+
+    def bench(tiles):
+        bm, bd, bf = tiles
+        np_, fp_ = _round_up(n, bm), _round_up(f, bf)
+        if (np_, fp_) not in arrays:
+            idx = jnp.arange(np_, dtype=jnp.int32)
+            nbrs = jnp.stack([(idx + 1) % np_, (idx - 1) % np_], axis=1)
+            nbrs = jnp.broadcast_to(
+                jnp.pad(nbrs, ((0, 0), (0, bd - 2))), (gb, np_, bd))
+            wgts = jnp.broadcast_to(
+                jnp.pad(jnp.full((np_, 2), 0.25, jnp.float32),
+                        ((0, 0), (0, bd - 2))), (gb, np_, bd))
+            arrays[(np_, fp_)] = (
+                nbrs, wgts,
+                jnp.full((gb, np_, 1), 0.5, jnp.float32),
+                jnp.ones((gb, np_, fp_), jnp.float32),
+                jnp.ones((gb, 3), jnp.float32),
+            )
+        nbrs, wgts, diags, xs, coefs = arrays[(np_, fp_)]
+        segment_round_batched_pallas(
+            nbrs, wgts, diags, xs, xs, coefs,
+            bm=bm, bd=bd, bf=bf, interpret=use_interpret()
+        ).block_until_ready()
+
+    return bench
+
+
+def segment_tiles(n: int, f: int, g: int = 1, tune: bool = False):
+    """Autotune-aware (bm, bd, bf) for an ELLPACK (G, N, F) round problem.
+
+    Same contract as ``round_tiles``: ``tune=True`` only from host code
+    outside a jit trace; jitted wrappers take the cached/static answer.
+    """
+    bench = _segment_bench(n, f, g) if tune else None
+    return autotune.get_tiles("segment", n, f, g, bench=bench)
+
+
+_SEGMENT_VMEM_BUDGET = 8 * 1024 * 1024  # resident X source block, bytes
+
+
+def segment_bn(n: int, bm: int, bf: int) -> tuple[int, int]:
+    """VMEM tiling policy for the segment kernels' resident X source block.
+
+    Returns (bn, n_padded): the source-row block size and the padded node
+    count (a multiple of both bn and bm). The kernels gather from a (bn, bf)
+    X block held in VMEM; bn * bf * 4 bytes must fit the budget
+    (``REPRO_SEGMENT_VMEM_BUDGET`` overrides the 8 MiB default). Small
+    problems get bn = N (one resident block, S = 1 — bitwise identical to
+    the historical un-tiled kernel); past the cap, bn is the budget-sized
+    multiple of bm that wastes the least padding. bn is a deliberate
+    POLICY parameter, not an autotuned one: splitting the gather reduction
+    reorders float accumulation, so tuning it would break the autotuner's
+    bit-identicality contract.
+    """
+    budget = int(os.environ.get(
+        "REPRO_SEGMENT_VMEM_BUDGET", _SEGMENT_VMEM_BUDGET))
+    cap_rows = max(bm, (budget // (bf * 4)) // bm * bm)
+    n_bm = _round_up(n, bm)
+    if n_bm <= cap_rows:
+        return n_bm, n_bm
+    best = None
+    for bn in range(cap_rows, 0, -bm):
+        n_pad = _round_up(n_bm, bn)
+        if best is None or n_pad < best[1]:
+            best = (bn, n_pad)
+    return best
 
 
 def build_ell(edges, edge_w, diag_w, n: int, edge_w_rev=None):
@@ -266,12 +517,18 @@ def build_ell(edges, edge_w, diag_w, n: int, edge_w_rev=None):
     ``edge_w`` = W[i, j] while row j's slot gets W[j, i]. None means the
     base is symmetric and ``edge_w`` serves both orientations. Returns
 
-        nbr  (N, D) int32, wgt (N, D) f32, slot (N, D) int32, diag (N, 1) f32
+        nbr  (N, D) int32   neighbor node index per slot
+        wgt  (N, D) f32     this orientation's weight W[i, nbr[i, d]]
+        wrev (N, D) f32     the REVERSE orientation W[nbr[i, d], i]
+        slot (N, D) int32   undirected edge id per slot
+        diag (N, 1) f32     W's diagonal
 
-    with D = max degree and padding slots wgt = 0 / nbr = 0 / slot = 0 —
-    inert in the kernels whatever their index values. ``slot[i, d]`` is the
-    undirected edge id (the RoundMasks bits column) the slot mirrors, so the
-    masked kernels gather one (E,) bits row instead of an (N, N) mask.
+    with D = max degree and padding slots wgt = wrev = 0 / nbr = 0 /
+    slot = 0 — inert in the kernels whatever their index values.
+    ``slot[i, d]`` is the undirected edge id (the RoundMasks bits column)
+    the slot mirrors, so the masked kernels gather one (E,) bits row
+    instead of an (N, N) mask; ``wrev`` feeds the sender-renorm masked
+    kernel's column dropped-mass sum (for symmetric bases wrev == wgt).
     """
     import numpy as np
 
@@ -279,23 +536,28 @@ def build_ell(edges, edge_w, diag_w, n: int, edge_w_rev=None):
     e = len(edges)
     src = np.concatenate([edges[:, 0], edges[:, 1]])
     dst = np.concatenate([edges[:, 1], edges[:, 0]])
-    wdir = np.concatenate(
-        [edge_w, edge_w if edge_w_rev is None else edge_w_rev])
+    w_fwd = np.asarray(edge_w, dtype=np.float64)
+    w_bwd = w_fwd if edge_w_rev is None else np.asarray(edge_w_rev, np.float64)
+    wdir = np.concatenate([w_fwd, w_bwd])       # weight INTO the slot's row
+    wrev_dir = np.concatenate([w_bwd, w_fwd])   # weight OUT of the slot's row
     eid = np.concatenate([np.arange(e), np.arange(e)])
     deg = np.bincount(src, minlength=n)
     d_max = max(1, int(deg.max()) if e else 1)
     order = np.argsort(src, kind="stable")
-    src_s, dst_s, w_s, eid_s = src[order], dst[order], wdir[order], eid[order]
+    src_s, dst_s, eid_s = src[order], dst[order], eid[order]
+    w_s, wr_s = wdir[order], wrev_dir[order]
     starts = np.concatenate([[0], np.cumsum(deg)[:-1]])
     pos = np.arange(len(src_s)) - starts[src_s]
     nbr = np.zeros((n, d_max), dtype=np.int32)
     wgt = np.zeros((n, d_max), dtype=np.float32)
+    wrev = np.zeros((n, d_max), dtype=np.float32)
     slot = np.zeros((n, d_max), dtype=np.int32)
     nbr[src_s, pos] = dst_s
     wgt[src_s, pos] = w_s
+    wrev[src_s, pos] = wr_s
     slot[src_s, pos] = eid_s
     diag = np.asarray(diag_w, dtype=np.float32).reshape(n, 1)
-    return nbr, wgt, slot, diag
+    return nbr, wgt, wrev, slot, diag
 
 
 @jax.jit
@@ -309,7 +571,7 @@ def segment_round(nbr, wgt, slot, diag, x, xp, a, b, c, bits=None):
     """
     n, f = x.shape
     d = nbr.shape[1]
-    bm, bd, bf = _segment_tiles(f)
+    bm, bd, bf = segment_tiles(n, f)
     np_, dp_, fp_ = _round_up(n, bm), _round_up(d, bd), _round_up(f, bf)
     nbrp = jnp.pad(nbr, ((0, np_ - n), (0, dp_ - d)))
     wgtp = jnp.pad(wgt.astype(jnp.float32), ((0, np_ - n), (0, dp_ - d)))
@@ -335,9 +597,44 @@ def segment_round(nbr, wgt, slot, diag, x, xp, a, b, c, bits=None):
     return y[:n, :f]
 
 
-def batched_segment_round_prim(nbrs, wgts, slots, diags, *, bm: int = 128,
-                               bd: int = 8, bf: int = 128,
-                               interpret: bool | None = None):
+@functools.lru_cache(maxsize=None)
+def _seg_cp(variant: str, bm: int, bd: int, bf: int, bn: int | None,
+            interpret: bool):
+    """custom_partitioning wrapper for one ELLPACK batched-kernel variant.
+
+    Same G-only partitioning contract as ``_round_cp``: every operand
+    (ELL arrays, bits, states, coefs) leads with the ensemble axis, nothing
+    crosses graphs, so dim 0 shards and everything else stays whole.
+    """
+    kw = dict(bm=bm, bd=bd, bf=bf, bn=bn, interpret=interpret)
+    if variant == "plain":
+        def call(nbrs, wgts, diags, xs, xps, coefs):
+            return segment_round_batched_pallas(
+                nbrs, wgts, diags, xs, xps, coefs, **kw)
+    elif variant == "masked":
+        def call(nbrs, wgts, slots, diags, bits, xs, xps, coefs):
+            return segment_round_masked_batched_pallas(
+                nbrs, wgts, slots, diags, bits, xs, xps, coefs, **kw)
+    elif variant == "sender":
+        def call(nbrs, wgts, wrevs, slots, diags, bits, xs, xps, coefs):
+            return segment_round_sender_masked_batched_pallas(
+                nbrs, wgts, wrevs, slots, diags, bits, xs, xps, coefs, **kw)
+    else:
+        raise ValueError(f"unknown segment round variant {variant!r}")
+    cp = custom_partitioning(call)
+    cp.def_partition(
+        partition=_make_batched_partition(call),
+        infer_sharding_from_operands=_batched_infer,
+        decode_shardings=True,
+    )
+    return cp
+
+
+def batched_segment_round_prim(nbrs, wgts, slots, diags, *, wrevs=None,
+                               bm: int = 128, bd: int = 8, bf: int = 128,
+                               bn: int | None = None,
+                               interpret: bool | None = None,
+                               renorm: str = "receiver"):
     """Sparse fused-round primitive over pre-padded (Gp, N, D) ELL slices.
 
     The sparse-layout counterpart of ``batched_round_prim`` — the returned
@@ -347,20 +644,44 @@ def batched_segment_round_prim(nbrs, wgts, slots, diags, *, bm: int = 128,
     satisfies the identical layout-polymorphic contract every registry
     algorithm's ``round_body`` is written against, with ``m`` this round's
     (Gp, E) compressed bits rows (NOT an (N, N) mask — the sparse path never
-    builds one). Operands must already be padded to the (bm, bd, bf) tiles;
-    the sweep engine pads ONCE outside its scan.
+    builds one). ``renorm`` selects where a dropped edge's mass returns
+    ("receiver" = row renorm; "sender" = column renorm, which requires the
+    (Gp, N, D) reverse weights ``wrevs`` from ``build_ell``). ``bn`` tiles
+    the kernels' resident X source block over N for the VMEM cap (see
+    ``segment_bn``; None = one full-N block). Operands must already be
+    padded to the (bm, bd, bf) tiles — and N to a bn multiple — by the
+    sweep engine, ONCE outside its scan.
+
+    Multi-device processes route every call through a G-axis
+    ``custom_partitioning`` wrapper (``_seg_cp``), mirroring the dense prim.
     """
     if interpret is None:
         interpret = use_interpret()
+    if renorm not in ("receiver", "sender"):
+        raise ValueError(f"renorm must be receiver or sender, got {renorm!r}")
+    if renorm == "sender" and wrevs is None:
+        raise ValueError("renorm='sender' needs the wrevs ELL array")
+    single = jax.device_count() == 1
+    kw = dict(bm=bm, bd=bd, bf=bf, bn=bn, interpret=interpret)
 
     def prim(x, xp, coef, m=None):
         if m is None:
-            return segment_round_batched_pallas(
-                nbrs, wgts, diags, x, xp, coef,
-                bm=bm, bd=bd, bf=bf, interpret=interpret)
-        return segment_round_masked_batched_pallas(
-            nbrs, wgts, slots, diags, m, x, xp, coef,
-            bm=bm, bd=bd, bf=bf, interpret=interpret)
+            if single:
+                return segment_round_batched_pallas(
+                    nbrs, wgts, diags, x, xp, coef, **kw)
+            return _seg_cp("plain", bm, bd, bf, bn, interpret)(
+                nbrs, wgts, diags, x, xp, coef)
+        if renorm == "receiver":
+            if single:
+                return segment_round_masked_batched_pallas(
+                    nbrs, wgts, slots, diags, m, x, xp, coef, **kw)
+            return _seg_cp("masked", bm, bd, bf, bn, interpret)(
+                nbrs, wgts, slots, diags, m, x, xp, coef)
+        if single:
+            return segment_round_sender_masked_batched_pallas(
+                nbrs, wgts, wrevs, slots, diags, m, x, xp, coef, **kw)
+        return _seg_cp("sender", bm, bd, bf, bn, interpret)(
+            nbrs, wgts, wrevs, slots, diags, m, x, xp, coef)
 
     return prim
 

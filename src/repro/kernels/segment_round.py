@@ -14,27 +14,35 @@ and one round is a gather + weighted segment reduction:
 
     y[i] = a * (diag[i] * x[i] + sum_d wgt[i,d] * x[nbr[i,d]]) + b*x[i] + c*xp[i]
 
-Grid layout mirrors ``gossip_round.py`` exactly: (N/bm, F/bf, D/bd) with the
-contraction axis (here the neighbor-slot axis D) innermost — the output index
-map ignores d, so Pallas keeps the (bm, bf) block resident across the
-reduction, initializing at d == 0 and applying the FMA taps (and the
-diagonal term) on the final d step. The masked variants apply this round's
-0/1 edge-activity bits per slot with the mass-preserving rule: a dropped
-slot's weight returns to its row's diagonal, so W_eff stays doubly
-stochastic (identical semantics to the dense masked kernel; the per-cell
-bits row is gathered through ``slot``).
+Grid layout mirrors ``gossip_round.py``: (N/bm, F/bf, N/bn, D/bd) with the
+slot axis D innermost and an optional source-row block axis S = N/bn above
+it — the output index map ignores (s, d), so Pallas keeps the (bm, bf) block
+resident across the whole reduction, initializing at s == d == 0 and applying
+the FMA taps (and the diagonal term) on the final (s, d) step. The masked
+variants apply this round's 0/1 edge-activity bits per slot with the
+mass-preserving rule: a dropped slot's weight returns to its row's diagonal,
+so W_eff stays doubly stochastic (identical semantics to the dense masked
+kernel; the per-cell bits row is gathered through ``slot``). The sender
+variant returns dropped mass to the *sender's* diagonal instead (column
+renormalization), which needs the reverse weight ``wrev[i, d] =
+W[nbr[i,d], i]`` of each slot's edge — the column-stochastic family
+(push_sum / ratio_consensus) stays exactly column-stochastic under masking.
 
-The full (N, F) state block rides into VMEM once per (i, j) tile — the
-gather targets arbitrary rows, so the kernel holds X resident rather than
-streaming K tiles. That caps the single-kernel problem size at VMEM
-(~N * bf * 4 bytes); the engine uses this kernel as the sparse pallas
-correctness/small-N path and routes million-node sweeps through the jnp
-``segment_sum`` primitive, which has no such cap (see repro.sweep.engine).
+VMEM policy: the gather targets arbitrary rows of X, so the kernel holds a
+(bn, bf) source block resident and masks each slot tile to the rows that
+live in the current block (``bn`` defaults to the full padded N — one
+resident block, no masking overhead, bitwise identical to the historical
+un-tiled kernel). When N * bf * 4 bytes would blow the VMEM cap, callers
+pass bn < N and the kernel sweeps S = N/bn source blocks per output tile:
+per-slot selection ``bn <= nbr < bn + bn`` zeroes out-of-block weights, so
+each slot contributes exactly once across the S sweep. See
+``repro.kernels.ops.segment_bn`` for the budget policy
+(REPRO_SEGMENT_VMEM_BUDGET).
 
 Padding invariants (``repro.kernels.ops`` pads): padded row slots carry
-wgt = 0 (inert in both the reduction and the dropped-mass sum, whatever
-nbr/slot say), padded rows carry diag = 0 and x = 0, padded bits columns are
-never referenced by a real slot.
+wgt = 0 *and* wrev = 0 (inert in both the reduction and the dropped-mass
+sums, whatever nbr/slot say), padded rows carry diag = 0 and x = 0, padded
+bits columns are never referenced by a real slot.
 """
 from __future__ import annotations
 
@@ -53,28 +61,47 @@ __all__ = [
     "segment_round_masked_pallas",
     "segment_round_masked_batched_kernel",
     "segment_round_masked_batched_pallas",
+    "segment_round_sender_masked_batched_kernel",
+    "segment_round_sender_masked_batched_pallas",
 ]
 
 
 def _gather_rows(xf, nbr):
-    """(Np, bf) x, (bm, bd) indices -> (bm, bd, bf) gathered neighbor states."""
+    """(bn, bf) x block, (bm, bd) local indices -> (bm, bd, bf) gathered rows."""
     bm, bd = nbr.shape
     return jnp.take(xf, nbr.reshape(-1), axis=0).reshape(bm, bd, -1)
 
 
-def segment_round_kernel(nd: int, coef_ref, nbr_ref, wgt_ref, diag_ref,
-                         xf_ref, xi_ref, xp_ref, y_ref):
-    """Accumulate one bd-slot gather partial; diagonal + FMA on the last step."""
-    d = pl.program_id(2)
+def _block_select(nbr, s, bn):
+    """0/1 mask of slots whose neighbor lives in source block s, + local ids."""
+    base = s * bn
+    sel = ((nbr >= base) & (nbr < base + bn)).astype(jnp.float32)
+    local = jnp.clip(nbr - base, 0, bn - 1)
+    return sel, local
 
-    @pl.when(d == 0)
+
+def _check_tiles(n, dmax, f, bm, bd, bf, bn):
+    if n % bm or dmax % bd or f % bf or n % bn:
+        raise ValueError(
+            f"shapes ({n},{dmax},{f}) not multiples of tiles ({bm},{bd},{bf},{bn})")
+
+
+def segment_round_kernel(ns: int, nd: int, bn: int, coef_ref, nbr_ref, wgt_ref,
+                         diag_ref, xf_ref, xi_ref, xp_ref, y_ref):
+    """Accumulate one bd-slot gather partial; diagonal + FMA on the last step."""
+    s = pl.program_id(2)
+    d = pl.program_id(3)
+
+    @pl.when((s == 0) & (d == 0))
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    gathered = _gather_rows(xf_ref[...], nbr_ref[...])
-    y_ref[...] += jnp.sum(wgt_ref[...][..., None] * gathered, axis=1)
+    nbr = nbr_ref[...]
+    sel, local = _block_select(nbr, s, bn)
+    gathered = _gather_rows(xf_ref[...], local)
+    y_ref[...] += jnp.sum((wgt_ref[...] * sel)[..., None] * gathered, axis=1)
 
-    @pl.when(d == nd - 1)
+    @pl.when((s == ns - 1) & (d == nd - 1))
     def _fma():
         a = coef_ref[0, 0]
         b = coef_ref[0, 1]
@@ -83,7 +110,7 @@ def segment_round_kernel(nd: int, coef_ref, nbr_ref, wgt_ref, diag_ref,
         y_ref[...] = a * (y_ref[...] + diag_ref[...] * xi) + b * xi + c * xp_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "bn", "interpret"))
 def segment_round_pallas(
     nbr: jax.Array,
     wgt: jax.Array,
@@ -95,12 +122,14 @@ def segment_round_pallas(
     bm: int = 128,
     bd: int = 8,
     bf: int = 128,
+    bn: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused sparse Y = a*(W@X) + b*X + c*Xp, operands pre-padded.
 
-    nbr/wgt (N, D), diag (N, 1), X/Xp (N, F), coef (1, 3) traced. Shape
-    management lives in ``repro.kernels.ops.segment_round``.
+    nbr/wgt (N, D), diag (N, 1), X/Xp (N, F), coef (1, 3) traced. ``bn``
+    (default: full N) tiles the resident X source block over N for the VMEM
+    cap. Shape management lives in ``repro.kernels.ops.segment_round``.
     """
     n, dmax = nbr.shape
     n2, f = x.shape
@@ -108,42 +137,45 @@ def segment_round_pallas(
             or diag.shape != (n, 1):
         raise ValueError(f"shape mismatch: nbr {nbr.shape}, wgt {wgt.shape}, "
                          f"diag {diag.shape}, X {x.shape}, Xp {xp.shape}")
-    if n % bm or dmax % bd or f % bf:
-        raise ValueError(
-            f"shapes ({n},{dmax},{f}) not multiples of tiles ({bm},{bd},{bf})")
-    nd = dmax // bd
-    grid = (n // bm, f // bf, nd)
+    bn = n if bn is None else bn
+    _check_tiles(n, dmax, f, bm, bd, bf, bn)
+    ns, nd = n // bn, dmax // bd
+    grid = (n // bm, f // bf, ns, nd)
     return pl.pallas_call(
-        functools.partial(segment_round_kernel, nd),
+        functools.partial(segment_round_kernel, ns, nd, bn),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 3), lambda i, j, d: (0, 0)),
-            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),
-            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),
-            pl.BlockSpec((bm, 1), lambda i, j, d: (i, 0)),
-            pl.BlockSpec((n, bf), lambda i, j, d: (0, j)),
-            pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
-            pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
+            pl.BlockSpec((1, 3), lambda i, j, s, d: (0, 0)),
+            pl.BlockSpec((bm, bd), lambda i, j, s, d: (i, d)),
+            pl.BlockSpec((bm, bd), lambda i, j, s, d: (i, d)),
+            pl.BlockSpec((bm, 1), lambda i, j, s, d: (i, 0)),
+            pl.BlockSpec((bn, bf), lambda i, j, s, d: (s, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, s, d: (i, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, s, d: (i, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j, s, d: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
         interpret=interpret,
     )(coef, nbr, wgt, diag, x, x, xp)
 
 
-def segment_round_batched_kernel(nd: int, coef_ref, nbr_ref, wgt_ref, diag_ref,
-                                 xf_ref, xi_ref, xp_ref, y_ref):
+def segment_round_batched_kernel(ns: int, nd: int, bn: int, coef_ref, nbr_ref,
+                                 wgt_ref, diag_ref, xf_ref, xi_ref, xp_ref,
+                                 y_ref):
     """Batched-grid body: blocks carry a leading length-1 graph dim."""
-    d = pl.program_id(3)
+    s = pl.program_id(3)
+    d = pl.program_id(4)
 
-    @pl.when(d == 0)
+    @pl.when((s == 0) & (d == 0))
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    gathered = _gather_rows(xf_ref[0], nbr_ref[0])
-    y_ref[0] += jnp.sum(wgt_ref[0][..., None] * gathered, axis=1)
+    nbr = nbr_ref[0]
+    sel, local = _block_select(nbr, s, bn)
+    gathered = _gather_rows(xf_ref[0], local)
+    y_ref[0] += jnp.sum((wgt_ref[0] * sel)[..., None] * gathered, axis=1)
 
-    @pl.when(d == nd - 1)
+    @pl.when((s == ns - 1) & (d == nd - 1))
     def _fma():
         a = coef_ref[0, 0]
         b = coef_ref[0, 1]
@@ -152,7 +184,7 @@ def segment_round_batched_kernel(nd: int, coef_ref, nbr_ref, wgt_ref, diag_ref,
         y_ref[...] = a * (y_ref[...] + diag_ref[...] * xi) + b * xi + c * xp_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "bn", "interpret"))
 def segment_round_batched_pallas(
     nbrs: jax.Array,
     wgts: jax.Array,
@@ -164,13 +196,14 @@ def segment_round_batched_pallas(
     bm: int = 128,
     bd: int = 8,
     bf: int = 128,
+    bn: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused sparse round over a stacked ensemble.
 
     nbrs/wgts (G, N, D), diags (G, N, 1), Xs/Xps (G, N, F), coefs (G, 3):
-    grid (G, N/bm, F/bf, D/bd), each graph g reads its own ELL slices and
-    (a, b, c) row — one launch covers the whole sparse sweep grid.
+    grid (G, N/bm, F/bf, N/bn, D/bd), each graph g reads its own ELL slices
+    and (a, b, c) row — one launch covers the whole sparse sweep grid.
     """
     g, n, dmax = nbrs.shape
     g2, n2, f = xs.shape
@@ -179,24 +212,23 @@ def segment_round_batched_pallas(
         raise ValueError(
             f"shape mismatch: nbrs {nbrs.shape}, wgts {wgts.shape}, "
             f"diags {diags.shape}, Xs {xs.shape}, coefs {coefs.shape}")
-    if n % bm or dmax % bd or f % bf:
-        raise ValueError(
-            f"shapes ({n},{dmax},{f}) not multiples of tiles ({bm},{bd},{bf})")
-    nd = dmax // bd
-    grid = (g, n // bm, f // bf, nd)
+    bn = n if bn is None else bn
+    _check_tiles(n, dmax, f, bm, bd, bf, bn)
+    ns, nd = n // bn, dmax // bd
+    grid = (g, n // bm, f // bf, ns, nd)
     return pl.pallas_call(
-        functools.partial(segment_round_batched_kernel, nd),
+        functools.partial(segment_round_batched_kernel, ns, nd, bn),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 3), lambda gg, i, j, d: (gg, 0)),
-            pl.BlockSpec((1, bm, bd), lambda gg, i, j, d: (gg, i, d)),
-            pl.BlockSpec((1, bm, bd), lambda gg, i, j, d: (gg, i, d)),
-            pl.BlockSpec((1, bm, 1), lambda gg, i, j, d: (gg, i, 0)),
-            pl.BlockSpec((1, n, bf), lambda gg, i, j, d: (gg, 0, j)),
-            pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
-            pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
+            pl.BlockSpec((1, 3), lambda gg, i, j, s, d: (gg, 0)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, s, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, s, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, 1), lambda gg, i, j, s, d: (gg, i, 0)),
+            pl.BlockSpec((1, bn, bf), lambda gg, i, j, s, d: (gg, s, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, s, d: (gg, i, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, s, d: (gg, i, j)),
         ],
-        out_specs=pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
+        out_specs=pl.BlockSpec((1, bm, bf), lambda gg, i, j, s, d: (gg, i, j)),
         out_shape=jax.ShapeDtypeStruct((g, n, f), jnp.float32),
         interpret=interpret,
     )(coefs, nbrs, wgts, diags, xs, xs, xps)
@@ -212,28 +244,41 @@ def segment_round_batched_pallas(
 #
 # Exactly the dense masked kernel's mass-preserving rule, evaluated per slot:
 # the compressed (G, E) bits row replaces the (G, N, N) mask expansion, so
-# the sparse dynamic sweep never materializes a mask matrix at all.
+# the sparse dynamic sweep never materializes a mask matrix at all. Under
+# N-tiling the drop term is added on the s == 0 sweep only — every slot's
+# dropped mass is counted exactly once.
 # ---------------------------------------------------------------------------
 
 
-def segment_round_masked_kernel(nd: int, coef_ref, bits_ref, nbr_ref, wgt_ref,
-                                slot_ref, diag_ref, xf_ref, xi_ref, xp_ref,
-                                y_ref):
+def segment_round_masked_kernel(ns: int, nd: int, bn: int, coef_ref, bits_ref,
+                                nbr_ref, wgt_ref, slot_ref, diag_ref, xf_ref,
+                                xi_ref, xp_ref, y_ref):
     """Masked gather partial + dropped-mass return per slot tile."""
-    d = pl.program_id(2)
+    s = pl.program_id(2)
+    d = pl.program_id(3)
 
-    @pl.when(d == 0)
+    @pl.when((s == 0) & (d == 0))
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
     w = wgt_ref[...]
-    sel = jnp.take(bits_ref[0], slot_ref[...].reshape(-1)).reshape(w.shape)
-    wt = w * sel
-    drop = jnp.sum(w - wt, axis=1, keepdims=True)
-    gathered = _gather_rows(xf_ref[...], nbr_ref[...])
-    y_ref[...] += jnp.sum(wt[..., None] * gathered, axis=1) + drop * xi_ref[...]
+    live = jnp.take(bits_ref[0], slot_ref[...].reshape(-1)).reshape(w.shape)
+    wt = w * live
+    nbr = nbr_ref[...]
+    sel, local = _block_select(nbr, s, bn)
+    gathered = _gather_rows(xf_ref[...], local)
+    contrib = jnp.sum((wt * sel)[..., None] * gathered, axis=1)
 
-    @pl.when(d == nd - 1)
+    @pl.when(s == 0)
+    def _with_drop():
+        drop = jnp.sum(w - wt, axis=1, keepdims=True)
+        y_ref[...] += contrib + drop * xi_ref[...]
+
+    @pl.when(s > 0)
+    def _partial():
+        y_ref[...] += contrib
+
+    @pl.when((s == ns - 1) & (d == nd - 1))
     def _fma():
         a = coef_ref[0, 0]
         b = coef_ref[0, 1]
@@ -242,7 +287,7 @@ def segment_round_masked_kernel(nd: int, coef_ref, bits_ref, nbr_ref, wgt_ref,
         y_ref[...] = a * (y_ref[...] + diag_ref[...] * xi) + b * xi + c * xp_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "bn", "interpret"))
 def segment_round_masked_pallas(
     nbr: jax.Array,
     wgt: jax.Array,
@@ -256,6 +301,7 @@ def segment_round_masked_pallas(
     bm: int = 128,
     bd: int = 8,
     bf: int = 128,
+    bn: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused masked sparse round, operands pre-padded.
@@ -271,50 +317,61 @@ def segment_round_masked_pallas(
         raise ValueError(f"shape mismatch: nbr {nbr.shape}, wgt {wgt.shape}, "
                          f"slot {slot.shape}, diag {diag.shape}, "
                          f"bits {bits.shape}, X {x.shape}, Xp {xp.shape}")
-    if n % bm or dmax % bd or f % bf:
-        raise ValueError(
-            f"shapes ({n},{dmax},{f}) not multiples of tiles ({bm},{bd},{bf})")
-    nd = dmax // bd
+    bn = n if bn is None else bn
+    _check_tiles(n, dmax, f, bm, bd, bf, bn)
+    ns, nd = n // bn, dmax // bd
     e = bits.shape[1]
-    grid = (n // bm, f // bf, nd)
+    grid = (n // bm, f // bf, ns, nd)
     return pl.pallas_call(
-        functools.partial(segment_round_masked_kernel, nd),
+        functools.partial(segment_round_masked_kernel, ns, nd, bn),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 3), lambda i, j, d: (0, 0)),
-            pl.BlockSpec((1, e), lambda i, j, d: (0, 0)),
-            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),
-            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),
-            pl.BlockSpec((bm, bd), lambda i, j, d: (i, d)),
-            pl.BlockSpec((bm, 1), lambda i, j, d: (i, 0)),
-            pl.BlockSpec((n, bf), lambda i, j, d: (0, j)),
-            pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
-            pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
+            pl.BlockSpec((1, 3), lambda i, j, s, d: (0, 0)),
+            pl.BlockSpec((1, e), lambda i, j, s, d: (0, 0)),
+            pl.BlockSpec((bm, bd), lambda i, j, s, d: (i, d)),
+            pl.BlockSpec((bm, bd), lambda i, j, s, d: (i, d)),
+            pl.BlockSpec((bm, bd), lambda i, j, s, d: (i, d)),
+            pl.BlockSpec((bm, 1), lambda i, j, s, d: (i, 0)),
+            pl.BlockSpec((bn, bf), lambda i, j, s, d: (s, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, s, d: (i, j)),
+            pl.BlockSpec((bm, bf), lambda i, j, s, d: (i, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bf), lambda i, j, d: (i, j)),
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j, s, d: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
         interpret=interpret,
     )(coef, bits, nbr, wgt, slot, diag, x, x, xp)
 
 
-def segment_round_masked_batched_kernel(nd: int, coef_ref, bits_ref, nbr_ref,
-                                        wgt_ref, slot_ref, diag_ref, xf_ref,
-                                        xi_ref, xp_ref, y_ref):
+def segment_round_masked_batched_kernel(ns: int, nd: int, bn: int, coef_ref,
+                                        bits_ref, nbr_ref, wgt_ref, slot_ref,
+                                        diag_ref, xf_ref, xi_ref, xp_ref,
+                                        y_ref):
     """Batched-grid masked body: blocks carry a leading length-1 graph dim."""
-    d = pl.program_id(3)
+    s = pl.program_id(3)
+    d = pl.program_id(4)
 
-    @pl.when(d == 0)
+    @pl.when((s == 0) & (d == 0))
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
     w = wgt_ref[0]
-    sel = jnp.take(bits_ref[0], slot_ref[0].reshape(-1)).reshape(w.shape)
-    wt = w * sel
-    drop = jnp.sum(w - wt, axis=1, keepdims=True)
-    gathered = _gather_rows(xf_ref[0], nbr_ref[0])
-    y_ref[0] += jnp.sum(wt[..., None] * gathered, axis=1) + drop * xi_ref[0]
+    live = jnp.take(bits_ref[0], slot_ref[0].reshape(-1)).reshape(w.shape)
+    wt = w * live
+    nbr = nbr_ref[0]
+    sel, local = _block_select(nbr, s, bn)
+    gathered = _gather_rows(xf_ref[0], local)
+    contrib = jnp.sum((wt * sel)[..., None] * gathered, axis=1)
 
-    @pl.when(d == nd - 1)
+    @pl.when(s == 0)
+    def _with_drop():
+        drop = jnp.sum(w - wt, axis=1, keepdims=True)
+        y_ref[0] += contrib + drop * xi_ref[0]
+
+    @pl.when(s > 0)
+    def _partial():
+        y_ref[0] += contrib
+
+    @pl.when((s == ns - 1) & (d == nd - 1))
     def _fma():
         a = coef_ref[0, 0]
         b = coef_ref[0, 1]
@@ -323,7 +380,7 @@ def segment_round_masked_batched_kernel(nd: int, coef_ref, bits_ref, nbr_ref,
         y_ref[...] = a * (y_ref[...] + diag_ref[...] * xi) + b * xi + c * xp_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "bn", "interpret"))
 def segment_round_masked_batched_pallas(
     nbrs: jax.Array,
     wgts: jax.Array,
@@ -337,6 +394,7 @@ def segment_round_masked_batched_pallas(
     bm: int = 128,
     bd: int = 8,
     bf: int = 128,
+    bn: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Masked fused sparse round over a stacked ensemble (dynamic sparse sweep).
@@ -353,27 +411,144 @@ def segment_round_masked_batched_pallas(
             f"shape mismatch: nbrs {nbrs.shape}, wgts {wgts.shape}, "
             f"slots {slots.shape}, diags {diags.shape}, bits {bits.shape}, "
             f"Xs {xs.shape}, coefs {coefs.shape}")
-    if n % bm or dmax % bd or f % bf:
-        raise ValueError(
-            f"shapes ({n},{dmax},{f}) not multiples of tiles ({bm},{bd},{bf})")
-    nd = dmax // bd
+    bn = n if bn is None else bn
+    _check_tiles(n, dmax, f, bm, bd, bf, bn)
+    ns, nd = n // bn, dmax // bd
     e = bits.shape[1]
-    grid = (g, n // bm, f // bf, nd)
+    grid = (g, n // bm, f // bf, ns, nd)
     return pl.pallas_call(
-        functools.partial(segment_round_masked_batched_kernel, nd),
+        functools.partial(segment_round_masked_batched_kernel, ns, nd, bn),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 3), lambda gg, i, j, d: (gg, 0)),
-            pl.BlockSpec((1, e), lambda gg, i, j, d: (gg, 0)),
-            pl.BlockSpec((1, bm, bd), lambda gg, i, j, d: (gg, i, d)),
-            pl.BlockSpec((1, bm, bd), lambda gg, i, j, d: (gg, i, d)),
-            pl.BlockSpec((1, bm, bd), lambda gg, i, j, d: (gg, i, d)),
-            pl.BlockSpec((1, bm, 1), lambda gg, i, j, d: (gg, i, 0)),
-            pl.BlockSpec((1, n, bf), lambda gg, i, j, d: (gg, 0, j)),
-            pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
-            pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
+            pl.BlockSpec((1, 3), lambda gg, i, j, s, d: (gg, 0)),
+            pl.BlockSpec((1, e), lambda gg, i, j, s, d: (gg, 0)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, s, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, s, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, s, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, 1), lambda gg, i, j, s, d: (gg, i, 0)),
+            pl.BlockSpec((1, bn, bf), lambda gg, i, j, s, d: (gg, s, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, s, d: (gg, i, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, s, d: (gg, i, j)),
         ],
-        out_specs=pl.BlockSpec((1, bm, bf), lambda gg, i, j, d: (gg, i, j)),
+        out_specs=pl.BlockSpec((1, bm, bf), lambda gg, i, j, s, d: (gg, i, j)),
         out_shape=jax.ShapeDtypeStruct((g, n, f), jnp.float32),
         interpret=interpret,
     )(coefs, bits, nbrs, wgts, slots, diags, xs, xs, xps)
+
+
+# ---------------------------------------------------------------------------
+# Sender-renorm masked variant: column-stochastic mass preservation.
+#
+# For the push_sum / ratio_consensus family W is COLUMN stochastic: node j's
+# outgoing mass sums to 1 down column j. When edge {i, j} drops this round,
+# the mass j would have sent to i must return to j's own diagonal (the sender
+# keeps it) — receiver-side renormalization would silently create or destroy
+# mass. Per output row i the returned mass is the column sum
+#
+#     drop[i] = sum_k W[k, i] * (1 - M[k, i])
+#             = sum_d wrev[i, d] * (1 - bits[slot[i, d]])
+#
+# because masks are per undirected edge (bits hit both directions) and
+# wrev[i, d] = W[nbr[i,d], i] stores the reverse weight of slot d's edge.
+# Everything else matches the receiver-masked kernel.
+# ---------------------------------------------------------------------------
+
+
+def segment_round_sender_masked_batched_kernel(ns: int, nd: int, bn: int,
+                                               coef_ref, bits_ref, nbr_ref,
+                                               wgt_ref, wrev_ref, slot_ref,
+                                               diag_ref, xf_ref, xi_ref,
+                                               xp_ref, y_ref):
+    """Masked gather partial with sender-side (column) dropped-mass return."""
+    s = pl.program_id(3)
+    d = pl.program_id(4)
+
+    @pl.when((s == 0) & (d == 0))
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    w = wgt_ref[0]
+    live = jnp.take(bits_ref[0], slot_ref[0].reshape(-1)).reshape(w.shape)
+    wt = w * live
+    nbr = nbr_ref[0]
+    sel, local = _block_select(nbr, s, bn)
+    gathered = _gather_rows(xf_ref[0], local)
+    contrib = jnp.sum((wt * sel)[..., None] * gathered, axis=1)
+
+    @pl.when(s == 0)
+    def _with_drop():
+        drop = jnp.sum(wrev_ref[0] * (1.0 - live), axis=1, keepdims=True)
+        y_ref[0] += contrib + drop * xi_ref[0]
+
+    @pl.when(s > 0)
+    def _partial():
+        y_ref[0] += contrib
+
+    @pl.when((s == ns - 1) & (d == nd - 1))
+    def _fma():
+        a = coef_ref[0, 0]
+        b = coef_ref[0, 1]
+        c = coef_ref[0, 2]
+        xi = xi_ref[...]
+        y_ref[...] = a * (y_ref[...] + diag_ref[...] * xi) + b * xi + c * xp_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bd", "bf", "bn", "interpret"))
+def segment_round_sender_masked_batched_pallas(
+    nbrs: jax.Array,
+    wgts: jax.Array,
+    wrevs: jax.Array,
+    slots: jax.Array,
+    diags: jax.Array,
+    bits: jax.Array,
+    xs: jax.Array,
+    xps: jax.Array,
+    coefs: jax.Array,
+    *,
+    bm: int = 128,
+    bd: int = 8,
+    bf: int = 128,
+    bn: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sender-renorm masked sparse round over a stacked ensemble.
+
+    Operands match ``segment_round_masked_batched_pallas`` plus wrevs
+    (G, N, D): the reverse weight of each slot's edge, 0 on padding slots.
+    Dropped mass returns to the sender's diagonal, keeping W_eff exactly
+    column stochastic (push_sum / ratio_consensus dynamic sweeps).
+    """
+    g, n, dmax = nbrs.shape
+    g2, n2, f = xs.shape
+    if g != g2 or n != n2 or xs.shape != xps.shape or coefs.shape != (g, 3) \
+            or wgts.shape != nbrs.shape or wrevs.shape != nbrs.shape \
+            or slots.shape != nbrs.shape or diags.shape != (g, n, 1) \
+            or bits.shape[0] != g:
+        raise ValueError(
+            f"shape mismatch: nbrs {nbrs.shape}, wgts {wgts.shape}, "
+            f"wrevs {wrevs.shape}, slots {slots.shape}, diags {diags.shape}, "
+            f"bits {bits.shape}, Xs {xs.shape}, coefs {coefs.shape}")
+    bn = n if bn is None else bn
+    _check_tiles(n, dmax, f, bm, bd, bf, bn)
+    ns, nd = n // bn, dmax // bd
+    e = bits.shape[1]
+    grid = (g, n // bm, f // bf, ns, nd)
+    return pl.pallas_call(
+        functools.partial(segment_round_sender_masked_batched_kernel, ns, nd, bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda gg, i, j, s, d: (gg, 0)),
+            pl.BlockSpec((1, e), lambda gg, i, j, s, d: (gg, 0)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, s, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, s, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, s, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, bd), lambda gg, i, j, s, d: (gg, i, d)),
+            pl.BlockSpec((1, bm, 1), lambda gg, i, j, s, d: (gg, i, 0)),
+            pl.BlockSpec((1, bn, bf), lambda gg, i, j, s, d: (gg, s, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, s, d: (gg, i, j)),
+            pl.BlockSpec((1, bm, bf), lambda gg, i, j, s, d: (gg, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bf), lambda gg, i, j, s, d: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, n, f), jnp.float32),
+        interpret=interpret,
+    )(coefs, bits, nbrs, wgts, wrevs, slots, diags, xs, xs, xps)

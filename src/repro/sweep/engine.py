@@ -93,9 +93,7 @@ def _dense_round_prim(wsp, renorm: str):
     ``renorm`` picks where a masked-off entry W_ij returns: "receiver" sums
     the dropped weights per ROW (row sums survive — the doubly-stochastic
     family's rule), "sender" per COLUMN (column sums survive — the
-    mass-conserving push-sum family). Also serves as the pallas backend's
-    fallback for masked sender-renorm partitions, which the fused masked
-    kernel (receiver-renorm only) cannot run.
+    mass-conserving push-sum family).
     """
     axis = 2 if renorm == "receiver" else 1
 
@@ -182,9 +180,9 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
     ``display`` hook (carry slot 0 by default; a ratio of taps for the
     push-sum family). Masked-round renormalization follows each partition's
     ``mass_renorm`` ("receiver" keeps row sums, "sender" keeps column sums);
-    the fused masked kernels implement receiver renorm only, so dynamic
-    sender-renorm partitions run the matching jnp fallback primitive inside
-    the same jitted scan.
+    both renorms have fused masked kernels on the pallas backend (row- and
+    column-masked variants), so no partition ever drops to a jnp fallback
+    there.
 
     ``bits``/``eidx`` (None on the static path) carry the compressed
     (T, G, E) uint8 edge-activity schedule: the scan expands each round's
@@ -196,7 +194,8 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
 
     ``sparse`` (static) switches ``ws`` to the edge-space operand pytree:
     ``(src, dst, wdir, eid, diag)`` directed arrays on the jax backend, or
-    the pre-padded ``(nbrs, wgts, slots, diags)`` ELL stacks on pallas. The
+    the pre-padded ``(nbrs, wgts, wrevs, slots, diags)`` ELL stacks on
+    pallas. The
     dynamic path then feeds each round's raw (Gp, E) bits rows straight to
     the primitive — the dense (G, N, N) mask expansion never happens, which
     is what makes N = 1e5–1e6 dynamic-topology sweeps fit in memory.
@@ -247,28 +246,22 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
         # Sparse pallas: pre-padded ELL slices drive the batched segment-
         # reduce kernel; `m` is this round's (Gp, E) bits rows gathered by
         # undirected edge id inside the kernel — no (N, N) mask anywhere.
-        # The masked kernel implements receiver renorm only: a dynamic
-        # sender-renorm partition (push-sum family) falls back to the
-        # directed-arrays jnp round, whose operands run_batch appends to the
-        # pack (positions 4..8) exactly when such a partition exists.
+        # ``renorm`` routes straight into the kernel layer: receiver-renorm
+        # partitions run the row-masked kernel, sender-renorm partitions
+        # (push-sum family) the column-masked kernel via the wrev array —
+        # no jnp fallback on this path anymore. ``tiles`` carries the bn
+        # source-block size (VMEM policy, see kernels.ops.segment_bn).
         from repro.kernels.ops import batched_segment_round_prim, use_interpret
 
-        nbrs, wgts, slots, diags = ws[:4]
-        directed = ws[4:]
-        bm, bd, bf = tiles
+        nbrs, wgts, wrevs, slots, diags = ws
+        bm, bd, bf, bn = tiles
         interpret = use_interpret()
-        nn = x0.shape[1]
 
         def make_prim(s, e, renorm):
-            if dynamic and renorm != "receiver":
-                if not directed:
-                    raise ValueError(
-                        "sparse pallas pack is missing the directed-arrays "
-                        "fallback operands for a sender-renorm partition")
-                return _sparse_round_prim(directed, s, e, nn, renorm)
             return batched_segment_round_prim(
                 nbrs[s:e], wgts[s:e], slots[s:e], diags[s:e],
-                bm=bm, bd=bd, bf=bf, interpret=interpret)
+                wrevs=wrevs[s:e], bm=bm, bd=bd, bf=bf, bn=bn,
+                interpret=interpret, renorm=renorm)
     elif sparse:
         nn = x0.shape[1]
 
@@ -280,19 +273,18 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
         # kernel directly — no per-round pad/slice materializations on the
         # carry (the wrapper in kernels.ops pays those per call; over
         # thousands of rounds they would dwarf the x_w round-trip the
-        # fusion removes). The masked kernel is receiver-renorm only; a
-        # dynamic sender-renorm partition runs the einsum fallback on the
-        # same tile-padded ws inside the same jitted scan.
+        # fusion removes). ``renorm`` picks the masked kernel variant
+        # (receiver = row renorm, sender = column renorm) — dynamic
+        # sender-renorm partitions no longer drop to the einsum fallback.
         from repro.kernels.ops import batched_round_prim, use_interpret
 
         bm, bk, bf = tiles
         interpret = use_interpret()
 
         def make_prim(s, e, renorm):
-            if dynamic and renorm != "receiver":
-                return _dense_round_prim(ws[s:e], renorm)
             return batched_round_prim(
-                ws[s:e], bm=bm, bk=bk, bf=bf, interpret=interpret)
+                ws[s:e], bm=bm, bk=bk, bf=bf, interpret=interpret,
+                renorm=renorm)
     else:
         def make_prim(s, e, renorm):
             return _dense_round_prim(ws[s:e], renorm)
@@ -517,9 +509,10 @@ def run_batch(
         # weight 0, padded bits columns are never gathered.
         from repro.kernels import ops as kops
 
-        tiles = kops._segment_tiles(f)
-        bm, bd, bf = tiles
-        n_pad = kops._round_up(n, bm) - n
+        bm, bd, bf = kops.segment_tiles(n, f, g, tune=True)
+        bn, n_tot = kops.segment_bn(n, bm, bf)
+        tiles = (bm, bd, bf, bn)
+        n_pad = n_tot - n
         f_pad = kops._round_up(f, bf) - f
         if n_pad or f_pad:
             x0 = np.pad(x0, ((0, 0), (0, n_pad), (0, f_pad)))
@@ -542,28 +535,10 @@ def run_batch(
         wpack = (
             np.stack([padd(e_[0]) for e_ in ells]),   # nbr  (G, N, D)
             np.stack([padd(e_[1]) for e_ in ells]),   # wgt  (G, N, D)
-            np.stack([padd(e_[2]) for e_ in ells]),   # slot (G, N, D)
-            np.stack([e_[3] for e_ in ells]),         # diag (G, N, 1)
+            np.stack([padd(e_[2]) for e_ in ells]),   # wrev (G, N, D)
+            np.stack([padd(e_[3]) for e_ in ells]),   # slot (G, N, D)
+            np.stack([e_[4] for e_ in ells]),         # diag (G, N, 1)
         )
-        if bits is not None and any(
-                get_algorithm(name).mass_renorm != "receiver"
-                for name, _, _ in algos):
-            # The masked ELL kernel renormalizes receiver-side only; append
-            # the directed-arrays operands so the scan can run the jnp
-            # sender-renorm fallback for those partitions (pack positions
-            # 4..8 mirror the sparse-jax layout, diag padded to the tiled N).
-            e_und = edges.shape[1]
-            rev = edge_w if edge_w_rev is None else edge_w_rev
-            wpack = wpack + (
-                np.concatenate([edges[:, :, 0], edges[:, :, 1]], axis=1),
-                np.concatenate([edges[:, :, 1], edges[:, :, 0]], axis=1),
-                np.concatenate([edge_w, rev], axis=1),
-                np.ascontiguousarray(np.broadcast_to(
-                    np.concatenate(
-                        [np.arange(e_und, dtype=np.int32)] * 2)[None],
-                    (g, 2 * e_und))),
-                np.pad(diag_w, ((0, 0), (0, n_pad))),
-            )
         if bits is not None:
             e_b = bits.shape[2]
             bits = np.pad(
@@ -579,7 +554,7 @@ def run_batch(
         # so padding and kernel blocking can never drift apart.
         from repro.kernels import ops as kops
 
-        tiles = kops._round_tiles(f)
+        tiles = kops.round_tiles(n, f, g, tune=True)
         bm, bk, bf = tiles
         n_pad = kops._round_up(n, max(bm, bk)) - n
         f_pad = kops._round_up(f, bf) - f
@@ -613,20 +588,10 @@ def run_batch(
     # only auto-engage the mesh for real grids.
     if mesh is None and g > 1 and jax.device_count() > 1:
         mesh = make_cpu_mesh()
-    if mesh is not None and backend == "pallas":
-        from repro.kernels.ops import use_interpret
-
-        if not use_interpret():
-            # Compiled pallas_call is an opaque custom call with no GSPMD
-            # partitioning rule yet (cf. the SSD kernel's custom_partitioning
-            # wrapper) — sharding the G axis over a real TPU mesh would fail
-            # or silently replicate. Fail loudly until the rule lands.
-            raise NotImplementedError(
-                "sweep backend='pallas' on a multi-device TPU mesh needs a "
-                "partitioning rule for the fused kernel (planned: "
-                "custom_partitioning over the G axis); use backend='jax' "
-                "or a single device for now"
-            )
+    # backend="pallas" under a mesh needs no special casing: the batched
+    # round prims are wrapped in custom_partitioning over the G axis
+    # (kernels.ops), so GSPMD shards the kernel calls along "data" exactly
+    # like the jax einsum path.
 
     g_pad = 0
     w_arrays = wpack if sparse else (ws,)

@@ -250,3 +250,71 @@ def test_fused_round_property(n, f, a, b, c, seed):
     y = ops.gossip_round(w, x, xp, a, b, c)
     yr = ref.gossip_round_ref(w, x, xp, a, b, c)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+
+
+def _column_stochastic_w(rng, n, p=0.35):
+    """Column-stochastic push-sum W on a random symmetric support."""
+    sup = (rng.random((n, n)) < p)
+    sup = sup | sup.T
+    np.fill_diagonal(sup, True)
+    w = sup * rng.uniform(0.1, 1.0, (n, n))
+    return (w / w.sum(axis=0, keepdims=True)).astype(np.float64)
+
+
+def test_sender_masked_batched_matches_column_renorm_reference(rng):
+    """Column-masked fused round: dropped edge mass returns to the SENDER's
+    diagonal, so W_eff = W.*M + diag(colsum(W.*(1-M))) stays column
+    stochastic under any symmetric mask — the push-sum family's invariant.
+    """
+    g, n, f = 3, 128, 128
+    ws = np.stack([_column_stochastic_w(rng, n) for _ in range(g)])
+    bits = (rng.random((g, n, n)) < 0.7)
+    ms = np.zeros((g, n, n))
+    for i in range(g):
+        m = np.triu(bits[i], 1)
+        ms[i] = m + m.T
+        np.fill_diagonal(ms[i], 1.0)
+    xs = rng.standard_normal((g, n, f))
+    xps = rng.standard_normal((g, n, f))
+    coefs = np.stack([[1.1, 0.2, -0.3]] * g)
+
+    y = ops.gossip_round_sender_masked_batched_pallas(
+        jnp.asarray(ws, jnp.float32), jnp.asarray(ms, jnp.float32),
+        jnp.asarray(xs, jnp.float32), jnp.asarray(xps, jnp.float32),
+        jnp.asarray(coefs, jnp.float32),
+        bm=128, bk=128, bf=128, interpret=ops.use_interpret())
+
+    for i in range(g):
+        wm = ws[i] * ms[i]
+        weff = wm + np.diag((ws[i] - wm).sum(axis=0))
+        np.testing.assert_allclose(weff.sum(axis=0), 1.0, atol=1e-12)
+        y_ref = 1.1 * (weff @ xs[i]) + 0.2 * xs[i] - 0.3 * xps[i]
+        np.testing.assert_allclose(
+            np.asarray(y[i]), y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_sender_masked_all_ones_mask_equals_plain_round(rng):
+    g, n, f = 2, 128, 128
+    ws = np.stack([_column_stochastic_w(rng, n) for _ in range(g)])
+    xs = jnp.asarray(rng.standard_normal((g, n, f)), jnp.float32)
+    xps = jnp.asarray(rng.standard_normal((g, n, f)), jnp.float32)
+    coefs = jnp.asarray(np.stack([[0.9, 0.3, -0.2]] * g), jnp.float32)
+    wsj = jnp.asarray(ws, jnp.float32)
+    interp = ops.use_interpret()
+    y = ops.gossip_round_sender_masked_batched_pallas(
+        wsj, jnp.ones((g, n, n), jnp.float32), xs, xps, coefs,
+        bm=128, bk=128, bf=128, interpret=interp)
+    y0 = ops.gossip_round_batched_pallas(
+        wsj, xs, xps, coefs, bm=128, bk=128, bf=128, interpret=interp)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(y0), rtol=1e-6, atol=1e-6)
+
+
+def test_sender_masked_requires_square_tiles(rng):
+    g, n, f = 1, 128, 128
+    z = jnp.zeros((g, n, f), jnp.float32)
+    w = jnp.zeros((g, n, n), jnp.float32)
+    c = jnp.zeros((g, 3), jnp.float32)
+    with pytest.raises(ValueError, match="square"):
+        ops.gossip_round_sender_masked_batched_pallas(
+            w, w, z, z, c, bm=128, bk=64, bf=128, interpret=True)

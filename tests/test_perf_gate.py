@@ -93,6 +93,66 @@ def test_gate_covers_adaptive_lane_rows():
     assert any("SKIP" in ln for ln in lines)
 
 
+def test_gate_covers_autotuned_and_segment_rows():
+    # the autotuned batched rows and the ELL segment row are gated prefixes
+    fresh = [
+        _row("gossip_round_batched_static_G2N128F128", 210.0, "pallas-interpret"),
+        _row("gossip_round_batched_tuned_G2N128F128", 100.0, "pallas-interpret"),
+        _row("segment_round_N128F128", 400.0, "pallas-interpret"),
+    ]
+    base = {
+        "gossip_round_batched_static_G2N128F128": _row(
+            "gossip_round_batched_static_G2N128F128", 100.0, "pallas-interpret"),
+        "gossip_round_batched_tuned_G2N128F128": _row(
+            "gossip_round_batched_tuned_G2N128F128", 100.0, "pallas-interpret"),
+        "segment_round_N128F128": _row(
+            "segment_round_N128F128", 100.0, "pallas-interpret"),
+    }
+    _, failures = bench_run._gate_rows(fresh, base, 1.5)
+    assert sorted(n for n, _ in failures) == [
+        "gossip_round_batched_static_G2N128F128", "segment_round_N128F128"]
+
+
+def test_trajectory_roundtrip(tmp_path):
+    path = str(tmp_path / "TRAJECTORY.jsonl")
+    rows = [
+        _row("gossip_round_fused_N200xF300", 1800.0, "pallas-interpret"),
+        _row("simulator_numpy", 99.0, "compiled"),  # not gated: not appended
+    ]
+    bench_run._append_trajectory(rows, path=path)
+    # a second append supersedes the first for the same bench name
+    bench_run._append_trajectory(
+        [_row("gossip_round_fused_N200xF300", 1700.0, "pallas-interpret")],
+        path=path)
+    got = bench_run._trajectory_rows(path)
+    assert set(got) == {"gossip_round_fused_N200xF300"}
+    r = got["gossip_round_fused_N200xF300"]
+    assert r["us_per_call"] == 1700.0 and r["mode"] == "pallas-interpret"
+    # each line carries a commit stamp (env GITHUB_SHA or git rev-parse)
+    import json
+
+    lines = [json.loads(ln) for ln in open(path)]
+    assert len(lines) == 2 and all("commit" in ln for ln in lines)
+    # trajectory rows plug straight into the gate comparison
+    fresh = [_row("gossip_round_fused_N200xF300", 3000.0, "pallas-interpret")]
+    _, failures = bench_run._gate_rows(fresh, got, 1.5)
+    assert failures and failures[0][0] == "gossip_round_fused_N200xF300"
+
+
+def test_trajectory_tolerates_corruption_and_absence(tmp_path):
+    missing = str(tmp_path / "nope.jsonl")
+    assert bench_run._trajectory_rows(missing) == {}
+    path = tmp_path / "TRAJECTORY.jsonl"
+    path.write_text(
+        "not json at all\n"
+        '{"commit": "abc", "rows": {"sweep_x": {"us_per_call": 5.0, '
+        '"mode": "compiled"}}}\n'
+        '{"commit": "def"}\n')
+    got = bench_run._trajectory_rows(str(path))
+    assert got == {"sweep_x": {
+        "bench": "sweep_x", "us_per_call": 5.0, "mode": "compiled"}}
+
+
 def test_gate_ignores_untracked_and_new_rows():
     fresh = [
         _row("simulator_numpy", 999999.0, "compiled"),   # not a gated prefix

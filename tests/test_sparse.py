@@ -141,7 +141,7 @@ def test_segment_round_kernel_matches_dense_oracle():
     x = rng.standard_normal((g.n, 5)).astype(np.float32)
     xp = rng.standard_normal((g.n, 5)).astype(np.float32)
     a, b, c = 1.1, 0.25, -0.35
-    nbr, wgt, slot, diag = ops.build_ell(g.edges, edge_w, diag_w, g.n)
+    nbr, wgt, wrev, slot, diag = ops.build_ell(g.edges, edge_w, diag_w, g.n)
 
     y = np.asarray(ops.segment_round(nbr, wgt, slot, diag, x, xp, a, b, c))
     ref = a * (w @ x) + b * x + c * xp
@@ -283,3 +283,141 @@ def test_sparse_large_n_mean_conserved_and_converging():
     assert np.all(res.mse[0, -1] < 1e-2 * res.mse[0, 0])
     at = res.averaging_times(eps=1e-1)
     assert np.all(at >= 0)                 # finite averaging times at N=1e5
+
+
+# ---------------------------------------------------------------------------
+# bn source-block tiling + sender-renorm ELL kernel
+# ---------------------------------------------------------------------------
+
+
+def _ell_fixture(n, f, g=2, seed=5):
+    """Batched ELL operands (tile-padded) + matching dense W and bits."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(seed)
+    bm, bd, bf = 128, 8, 128
+    n_t = ops._round_up(n, bm)
+    gph = topology.random_geometric_sparse(n, rng)
+    edge_w, diag_w = weights.metropolis_hastings_edges(gph)
+    nbr, wgt, wrev, slot, diag = ops.build_ell(
+        gph.edges, edge_w, np.pad(diag_w, (0, n_t - n)), n_t)
+    d_pad = ops._round_up(nbr.shape[1], bd) - nbr.shape[1]
+    nbr, wgt, wrev, slot = (
+        np.pad(a, ((0, 0), (0, d_pad))) for a in (nbr, wgt, wrev, slot))
+    e = gph.num_edges
+    bits = (rng.random((g, e)) < 0.6).astype(np.float32)
+    bits_p = np.pad(bits, ((0, 0), (0, ops._round_up(e, 128) - e)))
+    w = np.zeros((n_t, n_t))
+    w[gph.edges[:, 0], gph.edges[:, 1]] = edge_w
+    w += w.T
+    w[np.diag_indices(n)] = diag_w
+    stack = lambda a: jnp.asarray(np.stack([a] * g))
+    xs = rng.standard_normal((g, n_t, f)).astype(np.float32)
+    xps = rng.standard_normal((g, n_t, f)).astype(np.float32)
+    coefs = np.stack([[1.1, 0.2, -0.3]] * g).astype(np.float32)
+    return dict(
+        gph=gph, w=w, n_t=n_t, bits=bits,
+        nbrs=stack(nbr), wgts=stack(wgt.astype(np.float32)),
+        wrevs=stack(wrev.astype(np.float32)), slots=stack(slot),
+        diags=stack(diag.astype(np.float32)),
+        bitsj=jnp.asarray(bits_p), xs=jnp.asarray(xs), xps=jnp.asarray(xps),
+        coefs=jnp.asarray(coefs))
+
+
+def test_segment_round_bn_tiling_matches_full_n():
+    """bn < N (multi-block source axis) computes what bn = N computes, for
+    the plain, receiver-masked, and sender-masked batched kernels alike."""
+    from repro.kernels import ops, segment_round as sk
+
+    fx = _ell_fixture(300, 64)   # n_t = 384 -> 3 source blocks at bn=128
+    interp = ops.use_interpret()
+    kw = dict(bm=128, bd=8, bf=64, interpret=interp)
+
+    y_full = sk.segment_round_batched_pallas(
+        fx["nbrs"], fx["wgts"], fx["diags"], fx["xs"], fx["xps"],
+        fx["coefs"], bn=None, **kw)
+    y_tile = sk.segment_round_batched_pallas(
+        fx["nbrs"], fx["wgts"], fx["diags"], fx["xs"], fx["xps"],
+        fx["coefs"], bn=128, **kw)
+    np.testing.assert_allclose(
+        np.asarray(y_tile), np.asarray(y_full), rtol=1e-6, atol=1e-6)
+
+    y_full = sk.segment_round_masked_batched_pallas(
+        fx["nbrs"], fx["wgts"], fx["slots"], fx["diags"], fx["bitsj"],
+        fx["xs"], fx["xps"], fx["coefs"], bn=None, **kw)
+    y_tile = sk.segment_round_masked_batched_pallas(
+        fx["nbrs"], fx["wgts"], fx["slots"], fx["diags"], fx["bitsj"],
+        fx["xs"], fx["xps"], fx["coefs"], bn=128, **kw)
+    np.testing.assert_allclose(
+        np.asarray(y_tile), np.asarray(y_full), rtol=1e-6, atol=1e-6)
+
+    y_full = sk.segment_round_sender_masked_batched_pallas(
+        fx["nbrs"], fx["wgts"], fx["wrevs"], fx["slots"], fx["diags"],
+        fx["bitsj"], fx["xs"], fx["xps"], fx["coefs"], bn=None, **kw)
+    y_tile = sk.segment_round_sender_masked_batched_pallas(
+        fx["nbrs"], fx["wgts"], fx["wrevs"], fx["slots"], fx["diags"],
+        fx["bitsj"], fx["xs"], fx["xps"], fx["coefs"], bn=128, **kw)
+    np.testing.assert_allclose(
+        np.asarray(y_tile), np.asarray(y_full), rtol=1e-6, atol=1e-6)
+
+
+def test_sender_masked_segment_matches_dense_column_renorm():
+    """Sparse sender-renorm kernel == dense column-renorm oracle: dropped
+    mass W_ji of a dead edge returns to sender i's diagonal."""
+    from repro.kernels import ops, segment_round as sk
+
+    fx = _ell_fixture(120, 32)
+    gph, w, n_t = fx["gph"], fx["w"], fx["n_t"]
+    y = sk.segment_round_sender_masked_batched_pallas(
+        fx["nbrs"], fx["wgts"], fx["wrevs"], fx["slots"], fx["diags"],
+        fx["bitsj"], fx["xs"], fx["xps"], fx["coefs"],
+        bm=128, bd=8, bf=32, bn=None, interpret=ops.use_interpret())
+    for i in range(fx["bits"].shape[0]):
+        m = np.eye(n_t)
+        m[gph.edges[:, 0], gph.edges[:, 1]] = fx["bits"][i]
+        m[gph.edges[:, 1], gph.edges[:, 0]] = fx["bits"][i]
+        wm = w * m
+        weff = wm + np.diag((w - wm).sum(axis=0))
+        x_, xp_ = np.asarray(fx["xs"][i]), np.asarray(fx["xps"][i])
+        y_ref = 1.1 * (weff @ x_) + 0.2 * x_ - 0.3 * xp_
+        np.testing.assert_allclose(
+            np.asarray(y[i]), y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_build_ell_wrev_is_transposed_weight():
+    """wrev[i, d] = W[nbr[i, d], i]: the weight of the reverse direction,
+    asymmetric bases included; zero on padding slots."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(9)
+    gph = topology.random_geometric_sparse(60, rng)
+    e_fwd = rng.uniform(0.1, 1.0, gph.num_edges)
+    e_bwd = rng.uniform(0.1, 1.0, gph.num_edges)
+    diag = rng.uniform(0.1, 1.0, gph.n)
+    nbr, wgt, wrev, slot, dg = ops.build_ell(
+        gph.edges, e_fwd, diag, gph.n, edge_w_rev=e_bwd)
+    w = np.zeros((gph.n, gph.n))
+    w[gph.edges[:, 0], gph.edges[:, 1]] = e_fwd   # W[i, j]: j -> i weight
+    w[gph.edges[:, 1], gph.edges[:, 0]] = e_bwd
+    for i in range(gph.n):
+        for d in range(nbr.shape[1]):
+            if wgt[i, d] == 0.0:
+                assert wrev[i, d] == 0.0
+            else:
+                np.testing.assert_allclose(wgt[i, d], w[i, nbr[i, d]])
+                np.testing.assert_allclose(wrev[i, d], w[nbr[i, d], i])
+
+
+def test_segment_bn_policy_respects_vmem_budget(monkeypatch):
+    from repro.kernels import ops
+
+    # small N: one full-N block, no tiling
+    bn, n_t = ops.segment_bn(100, 128, 128)
+    assert (bn, n_t) == (128, 128)
+    # squeeze the budget: the (bn, bf) block must fit 64 KiB -> bn = 128
+    monkeypatch.setenv("REPRO_SEGMENT_VMEM_BUDGET", str(64 * 1024))
+    bn, n_t = ops.segment_bn(1000, 128, 128)
+    assert bn == 128 and n_t % bn == 0 and n_t >= 1000
+    assert bn * 128 * 4 <= 64 * 1024
