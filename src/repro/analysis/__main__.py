@@ -1,0 +1,56 @@
+"""CLI: ``python -m repro.analysis --check``.
+
+Exit status: 0 when no error-severity findings, 1 otherwise (warnings and
+infos never fail the lane). ``--fixtures`` registers the deliberately-broken
+fixture algorithms first and INVERTS the contract: the run fails unless
+every fixture produces its expected finding — the analysis lane's self-test.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static verification of the consensus-engine contracts")
+    p.add_argument("--check", action="store_true",
+                   help="run all passes over the live registry")
+    p.add_argument("--algorithms", nargs="*", default=None,
+                   help="restrict to these registered specs")
+    p.add_argument("--markdown", action="store_true",
+                   help="render findings as a markdown table")
+    p.add_argument("--out", default=None,
+                   help="also write the report to this file")
+    p.add_argument("--fixtures", action="store_true",
+                   help="self-test on the deliberately-broken fixtures")
+    args = p.parse_args(argv)
+    if not args.check:
+        p.print_help()
+        return 2
+
+    from repro.analysis import has_errors, render_markdown, render_text
+    from repro.analysis import run_all_checks
+
+    if args.fixtures:
+        from repro.analysis import fixtures
+
+        report, ok = fixtures.selftest()
+        sys.stdout.write(report)
+        return 0 if ok else 1
+
+    algorithms = tuple(args.algorithms) if args.algorithms else None
+    findings = run_all_checks(algorithms)
+    report = render_markdown(findings) if args.markdown \
+        else render_text(findings)
+    sys.stdout.write(report)
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(render_markdown(findings))
+    return 1 if has_errors(findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,397 @@
+"""Pass 1: coefficient-mass verification.
+
+The engine's fused round contract is ``out = a*(W_eff @ x) + b*x + c*xp``.
+With a mass-preserving base (doubly stochastic for the mean family,
+column-stochastic for the mass family) the network statistic obeys
+``m(out) = (a+b)*m(x) + c*m(xp)`` — so the statistic survives a round iff
+the coefficients recombine convexly. This pass proves that symbolically:
+each ``round_body`` is traced through the recording primitive at concrete
+ticks t = 0..T-1 (so periodic phase logic resolves), and a small abstract
+interpreter propagates *mass linear forms* through the jaxpr:
+
+- ``Known`` (a numpy array): concrete values — design coefficients, tick
+  literals, anything computable without state.
+- ``Lin``: a linear form ``sum_s c_s * m_s`` over initial-carry symbols,
+  with per-cell (G,) coefficient vectors. Mean-family tap slots all start
+  as the same ``x0``, so they share one symbol (``xbar``); mass-family
+  taps each carry their own (``tap_i`` — value and weight are distinct
+  conserved quantities); aux slots get opaque symbols.
+- ``UNKNOWN``: anything nonlinear in state (norm estimates, ratios).
+
+Checks per tick: mean family — the display form must be exactly
+``{xbar: 1}`` (±``TOL``); mass family — every tap slot's form must be
+``{tap_i: 1}``. Call sites whose coefficient operand is itself traced
+(adaptive streams) cannot be proven here: they are recorded, reported as
+``coef-mass-traced`` (info), and handed to the runtime twin
+(``run_sweep(..., debug_checks=True)``) via ``traced_coef_sites``.
+
+Rules: ``coef-mass`` (error), ``coef-base-stochastic`` (error),
+``coef-mass-unproven`` (warning), ``coef-mass-traced`` (info).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from .findings import AnalysisFinding, algo_finding
+from . import trace_utils as tu
+
+PASS = "coefficient-mass"
+TOL = 1e-4
+BASE_TOL = 1e-5
+PROBE_TICKS = 12
+
+XBAR = "xbar"
+
+_UNKNOWN = object()
+
+
+class Lin:
+    """Linear form over initial-carry symbols; coefficients are (G,) arrays."""
+
+    __slots__ = ("c",)
+
+    def __init__(self, c):
+        self.c = {k: np.asarray(v, np.float64) for k, v in c.items()
+                  if np.any(np.asarray(v) != 0)}
+
+    def scale(self, k):
+        return Lin({s: v * k for s, v in self.c.items()})
+
+    def add(self, other, sign=1.0):
+        out = dict(self.c)
+        for s, v in other.c.items():
+            out[s] = out.get(s, 0.0) + sign * v
+        return Lin(out)
+
+    def coeff(self, sym, g):
+        return np.asarray(self.c.get(sym, np.zeros(g)), np.float64)
+
+
+def _lin_equal(a: Lin, b: Lin) -> bool:
+    syms = set(a.c) | set(b.c)
+    g = max((np.size(v) for v in (*a.c.values(), *b.c.values())), default=1)
+    return all(
+        np.allclose(a.coeff(s, g), b.coeff(s, g), atol=1e-7) for s in syms)
+
+
+def _per_cell(val, out_shape, g):
+    """(G,) per-cell scalars of ``val`` when it is cell-uniform, else None.
+
+    ``val`` must broadcast to ``out_shape`` and be constant within each cell
+    (node/trial axes) — the condition under which scaling a state array
+    scales its per-cell statistic linearly.
+    """
+    try:
+        k = np.broadcast_to(np.asarray(val, np.float64), out_shape)
+    except ValueError:
+        return None
+    if not out_shape or out_shape[0] != g:
+        if np.all(k == k.flat[0]):        # global scalar
+            return np.full(g, k.flat[0])
+        return None
+    k = k.reshape(g, -1)
+    if k.shape[1] and np.all(k == k[:, :1]):
+        return k[:, 0].copy()
+    return None
+
+
+class MassInterp:
+    """One-tick jaxpr interpreter propagating Known / Lin / UNKNOWN."""
+
+    def __init__(self, g: int):
+        self.g = g
+        self.traced_sites: list[int] = []
+        self.call_idx = 0
+
+    # -- environment ------------------------------------------------------
+    def _read(self, env, atom):
+        if hasattr(atom, "val"):                       # Literal
+            return np.asarray(atom.val)
+        return env.get(atom, _UNKNOWN)
+
+    def run(self, closed, in_vals):
+        env = {}
+        for var, c in zip(closed.jaxpr.constvars, closed.consts):
+            env[var] = np.asarray(c)
+        for var, v in zip(closed.jaxpr.invars, in_vals):
+            if v is not None:
+                env[var] = v
+        self._run_jaxpr(closed.jaxpr, env)
+        return [self._read(env, v) for v in closed.jaxpr.outvars]
+
+    def _run_jaxpr(self, jaxpr, env):
+        for eqn in jaxpr.eqns:
+            vals = [self._read(env, v) for v in eqn.invars]
+            outs = self._eqn(eqn, vals, env)
+            if not isinstance(outs, (list, tuple)):
+                outs = [outs]
+            for var, v in zip(eqn.outvars, outs):
+                env[var] = v
+
+    # -- primitive rules --------------------------------------------------
+    def _eqn(self, eqn, vals, env):
+        name = eqn.primitive.name
+        if name == tu.ANALYSIS_PRIM_NAME:
+            return self._prim_rule(*vals)
+        if name == "pjit":
+            inner = eqn.params["jaxpr"]
+            sub = MassInterp(self.g)
+            sub.call_idx = self.call_idx
+            outs = sub.run(inner, vals)
+            self.call_idx = sub.call_idx
+            self.traced_sites.extend(sub.traced_sites)
+            return outs
+        if all(isinstance(v, np.ndarray) for v in vals):
+            return self._concrete(eqn, vals)
+        out_shape = eqn.outvars[0].aval.shape
+        if name == "add":
+            return self._add(vals[0], vals[1], 1.0, out_shape)
+        if name == "sub":
+            return self._add(vals[0], vals[1], -1.0, out_shape)
+        if name == "neg" and isinstance(vals[0], Lin):
+            return vals[0].scale(-1.0)
+        if name == "mul":
+            return self._mul(vals[0], vals[1], out_shape)
+        if name == "div":
+            num, den = vals
+            if isinstance(num, Lin) and isinstance(den, np.ndarray):
+                k = _per_cell(den, out_shape, self.g)
+                if k is not None and np.all(k != 0):
+                    return num.scale(1.0 / k)
+            return _UNKNOWN
+        if name in ("convert_element_type", "copy", "reshape",
+                    "stop_gradient") and isinstance(vals[0], Lin):
+            return vals[0]
+        if name == "select_n":
+            return self._select(vals[0], vals[1:], out_shape)
+        return [_UNKNOWN] * len(eqn.outvars)
+
+    def _concrete(self, eqn, vals):
+        import jax.numpy as jnp
+        try:
+            subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+            out = eqn.primitive.bind(
+                *subfuns, *[jnp.asarray(v) for v in vals], **bind_params)
+        except Exception:
+            return [_UNKNOWN] * len(eqn.outvars)
+        if eqn.primitive.multiple_results:
+            return [np.asarray(o) for o in out]
+        return np.asarray(out)
+
+    def _add(self, a, b, sign, out_shape):
+        if isinstance(a, Lin) and isinstance(b, Lin):
+            return a.add(b, sign)
+        lin, kn = (a, b) if isinstance(a, Lin) else (b, a)
+        if isinstance(lin, Lin) and isinstance(kn, np.ndarray) \
+                and np.all(kn == 0):
+            return lin if lin is a or sign > 0 else lin.scale(sign)
+        return _UNKNOWN
+
+    def _mul(self, a, b, out_shape):
+        lin, kn = (a, b) if isinstance(a, Lin) else (b, a)
+        if not isinstance(lin, Lin) or not isinstance(kn, np.ndarray):
+            return _UNKNOWN
+        k = _per_cell(kn, out_shape, self.g)
+        return lin.scale(k) if k is not None else _UNKNOWN
+
+    def _select(self, pred, cases, out_shape):
+        if isinstance(pred, np.ndarray) and np.all(pred == pred.flat[0]) \
+                and 0 <= int(pred.flat[0]) < len(cases):
+            return cases[int(pred.flat[0])]
+        lins = [c for c in cases if isinstance(c, Lin)]
+        if len(lins) == len(cases) and all(
+                _lin_equal(lins[0], c) for c in lins[1:]):
+            return lins[0]
+        return _UNKNOWN
+
+    def _prim_rule(self, x, xp, coef):
+        idx = self.call_idx
+        self.call_idx += 1
+        if isinstance(coef, np.ndarray):
+            rows = coef.reshape(-1, coef.shape[-1])
+            if rows.shape[0] != self.g or rows.shape[1] < 3:
+                return _UNKNOWN
+            a, b, c = (rows[:, i].astype(np.float64) for i in range(3))
+            if isinstance(x, Lin) and isinstance(xp, Lin):
+                return x.scale(a + b).add(xp.scale(c))
+            return _UNKNOWN
+        # traced coefficient stream: statically unprovable — record the
+        # site for the runtime twin. When both taps carry the SAME form,
+        # any affine recombination with mass 1 returns that form, so we
+        # propagate it under the (runtime-checked) convexity assumption.
+        self.traced_sites.append(idx)
+        if isinstance(x, Lin) and isinstance(xp, Lin) and _lin_equal(x, xp):
+            return Lin(dict(x.c))
+        return _UNKNOWN
+
+
+# ---------------------------------------------------------------------------
+# Per-registration driver.
+# ---------------------------------------------------------------------------
+
+def _initial_forms(algo, n_slots, g):
+    forms = []
+    for i in range(n_slots):
+        if i >= algo.num_taps:
+            forms.append(Lin({f"aux{i}": np.ones(g)}))
+        elif algo.invariant == "mass":
+            forms.append(Lin({f"tap{i}": np.ones(g)}))
+        else:
+            forms.append(Lin({XBAR: np.ones(g)}))
+    return forms
+
+
+def _step(algo, ens, t, forms):
+    """One symbolic tick: returns (new forms, traced site indices)."""
+    closed = tu.trace_round_body(algo, ens, t)
+    g = ens.x0.shape[0]
+    interp = MassInterp(g)
+    coefs = np.asarray(ens.coefs, np.float32)
+    outs = interp.run(closed, [coefs, *forms])
+    outs = [o if isinstance(o, (Lin, np.ndarray)) else _UNKNOWN for o in outs]
+    return outs, interp.traced_sites
+
+
+def _display_form(algo, ens, forms):
+    import jax
+
+    carry = tu.carry_structs(algo, ens)
+    closed = jax.make_jaxpr(lambda c: algo.display(c))(carry)
+    interp = MassInterp(ens.x0.shape[0])
+    out = interp.run(closed, list(forms))
+    return out[0]
+
+
+def _check_base(algo, ens):
+    """The prim rule assumes a mass-preserving base — verify numerically."""
+    if ens.ws is None:
+        return []
+    ws = np.asarray(ens.ws, np.float64)
+    col = np.abs(ws.sum(axis=1) - 1.0).max()
+    row = np.abs(ws.sum(axis=2) - 1.0).max()
+    bad = (col > BASE_TOL or row > BASE_TOL) if algo.invariant == "mean" \
+        else col > BASE_TOL
+    if bad:
+        need = "doubly" if algo.invariant == "mean" else "column"
+        return [algo_finding(
+            "coef-base-stochastic", "error",
+            f"probe base matrices are not {need}-stochastic "
+            f"(max column-sum dev {col:.2e}, row {row:.2e}): the "
+            f"coefficient-mass contract has no base to preserve", algo,
+            PASS)]
+    return []
+
+
+def check_algorithm(algo) -> list[AnalysisFinding]:
+    ens = tu.probe_ensemble(algo.spec)
+    g = ens.x0.shape[0]
+    findings = _check_base(algo, ens)
+
+    n_slots = len(tu.carry_structs(algo, ens))
+    forms = _initial_forms(algo, n_slots, g)
+    traced: set[int] = set()
+    for t in range(PROBE_TICKS):
+        forms, sites = _step(algo, ens, t, forms)
+        traced.update(sites)
+        if algo.invariant == "mass":
+            for i in range(algo.num_taps):
+                f = forms[i] if i < len(forms) else _UNKNOWN
+                if not isinstance(f, Lin):
+                    findings.append(algo_finding(
+                        "coef-mass-unproven", "warning",
+                        f"tap {i} mass not statically provable at tick {t} "
+                        f"(nonlinear or traced update)", algo, PASS))
+                    return findings
+                dev = max(
+                    np.abs(f.coeff(f"tap{i}", g) - 1.0).max(),
+                    max((np.abs(v).max() for s, v in f.c.items()
+                         if s != f"tap{i}"), default=0.0))
+                if dev > TOL:
+                    findings.append(algo_finding(
+                        "coef-mass", "error",
+                        f"tap {i} leaks mass at tick {t}: composed form "
+                        f"deviates from identity by {dev:.2e} (> {TOL:g})",
+                        algo, PASS))
+                    return findings
+        else:
+            d = _display_form(algo, ens, forms)
+            if not isinstance(d, Lin):
+                findings.append(algo_finding(
+                    "coef-mass-unproven", "warning",
+                    f"display mean not statically provable at tick {t} "
+                    f"(nonlinear or traced update)", algo, PASS))
+                return findings
+            dev = max(
+                np.abs(d.coeff(XBAR, g) - 1.0).max(),
+                max((np.abs(v).max() for s, v in d.c.items() if s != XBAR),
+                    default=0.0))
+            if dev > TOL:
+                findings.append(algo_finding(
+                    "coef-mass", "error",
+                    f"coefficient mass leaks at tick {t}: display mean is "
+                    f"{'+'.join(f'{v.max():.4f}*{s}' for s, v in sorted(d.c.items()))} "
+                    f"(deviation {dev:.2e} > {TOL:g}) — the consensus value "
+                    f"drifts from the true average", algo, PASS))
+                return findings
+    if traced:
+        findings.append(algo_finding(
+            "coef-mass-traced", "info",
+            f"{len(traced)} round-prim site(s) take a traced coefficient "
+            f"stream (statically assumed convex); covered at runtime by "
+            f"run_sweep(debug_checks=True)", algo, PASS))
+    return findings
+
+
+def check_coefficient_mass(algorithms=None) -> list[AnalysisFinding]:
+    from repro.core.algorithms import get_algorithm, registered_algorithms
+
+    findings = []
+    for spec in (algorithms or registered_algorithms()):
+        algo = get_algorithm(spec)
+        try:
+            findings.extend(check_algorithm(algo))
+        except Exception as exc:  # a body that won't even trace is a finding
+            findings.append(algo_finding(
+                "coef-trace-failed", "error",
+                f"round_body failed to trace abstractly: {exc}", algo, PASS))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Runtime-twin support: which prim call sites carry traced coefficients.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=128)
+def _traced_sites_cached(spec_str: str, generation: int) -> frozenset:
+    del generation
+    from repro.core.algorithms import get_algorithm
+
+    algo = get_algorithm(spec_str)
+    ens = tu.probe_ensemble(spec_str)
+    g = ens.x0.shape[0]
+    n_slots = len(tu.carry_structs(algo, ens))
+    forms = _initial_forms(algo, n_slots, g)
+    traced: set[int] = set()
+    for t in range(PROBE_TICKS):
+        forms, sites = _step(algo, ens, t, forms)
+        traced.update(sites)
+    return frozenset(traced)
+
+
+def traced_coef_sites(spec_str: str) -> frozenset:
+    """Indices (round_body call order) of prim sites with traced coefs.
+
+    Computed with CONCRETE ticks, so merely tick-dependent coefficient
+    gathers (poly_filter's Horner taps — individually non-convex by design,
+    proven via the held display instead) do NOT qualify; only genuinely
+    data-dependent streams (adaptive estimators) do. The engine's
+    ``debug_checks`` twin attaches a checkify coefficient-mass guard at
+    exactly these sites — the sites where the static pass had to ASSUME
+    convexity rather than prove it.
+    """
+    from repro.core.algorithms import registry_generation
+
+    return _traced_sites_cached(str(spec_str), registry_generation())

@@ -1,0 +1,92 @@
+"""Pass 2: the one-compilation contract.
+
+``run_batch`` stakes its throughput on compiling a mixed-algorithm grid to
+ONE fused scan per backend: every partition's round is inlined into a single
+``lax.scan`` body, traced once. Two statically-checkable ways to lose that:
+
+- the full-grid program contains more (or fewer) than one ``scan`` — some
+  layer wrapped rounds in its own loop, or a partition escaped the fused
+  body (rule ``scan-count``);
+- a ``round_body`` concretizes the traced tick index (Python ``if t % k``,
+  ``int(t)`` …): under the real scan that's a trace error, and the only
+  "fix" — unrolling per tick — fragments the partition into per-tick
+  compilations (rule ``retrace-fragmentation``). We catch it by re-tracing
+  each round body with an ABSTRACT int32 tick, exactly the engine's view.
+
+Everything is ``jax.make_jaxpr`` tracing; nothing compiles or runs.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .findings import AnalysisFinding, algo_finding, source_of
+from . import trace_utils as tu
+
+PASS = "trace-compile"
+
+_CONCRETIZATION = (
+    jax.errors.ConcretizationTypeError,
+    jax.errors.TracerArrayConversionError,
+    jax.errors.TracerBoolConversionError,
+    jax.errors.TracerIntegerConversionError,
+)
+
+
+def _engine_finding(rule, severity, message, backend):
+    from repro.sweep import engine
+
+    file, line = source_of(engine.run_batch)
+    return AnalysisFinding(
+        rule=rule, severity=severity, message=message,
+        obj=f"sweep.engine[{backend}]", file=file, line=line, passname=PASS)
+
+
+def check_compilation(algorithms=None):
+    from repro.core.algorithms import get_algorithm, registered_algorithms
+
+    specs = tuple(algorithms or registered_algorithms())
+    findings: list[AnalysisFinding] = []
+
+    # (a) per-registration: the round body must trace under an abstract tick.
+    # Bodies that can't are excluded from the grid census below — the whole
+    # grid would fail to trace for the same root cause, and one finding per
+    # defect beats a cascade.
+    traceable = []
+    for spec in specs:
+        algo = get_algorithm(spec)
+        ens = tu.probe_ensemble(algo.spec)
+        try:
+            tu.trace_round_body(algo, ens, 0, abstract_t=True)
+            traceable.append(spec)
+        except _CONCRETIZATION as exc:
+            findings.append(algo_finding(
+                "retrace-fragmentation", "error",
+                "round_body concretizes the traced tick index (Python "
+                "control flow on t): under the engine scan this is a trace "
+                "error, and unrolling it fragments the partition into "
+                f"per-tick compilations ({type(exc).__name__})", algo, PASS))
+        except Exception as exc:
+            findings.append(algo_finding(
+                "round-trace-failed", "error",
+                f"round_body failed to trace with an abstract tick: {exc}",
+                algo, PASS))
+
+    # (b) whole-grid scan census per backend
+    for backend in ("jax", "pallas") if traceable else ():
+        try:
+            closed = tu.trace_engine(tuple(traceable), backend)
+        except Exception as exc:
+            findings.append(_engine_finding(
+                "engine-trace-failed", "error",
+                f"mixed grid over {traceable} failed to trace: {exc}",
+                backend))
+            continue
+        n_scan = tu.count_primitive(closed.jaxpr, "scan")
+        if n_scan != 1:
+            findings.append(_engine_finding(
+                "scan-count", "error",
+                f"grid over {len(traceable)} algorithm(s) traced to "
+                f"{n_scan} scan eqns (the one-compilation contract requires "
+                f"exactly 1 fused scan per backend)", backend))
+    return findings

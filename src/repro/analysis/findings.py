@@ -1,0 +1,102 @@
+"""Finding schema shared by every analysis pass."""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalysisFinding:
+    """One statically-detected contract violation (or advisory).
+
+    ``rule`` is the stable machine id tests and CI key on (e.g.
+    ``coef-mass``); ``severity`` is ``error`` (CI-failing), ``warning``
+    (contract not provable — review) or ``info`` (advisory, e.g. a traced
+    coefficient stream that needs the runtime twin). ``obj`` names the
+    offending object (algorithm spec, function), ``file``/``line`` its
+    source location when resolvable.
+    """
+
+    rule: str
+    severity: str
+    message: str
+    obj: str = ""
+    file: str = ""
+    line: int = 0
+    passname: str = ""
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"severity must be one of {SEVERITIES}, got {self.severity!r}")
+
+    def location(self) -> str:
+        return f"{self.file}:{self.line}" if self.file else ""
+
+
+def source_of(obj) -> tuple[str, int]:
+    """(file, line) of ``obj``'s definition; ('', 0) when unresolvable."""
+    try:
+        target = obj if inspect.isclass(obj) or inspect.isfunction(obj) \
+            else type(obj)
+        file = inspect.getsourcefile(target) or ""
+        _, line = inspect.getsourcelines(target)
+        return file, line
+    except (OSError, TypeError):
+        return "", 0
+
+
+def algo_finding(rule: str, severity: str, message: str, algo,
+                 passname: str = "") -> AnalysisFinding:
+    """Finding anchored at an algorithm registration's class definition."""
+    file, line = source_of(algo)
+    return AnalysisFinding(
+        rule=rule, severity=severity, message=message,
+        obj=getattr(algo, "spec", str(algo)), file=file, line=line,
+        passname=passname)
+
+
+def has_errors(findings) -> bool:
+    return any(f.severity == "error" for f in findings)
+
+
+def _sorted(findings):
+    order = {s: i for i, s in enumerate(SEVERITIES)}
+    return sorted(findings, key=lambda f: (order[f.severity], f.passname,
+                                           f.rule, f.obj))
+
+
+def render_text(findings) -> str:
+    """Human-readable report (stdout of the CLI)."""
+    if not findings:
+        return "analysis: all contracts verified, no findings.\n"
+    lines = []
+    for f in _sorted(findings):
+        loc = f" [{f.location()}]" if f.file else ""
+        lines.append(
+            f"{f.severity.upper():7s} {f.passname}/{f.rule} "
+            f"{f.obj}: {f.message}{loc}")
+    n_err = sum(1 for f in findings if f.severity == "error")
+    lines.append(
+        f"-- {len(findings)} finding(s), {n_err} error(s).")
+    return "\n".join(lines) + "\n"
+
+
+def render_markdown(findings) -> str:
+    """Markdown table for the CI job summary."""
+    head = "### Static analysis (consensus contract checker)\n\n"
+    if not findings:
+        return head + "All contracts verified — no findings.\n"
+    rows = ["| severity | pass | rule | object | message |",
+            "|---|---|---|---|---|"]
+    for f in _sorted(findings):
+        msg = f.message.replace("|", "\\|").replace("\n", " ")
+        rows.append(
+            f"| {f.severity} | {f.passname} | `{f.rule}` | `{f.obj}` "
+            f"| {msg} |")
+    n_err = sum(1 for f in findings if f.severity == "error")
+    tail = f"\n\n{len(findings)} finding(s), {n_err} error(s).\n"
+    return head + "\n".join(rows) + tail

@@ -910,19 +910,93 @@ def registry_generation() -> int:
     return _GENERATION
 
 
+def _validate_registration(name: str, inst: "ConsensusAlgorithm") -> None:
+    """Fail-fast structural contract for a registration's default instance.
+
+    Raises at ``register_algorithm`` time instead of at first trace (or,
+    worse, at the first conformance comparison): a registration whose carry
+    contract is malformed or whose oracle hooks are absent would otherwise
+    surface as an opaque scan-structure error deep inside the jitted engine.
+    """
+    if not isinstance(inst, ConsensusAlgorithm):
+        raise TypeError(
+            f"factory for {name!r} returned {type(inst).__name__}, "
+            f"not a ConsensusAlgorithm")
+    cls = type(inst)
+    if not isinstance(inst.num_taps, int) or inst.num_taps < 1:
+        raise ValueError(
+            f"{name!r}: num_taps must be an int >= 1 (the display contract "
+            f"reads carry slot 0), got {inst.num_taps!r}")
+    if not isinstance(inst.num_aux, int) or inst.num_aux < 0:
+        raise ValueError(
+            f"{name!r}: num_aux must be an int >= 0, got {inst.num_aux!r}")
+    if inst.invariant not in ("mean", "mass"):
+        raise ValueError(
+            f"{name!r}: invariant must be 'mean' or 'mass', "
+            f"got {inst.invariant!r}")
+    if inst.mass_renorm not in ("receiver", "sender"):
+        raise ValueError(
+            f"{name!r}: mass_renorm must be 'receiver' or 'sender', "
+            f"got {inst.mass_renorm!r}")
+    if cls.round_body is ConsensusAlgorithm.round_body:
+        raise TypeError(f"{name!r}: round_body is not implemented")
+    if not callable(getattr(inst, "display", None)):
+        raise TypeError(f"{name!r}: display must be callable")
+    # The conformance oracle needs ONE of the reference hooks: a per-tick
+    # (a, b, c) row (ref_coef) or a full host reference (reference_run).
+    if (cls.ref_coef is ConsensusAlgorithm.ref_coef
+            and cls.reference_run is ConsensusAlgorithm.reference_run):
+        raise TypeError(
+            f"{name!r}: implement ref_coef or override reference_run — "
+            f"without either the conformance suite has no oracle")
+
+
 def register_algorithm(name: str, factory) -> None:
     """Register ``factory(*string_args) -> ConsensusAlgorithm`` under ``name``.
 
     Spec strings are ``name`` or ``name:arg1:arg2`` (args passed as strings,
     like the dynamics axis). Re-registration replaces (and drops cached
     instances + invalidates the engine's jit cache via the registry
-    generation) so tests can shadow entries.
+    generation) so tests can shadow entries. The factory's zero-argument
+    (default-spec) instance is validated here — malformed contracts raise
+    NOW, not at first trace (see ``_validate_registration``); the deeper
+    semantic contracts (coefficient mass, compile stability, precision) are
+    checked statically by ``verify_static`` / ``python -m repro.analysis``.
     """
     global _GENERATION
+    _validate_registration(name, factory())
     _FACTORIES[name] = factory
     _GENERATION += 1
     for k in [k for k in _INSTANCES if k.split(":")[0] == name]:
         del _INSTANCES[k]
+
+
+def unregister_algorithm(name: str) -> None:
+    """Remove a registration (cached instances + dist variant included).
+
+    Primarily for tests and the analysis fixtures, which shadow the registry
+    with deliberately-broken entries and must restore it exactly.
+    """
+    global _GENERATION
+    _FACTORIES.pop(name, None)
+    _DIST_VARIANTS.pop(name, None)
+    _GENERATION += 1
+    for k in [k for k in _INSTANCES if k.split(":")[0] == name]:
+        del _INSTANCES[k]
+
+
+def verify_static(spec) -> list:
+    """Static contract check for one registration (no rounds executed).
+
+    Delegates to ``repro.analysis.verify_static``: traces the algorithm's
+    ``round_body`` to jaxprs and runs the coefficient-mass, trace/compile
+    and precision passes against it, returning the list of
+    ``AnalysisFinding``s (empty = clean). Registration authors run this at
+    review time; CI runs it over the whole registry as the analysis lane.
+    """
+    from repro.analysis import verify_static as _verify
+
+    return _verify(spec)
 
 
 def registered_algorithms() -> tuple[str, ...]:

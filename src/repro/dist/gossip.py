@@ -524,6 +524,19 @@ def algorithm_gossip(x, axis_name: str, fabric: PodFabric, num_rounds: int,
     return fn(x, axis_name, fabric, num_rounds, **kwargs)
 
 
+# Registrations with no shard_map gossip mirror, ON PURPOSE — consumed by
+# the static analyzer's mesh-dist-coverage advisory (repro.analysis), so a
+# deliberate gap is distinguishable from a forgotten one:
+#   accel_m        — the M-tap frontier study runs through the sweep engine
+#                    only; its memory-order sweep has no in-mesh use case.
+#   poly_filter    — the Chebyshev/polynomial filter needs the full period's
+#                    taps resident; the per-round wire protocol here has no
+#                    super-iteration framing.
+#   ratio_consensus — in-mesh lossy averaging is served by push_sum_gossip;
+#                    the ratio variant differs only in engine-side seams.
+DIST_EXEMPT = ("accel_m", "poly_filter", "ratio_consensus")
+
+
 def _register_dist_variants():
     from ..core.algorithms import register_dist_variant
 

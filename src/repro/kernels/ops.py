@@ -199,6 +199,43 @@ def cp_partition_count() -> int:
     return _CP_PARTITION_CALLS
 
 
+def reset_cp_partition_count() -> None:
+    """Zero the fired-counter. The counter is process-global; any test that
+    asserts on absolute values (rather than deltas) must reset it first or
+    an earlier multidevice test's compilations leak into the assertion."""
+    global _CP_PARTITION_CALLS
+    _CP_PARTITION_CALLS = 0
+
+
+@contextlib.contextmanager
+def cp_partition_calls():
+    """Scoped delta view of the fired-counter: yields a zero-arg callable
+    returning how many partition-rule invocations happened since entry.
+    Robust against interleaved suites — each scope measures its own delta,
+    so absolute counts never leak across assertions."""
+    start = _CP_PARTITION_CALLS
+    yield lambda: _CP_PARTITION_CALLS - start
+
+
+# Trace-time override for the single-device fast path below: the static
+# analyzer (repro.analysis.meshkernel) traces the engine on a one-device
+# host but must see the jaxpr a MESH run would lower — i.e. every batched
+# kernel behind its custom_partitioning wrapper — to verify no pallas_call
+# escapes unwrapped. Never set during real runs.
+_FORCE_MESH = contextvars.ContextVar("force_mesh_dispatch", default=False)
+
+
+@contextlib.contextmanager
+def force_mesh_dispatch():
+    """Make batched-round prim builders take the custom_partitioning path
+    regardless of ``jax.device_count()`` (static-analysis tracing only)."""
+    token = _FORCE_MESH.set(True)
+    try:
+        yield
+    finally:
+        _FORCE_MESH.reset(token)
+
+
 def _g_axis(arg_shapes):
     """The mesh axis dim 0 is sharded over, from the first sharded operand."""
     for a in arg_shapes:
@@ -303,7 +340,7 @@ def batched_round_prim(ws, *, bm: int = 128, bk: int = 128, bf: int = 512,
         interpret = use_interpret()
     if renorm not in ("receiver", "sender"):
         raise ValueError(f"renorm must be receiver or sender, got {renorm!r}")
-    single = jax.device_count() == 1
+    single = jax.device_count() == 1 and not _FORCE_MESH.get()
     kw = dict(bm=bm, bk=bk, bf=bf, interpret=interpret)
 
     def prim(x, xp, coef, m=None):
@@ -661,7 +698,7 @@ def batched_segment_round_prim(nbrs, wgts, slots, diags, *, wrevs=None,
         raise ValueError(f"renorm must be receiver or sender, got {renorm!r}")
     if renorm == "sender" and wrevs is None:
         raise ValueError("renorm='sender' needs the wrevs ELL array")
-    single = jax.device_count() == 1
+    single = jax.device_count() == 1 and not _FORCE_MESH.get()
     kw = dict(bm=bm, bd=bd, bf=bf, bn=bn, interpret=interpret)
 
     def prim(x, xp, coef, m=None):

@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import inspect
+import itertools
 
 import numpy as np
 
@@ -163,11 +164,13 @@ def _sparse_round_prim(pack, s: int, e: int, nn: int, renorm: str):
 @functools.partial(
     jax.jit,
     static_argnames=("num_iters", "use_kernels", "tiles", "layout", "algo_gen",
-                     "sparse"))
+                     "sparse", "debug_checks", "dbg_sites"))
 def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
                 tiles: tuple[int, int, int] | None = None, bits=None, eidx=None,
                 layout: tuple[tuple[str, int, int], ...] | None = None,
-                algo_gen: int = 0, sparse: bool = False):
+                algo_gen: int = 0, sparse: bool = False,
+                debug_checks: bool = False,
+                dbg_sites: tuple[tuple[int, ...], ...] = ()):
     """One jitted scan for the whole (possibly mixed-algorithm) grid.
 
     ``layout`` is the static tuple of (algorithm spec, start, stop) G
@@ -298,6 +301,18 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
             else make_prim(s, e, algo.mass_renorm)
         parts.append((algo, s, e, prim))
 
+    if debug_checks:
+        # runtime twin of the static coefficient-mass pass: checkify guards
+        # at exactly the prim sites whose coefficient streams are traced
+        # (data-dependent — the analysis pass could only ASSUME convexity
+        # there), plus an isfinite guard on every round output. Static sites
+        # are already proven by `python -m repro.analysis --check`; guarding
+        # e.g. poly_filter's individually-non-convex Horner taps would
+        # misfire, so run_batch precomputes `dbg_sites` per partition from
+        # the same classifier (outside this trace — jaxpr interpretation
+        # can't nest inside the checkify transform).
+        from jax.experimental import checkify
+
     def mse_of(x):
         d = (x - xbar) * mask
         return (d * d).sum(axis=1) * inv_n[:, None]               # (G, F)
@@ -305,15 +320,35 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
     def body(carry, xs_t):
         t, bits_t = xs_t if dynamic else (xs_t, None)
         new_carry, disp = [], []
-        for (algo, s, e, prim), sub in zip(parts, carry):
+        for i, ((algo, s, e, prim), sub) in enumerate(zip(parts, carry)):
             if dynamic:
                 m = bits_t[s:e].astype(jnp.float32) if sparse \
                     else expand(bits_t[s:e], eidx[s:e])
             else:
                 m = None
-            sub = algo.round_body(
-                lambda x, xp, coef, _p=prim, _m=m: _p(x, xp, coef, _m),
-                coefs[s:e], sub, t)
+            if debug_checks:
+                calls = itertools.count()  # trace-time call-order counter
+
+                def pr(x, xp, coef, _p=prim, _m=m, _a=algo,
+                       _sites=dbg_sites[i], _c=calls):
+                    k = next(_c)
+                    if k in _sites:
+                        ssum = coef[..., 0] + coef[..., 1] + coef[..., 2]
+                        checkify.check(
+                            jnp.all(jnp.abs(ssum - 1.0) <= 1e-3),
+                            f"coefficient-mass guard: traced (a,b,c) stream "
+                            f"at {_a.spec} round_body site {k} strayed from "
+                            f"sum 1 (tol 1e-3)")
+                    out = _p(x, xp, coef, _m)
+                    checkify.check(
+                        jnp.all(jnp.isfinite(out)),
+                        f"nonfinite state out of {_a.spec} round_body "
+                        f"site {k}")
+                    return out
+            else:
+                def pr(x, xp, coef, _p=prim, _m=m):
+                    return _p(x, xp, coef, _m)
+            sub = algo.round_body(pr, coefs[s:e], sub, t)
             new_carry.append(sub)
             disp.append(algo.display(sub))
         x_all = disp[0] if len(disp) == 1 else jnp.concatenate(disp, axis=0)
@@ -330,6 +365,103 @@ def _sweep_scan(ws, x0, mask, inv_n, coefs, num_iters: int, use_kernels: bool,
     x_fin = disp_fin[0] if len(disp_fin) == 1 else jnp.concatenate(disp_fin, axis=0)
     mse = jnp.concatenate([mse_of(x0)[None], mse_tail], axis=0)   # (T+1, G, F)
     return x_fin, jnp.moveaxis(mse, 0, 1), carry_fin              # (G, T+1, F)
+
+
+def _prep_pallas_dense(ws, x0):
+    """Pad (ws, x0) to the dense-kernel tile multiples ONCE, host-side.
+
+    Returns ``(ws, x0, tiles, n, f)`` with the padded node/trial extents.
+    ``ws=None`` skips the weight pad (the static analyzer replays this prep
+    on abstract shapes — keeping it here is what guarantees the jaxpr it
+    walks has exactly the shapes ``run_batch`` compiles).
+    """
+    from repro.kernels import ops as kops
+
+    g, n, f = x0.shape
+    tiles = kops.round_tiles(n, f, g, tune=True)
+    bm, bk, bf = tiles
+    n_pad = kops._round_up(n, max(bm, bk)) - n
+    f_pad = kops._round_up(f, bf) - f
+    if n_pad or f_pad:
+        if ws is not None:
+            ws = np.pad(ws, ((0, 0), (0, n_pad), (0, n_pad)))
+        x0 = np.pad(x0, ((0, 0), (0, n_pad), (0, f_pad)))
+    return ws, x0, tiles, n + n_pad, f + f_pad
+
+
+def _prep_pallas_sparse(x0, edges, edge_w, diag_w, edge_counts, edge_w_rev,
+                        bits):
+    """Build the padded ELL pack for the sparse-pallas layout, host-side.
+
+    Per-cell ELL arrays are built ONCE (N already padded to the row tile so
+    ``build_ell`` sizes them directly), the neighbor-slot axis is padded to
+    the common tile-rounded max degree, and the bits E axis to the kernel's
+    128-lane block. Padded slots have weight 0; padded bits columns are
+    never gathered. Returns ``(x0, wpack, tiles, bits, n, f)``.
+    """
+    from repro.kernels import ops as kops
+
+    g, n, f = x0.shape
+    bm, bd, bf = kops.segment_tiles(n, f, g, tune=True)
+    bn, n_tot = kops.segment_bn(n, bm, bf)
+    tiles = (bm, bd, bf, bn)
+    n_pad = n_tot - n
+    f_pad = kops._round_up(f, bf) - f
+    if n_pad or f_pad:
+        x0 = np.pad(x0, ((0, 0), (0, n_pad), (0, f_pad)))
+    n, f = n + n_pad, f + f_pad
+    ec = np.full(g, edges.shape[1], dtype=np.int64) \
+        if edge_counts is None else np.asarray(edge_counts, dtype=np.int64)
+    ells = [
+        kops.build_ell(
+            edges[i, :int(ec[i])], edge_w[i, :int(ec[i])],
+            np.pad(diag_w[i], (0, n_pad)), n,
+            edge_w_rev=None if edge_w_rev is None
+            else edge_w_rev[i, :int(ec[i])])
+        for i in range(g)
+    ]
+    d_max = kops._round_up(max(e_[0].shape[1] for e_ in ells), bd)
+
+    def padd(a):
+        return np.pad(a, ((0, 0), (0, d_max - a.shape[1])))
+
+    wpack = (
+        np.stack([padd(e_[0]) for e_ in ells]),   # nbr  (G, N, D)
+        np.stack([padd(e_[1]) for e_ in ells]),   # wgt  (G, N, D)
+        np.stack([padd(e_[2]) for e_ in ells]),   # wrev (G, N, D)
+        np.stack([padd(e_[3]) for e_ in ells]),   # slot (G, N, D)
+        np.stack([e_[4] for e_ in ells]),         # diag (G, N, 1)
+    )
+    if bits is not None:
+        e_b = bits.shape[2]
+        bits = np.pad(
+            bits,
+            ((0, 0), (0, 0),
+             (0, kops._round_up(max(e_b, 1), 128) - e_b)))
+    return x0, wpack, tiles, bits, n, f
+
+
+def _prep_jax_sparse(edges, edge_w, diag_w, edge_w_rev):
+    """Directed-arrays pack for the sparse jax layout.
+
+    Every canonical undirected edge becomes two directed slots (both
+    orientations); the eid row maps a directed slot back to its undirected
+    RoundMasks bits column. Padded edge slots carry weight 0, so their
+    indices are inert.
+    """
+    g = edges.shape[0]
+    e_und = edges.shape[1]
+    return (
+        np.concatenate([edges[:, :, 0], edges[:, :, 1]], axis=1),
+        np.concatenate([edges[:, :, 1], edges[:, :, 0]], axis=1),
+        np.concatenate(
+            [edge_w, edge_w if edge_w_rev is None else edge_w_rev],
+            axis=1),
+        np.ascontiguousarray(np.broadcast_to(
+            np.concatenate([np.arange(e_und, dtype=np.int32)] * 2)[None],
+            (g, 2 * e_und))),
+        diag_w,
+    )
 
 
 def run_batch(
@@ -350,6 +482,7 @@ def run_batch(
     edge_w_rev=None,
     trial_chunk: int | None = None,
     return_taps: bool = False,
+    debug_checks: bool = False,
 ):
     """Evaluate ``num_iters`` rounds over a stacked (G, N, N) ensemble.
 
@@ -404,6 +537,15 @@ def run_batch(
         auxiliary carry slots (``num_aux`` — estimator probes, running
         spectral estimates) are internal state and invariant-exempt by
         contract.
+      debug_checks: opt-in runtime twin of the static analysis pass
+        (``repro.analysis``): threads ``jax.experimental.checkify`` guards
+        through the scan — an isfinite assertion on every round output, and
+        a coefficient-mass (|a+b+c - 1| <= 1e-3) assertion at exactly the
+        prim sites whose coefficient streams are traced (data-dependent,
+        e.g. ``accel_adapt``'s adaptive stream — the cases the static pass
+        can only flag). Raises ``jax.experimental.checkify.JaxRuntimeError``
+        on the first violated guard. Costs one extra compilation and the
+        functionalized check overhead; leave off for production sweeps.
 
     Note on ``trial_chunk`` with aux-carrying algorithms: ``accel_adapt``
     pools its F trial columns as independent estimator probes (the Gelfand
@@ -435,6 +577,7 @@ def run_batch(
                 round_masks=round_masks, algos=algos, edges=edges,
                 edge_w=edge_w, diag_w=diag_w, edge_counts=edge_counts,
                 edge_w_rev=edge_w_rev, return_taps=return_taps,
+                debug_checks=debug_checks,
             )
             for s in range(0, f_total, trial_chunk)
         ]
@@ -502,49 +645,8 @@ def run_batch(
     tiles = None
     wpack = None
     if backend == "pallas" and sparse:
-        # Sparse pallas: build per-cell ELL arrays host-side ONCE (N already
-        # padded to the row tile so build_ell sizes them directly), pad the
-        # neighbor-slot axis to the common tile-rounded max degree, and pad
-        # the bits E axis to the kernel's 128-lane block. Padded slots have
-        # weight 0, padded bits columns are never gathered.
-        from repro.kernels import ops as kops
-
-        bm, bd, bf = kops.segment_tiles(n, f, g, tune=True)
-        bn, n_tot = kops.segment_bn(n, bm, bf)
-        tiles = (bm, bd, bf, bn)
-        n_pad = n_tot - n
-        f_pad = kops._round_up(f, bf) - f
-        if n_pad or f_pad:
-            x0 = np.pad(x0, ((0, 0), (0, n_pad), (0, f_pad)))
-        n, f = n + n_pad, f + f_pad
-        ec = np.full(g, edges.shape[1], dtype=np.int64) \
-            if edge_counts is None else np.asarray(edge_counts, dtype=np.int64)
-        ells = [
-            kops.build_ell(
-                edges[i, :int(ec[i])], edge_w[i, :int(ec[i])],
-                np.pad(diag_w[i], (0, n_pad)), n,
-                edge_w_rev=None if edge_w_rev is None
-                else edge_w_rev[i, :int(ec[i])])
-            for i in range(g)
-        ]
-        d_max = kops._round_up(max(e_[0].shape[1] for e_ in ells), bd)
-
-        def padd(a):
-            return np.pad(a, ((0, 0), (0, d_max - a.shape[1])))
-
-        wpack = (
-            np.stack([padd(e_[0]) for e_ in ells]),   # nbr  (G, N, D)
-            np.stack([padd(e_[1]) for e_ in ells]),   # wgt  (G, N, D)
-            np.stack([padd(e_[2]) for e_ in ells]),   # wrev (G, N, D)
-            np.stack([padd(e_[3]) for e_ in ells]),   # slot (G, N, D)
-            np.stack([e_[4] for e_ in ells]),         # diag (G, N, 1)
-        )
-        if bits is not None:
-            e_b = bits.shape[2]
-            bits = np.pad(
-                bits,
-                ((0, 0), (0, 0),
-                 (0, kops._round_up(max(e_b, 1), 128) - e_b)))
+        x0, wpack, tiles, bits, n, f = _prep_pallas_sparse(
+            x0, edges, edge_w, diag_w, edge_counts, edge_w_rev, bits)
     elif backend == "pallas":
         # pad N/F to the kernel's tile multiples ONCE, outside the scan; the
         # node mask (below) keeps padded rows out of the MSE, padded trial
@@ -552,33 +654,9 @@ def run_batch(
         # (padding a 20-node graph to 128 would be a ~40x flop tax there).
         # The tiles chosen here are threaded into _sweep_scan as static args
         # so padding and kernel blocking can never drift apart.
-        from repro.kernels import ops as kops
-
-        tiles = kops.round_tiles(n, f, g, tune=True)
-        bm, bk, bf = tiles
-        n_pad = kops._round_up(n, max(bm, bk)) - n
-        f_pad = kops._round_up(f, bf) - f
-        if n_pad or f_pad:
-            ws = np.pad(ws, ((0, 0), (0, n_pad), (0, n_pad)))
-            x0 = np.pad(x0, ((0, 0), (0, n_pad), (0, f_pad)))
-            n, f = n + n_pad, f + f_pad
+        ws, x0, tiles, n, f = _prep_pallas_dense(ws, x0)
     elif sparse:
-        # Sparse jax: directed-arrays form. Every canonical undirected edge
-        # becomes two directed slots (both orientations); ``eid`` maps a
-        # directed slot back to its undirected RoundMasks bits column.
-        # Padded edge slots carry weight 0, so their indices are inert.
-        e_und = edges.shape[1]
-        wpack = (
-            np.concatenate([edges[:, :, 0], edges[:, :, 1]], axis=1),
-            np.concatenate([edges[:, :, 1], edges[:, :, 0]], axis=1),
-            np.concatenate(
-                [edge_w, edge_w if edge_w_rev is None else edge_w_rev],
-                axis=1),
-            np.ascontiguousarray(np.broadcast_to(
-                np.concatenate([np.arange(e_und, dtype=np.int32)] * 2)[None],
-                (g, 2 * e_und))),
-            diag_w,
-        )
+        wpack = _prep_jax_sparse(edges, edge_w, diag_w, edge_w_rev)
 
     mask = (np.arange(n)[None, :] < node_counts[:, None]).astype(np.float32)
     inv_n = (1.0 / node_counts).astype(np.float32)
@@ -635,12 +713,34 @@ def run_batch(
     from repro.core.algorithms import registry_generation
 
     ws_in = tuple(arrays[:nw]) if sparse else arrays[0]
-    x_fin, mse, carry_fin = _sweep_scan(
-        ws_in, *arrays[nw:], num_iters=num_iters,
-        use_kernels=(backend == "pallas"),
-        tiles=tiles, bits=bits, eidx=eidx, layout=tuple(algos),
-        algo_gen=registry_generation(), sparse=sparse,
-    )
+    if debug_checks:
+        # checkify must functionalize the user checks BEFORE jit: wrap the
+        # raw scan (statics closed over) and throw on the first violated
+        # guard. This bypasses _sweep_scan's jit cache on purpose — the
+        # debug program is a different computation (error-state carrying).
+        from jax.experimental import checkify
+
+        from repro.analysis.coefficient import traced_coef_sites
+
+        fn = functools.partial(
+            _sweep_scan.__wrapped__, num_iters=num_iters,
+            use_kernels=(backend == "pallas"), tiles=tiles, bits=bits,
+            eidx=eidx, layout=tuple(algos),
+            algo_gen=registry_generation(), sparse=sparse,
+            debug_checks=True,
+            dbg_sites=tuple(tuple(sorted(traced_coef_sites(name)))
+                            for name, _, _ in algos))
+        err, (x_fin, mse, carry_fin) = jax.jit(
+            checkify.checkify(fn, errors=checkify.user_checks)
+        )(ws_in, *arrays[nw:])
+        err.throw()
+    else:
+        x_fin, mse, carry_fin = _sweep_scan(
+            ws_in, *arrays[nw:], num_iters=num_iters,
+            use_kernels=(backend == "pallas"),
+            tiles=tiles, bits=bits, eidx=eidx, layout=tuple(algos),
+            algo_gen=registry_generation(), sparse=sparse,
+        )
     x_fin, mse = np.asarray(x_fin), np.asarray(mse)
     if g_pad:
         x_fin, mse = x_fin[:g], mse[:g]
@@ -723,6 +823,7 @@ def run_ensemble(
     round_masks: RoundMasks | None = None,
     trial_chunk: int | None = None,
     return_taps: bool = False,
+    debug_checks: bool = False,
 ) -> SweepResult:
     """Evaluate an already-built (possibly merged) grid in one program.
 
@@ -732,7 +833,9 @@ def run_ensemble(
     Sparse-layout ensembles (``ens.is_sparse``) route through the edge-space
     engine automatically; ``trial_chunk`` tiles the F axis for memory;
     ``return_taps`` populates ``SweepResult.taps`` with each partition's
-    final carry taps (the push-sum family's raw (value, mass) pair).
+    final carry taps (the push-sum family's raw (value, mass) pair);
+    ``debug_checks`` threads the checkify runtime guards through the scan
+    (see ``run_batch``).
     """
     out = run_batch(
         ens.ws, ens.x0, ens.coefs, ens.node_counts,
@@ -741,6 +844,7 @@ def run_ensemble(
         edges=ens.edges, edge_w=ens.edge_w, diag_w=ens.diag_w,
         edge_counts=ens.edge_counts, edge_w_rev=ens.edge_w_rev,
         trial_chunk=trial_chunk, return_taps=return_taps,
+        debug_checks=debug_checks,
     )
     x_fin, mse = out[0], out[1]
     taps = out[2] if return_taps else None
@@ -754,6 +858,7 @@ def run_sweep(
     backend: str = "jax",
     mesh=None,
     trial_chunk: int | None = None,
+    debug_checks: bool = False,
 ) -> SweepResult:
     """Build the grid of ``spec`` and evaluate it in one jitted program.
 
@@ -774,4 +879,5 @@ def run_sweep(
     return run_ensemble(
         ens, num_iters=num_iters, backend=backend, mesh=mesh,
         round_masks=masks, trial_chunk=trial_chunk,
+        debug_checks=debug_checks,
     )

@@ -381,10 +381,10 @@ def test_pallas_sweep_partitions_over_g_on_4_devices():
             )
             ens = build_ensemble(spec)
             masks = build_round_masks(ens, 30, seed=7)
-            before = ops.cp_partition_count()
-            r_p = run_ensemble(ens, num_iters=30, backend="pallas",
-                               round_masks=masks)
-            fired = ops.cp_partition_count() - before
+            with ops.cp_partition_calls() as fired_in_scope:
+                r_p = run_ensemble(ens, num_iters=30, backend="pallas",
+                                   round_masks=masks)
+                fired = fired_in_scope()
             assert fired > 0, (layout, fired)  # GSPMD used our partition rule
             r_j = run_ensemble(ens, num_iters=30, backend="jax",
                                round_masks=masks)
